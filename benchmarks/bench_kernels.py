@@ -1,0 +1,74 @@
+"""Kernel-level benchmarks: packed-popcount vs naive dense distance math.
+
+The Pallas kernels target TPU (validated in interpret mode by tests); what
+can be MEASURED on this CPU container is the algorithmic win the packing
+gives at the XLA level: a d-bit sketch distance costs d/32 int32 ops instead
+of d byte ops, and Cham's all-pairs pass beats the full-dimension exact pass
+by the paper's n/d factor.  TPU roofline numbers for the same ops come from
+the dry-run (EXPERIMENTS.md section Roofline).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import dataset, emit, timeit
+from repro.core import CabinParams
+from repro.core.cabin import sketch_dense
+from repro.core.cham import cham_matrix, hamming_matrix_exact
+from repro.core.packing import pack_bits, unpack_bits
+
+
+def kernel_packed_vs_unpacked(n_rows=512, d=1024):
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, size=(n_rows, d)).astype(np.int32)
+    packed = pack_bits(jnp.asarray(bits))
+    dense = jnp.asarray(bits)
+
+    pair_packed = jax.jit(hamming_matrix_exact)
+    pair_dense = jax.jit(
+        lambda a: jnp.sum(a[:, None, :] != a[None, :, :], axis=-1))
+
+    t_packed, _ = timeit(lambda: pair_packed(packed, packed), repeat=3)
+    t_dense, _ = timeit(lambda: pair_dense(dense), repeat=3)
+    emit("kernel.allpairs_packed", t_packed * 1e6 / n_rows**2, f"d={d}")
+    emit("kernel.allpairs_dense", t_dense * 1e6 / n_rows**2, f"d={d}")
+    emit("kernel.packing_speedup", t_packed * 1e6 / n_rows**2,
+         f"{t_dense / t_packed:.2f}x")
+    # byte footprint: 32x smaller sketches
+    emit("kernel.bytes_ratio", 0.0,
+         f"{dense.nbytes / packed.nbytes:.1f}x")
+    return {"speedup": t_dense / t_packed}
+
+
+def kernel_cham_vs_exact_fulldim(scale=0.008, n_rows=192, d=1024):
+    """The 136x-heatmap-speedup analogue at CPU scale."""
+    spec, x, _ = dataset("braincell", scale, n_rows, seed=1)
+    cp = CabinParams.create(spec.n_dims, d, seed=0)
+    xj = jnp.asarray(x)
+    sk = sketch_dense(cp, xj)
+
+    exact = jax.jit(lambda a: jnp.sum(a[:, None, :] != a[None, :, :], axis=-1))
+    est = jax.jit(lambda s: cham_matrix(s, s, d))
+    t_exact, _ = timeit(lambda: exact(xj), repeat=1)
+    t_est, _ = timeit(lambda: est(sk), repeat=3)
+    emit("kernel.cham_matrix", t_est * 1e6 / n_rows**2, f"d={d}")
+    emit("kernel.exact_fulldim", t_exact * 1e6 / n_rows**2,
+         f"n={spec.n_dims}")
+    emit("kernel.cham_speedup", t_est * 1e6 / n_rows**2,
+         f"{t_exact / t_est:.1f}x")
+    return {"speedup": t_exact / t_est}
+
+
+def kernel_sketch_throughput(scale=0.05, n_rows=512, d=1024):
+    spec, x, _ = dataset("pubmed", scale, n_rows, seed=2)
+    cp = CabinParams.create(spec.n_dims, d, seed=0)
+    from repro.core.cabin import sketch_dense_jit
+
+    xj = jnp.asarray(x)
+    t, _ = timeit(lambda: sketch_dense_jit(cp, xj), repeat=3)
+    emit("kernel.cabin_sketch", t * 1e6 / n_rows,
+         f"n={spec.n_dims};d={d}")
+    return {"us_per_row": t * 1e6 / n_rows}

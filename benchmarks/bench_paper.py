@@ -1,0 +1,254 @@
+"""Paper-figure benchmarks: one function per table/figure of the paper.
+
+Each function prints ``name,us_per_call,derived`` rows (common.emit) and
+returns a dict of headline numbers that EXPERIMENTS.md cites.  Dataset twins
+are scaled (DESIGN.md section 7) so the whole suite runs in minutes on one
+CPU core; the paper's qualitative claims (orderings, trends) are asserted,
+not eyeballed.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import (dataset, emit, exact_hd_matrix, mae,
+                               make_methods, rmse, timeit)
+from repro.core import CabinParams
+from repro.core.cabin import binem, sketch_dense
+from repro.core.cham import cham_matrix
+from repro.core.kmode import kmode
+from repro.core.metrics import ari, nmi, purity
+from repro.core.theory import sketch_dim, theorem2_bound
+
+
+# ---------------------------------------------------------------------------
+# Figure 2 + Table 3: dimensionality-reduction speed / speedups
+# ---------------------------------------------------------------------------
+
+
+def fig2_table3_reduction_speed(scale=0.08, n_rows=256):
+    """Sketching-phase speed, all methods jitted (steady-state timing after
+    a warmup call, matching the paper's repeated-use deployment)."""
+    import jax
+
+    from benchmarks.common import BaselineParams
+    from repro.core import baselines as B
+    from repro.core.cabin import sketch_dense
+
+    results = {}
+    spec, x, _ = dataset("enron", scale, n_rows)
+    d = 512
+    cp = CabinParams.create(spec.n_dims, d, seed=0)
+    bp = BaselineParams(spec.n_dims, d, 0)
+    xj = jnp.asarray(x)
+
+    sketchers = {
+        "cabin": jax.jit(lambda v: sketch_dense(cp, v)),
+        "bcs": jax.jit(lambda v: B.bcs_sketch(bp, binem(cp, v))),
+        "hlsh": jax.jit(lambda v: B.hlsh_sketch(bp, binem(cp, v))),
+        "fh": jax.jit(lambda v: B.fh_sketch(bp, binem(cp, v))),
+        "sh": jax.jit(lambda v: B.simhash_sketch(bp, binem(cp, v))),
+    }
+    times = {}
+    for name, fn in sketchers.items():
+        jax.block_until_ready(fn(xj))  # warmup/compile
+        sec, _ = timeit(lambda fn=fn: jax.block_until_ready(fn(xj)), repeat=3)
+        times[name] = sec
+        emit(f"fig2.reduce.{name}", sec * 1e6 / n_rows,
+             f"d={d};n={spec.n_dims}")
+    for name in ("bcs", "hlsh", "fh", "sh"):
+        speedup = times[name] / times["cabin"]
+        emit(f"table3.speedup_vs_{name}", times["cabin"] * 1e6,
+             f"{speedup:.2f}x")
+        results[f"speedup_{name}"] = speedup
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Figure 3: RMSE vs embedding dimension
+# ---------------------------------------------------------------------------
+
+
+def fig3_rmse(scale=0.06, n_rows=192, dims=(128, 256, 512, 1024)):
+    results = {}
+    for ds in ("kos", "enron"):
+        spec, x, _ = dataset(ds, scale, n_rows, seed=1)
+        true = exact_hd_matrix(x)
+        for d in dims:
+            methods = make_methods(spec.n_dims, d, seed=2)
+            for name, fn in methods.items():
+                sec, est = timeit(fn, x, repeat=1)
+                r = rmse(est, true)
+                emit(f"fig3.rmse.{ds}.{name}.d{d}", sec * 1e6, f"{r:.2f}")
+                results[(ds, name, d)] = r
+        # paper claim: Cabin's RMSE is lowest (or within noise of lowest)
+        # at moderate dims and decreases with d
+        best = min(results[(ds, m, dims[-1])] for m in
+                   ("bcs", "hlsh", "fh", "sh"))
+        assert results[(ds, "cabin", dims[-1])] <= best * 1.25, \
+            f"cabin not competitive on {ds}"
+        assert results[(ds, "cabin", dims[-1])] < results[(ds, "cabin", dims[0])]
+    return {f"{k[0]}.{k[1]}.d{k[2]}": v for k, v in results.items()}
+
+
+# ---------------------------------------------------------------------------
+# Figure 4: BinEm variance analysis
+# ---------------------------------------------------------------------------
+
+
+def fig4_binem_variance(scale=0.06, trials=200):
+    spec, x, _ = dataset("nips", scale, 2, seed=3)
+    hd = int((x[0] != x[1]).sum())
+    errors = []
+    t0 = time.perf_counter()
+    for t in range(trials):
+        p = CabinParams.create(spec.n_dims, 256, seed=t)
+        u = np.asarray(binem(p, jnp.asarray(x)))
+        errors.append(hd - 2 * int((u[0] != u[1]).sum()))
+    sec = (time.perf_counter() - t0) / trials
+    errors = np.asarray(errors)
+    q = np.percentile(errors, [25, 50, 75])
+    emit("fig4.binem_err.median", sec * 1e6, f"{q[1]:.1f}")
+    emit("fig4.binem_err.iqr", sec * 1e6, f"[{q[0]:.1f},{q[2]:.1f}]")
+    # claim: unbiased (2*HD(u',v') centred on HD(u,v)) and concentrated
+    assert abs(errors.mean()) < 4 * errors.std() / np.sqrt(trials) + 2
+    assert errors.std() < 2 * np.sqrt(hd) + 2
+    return {"mean": float(errors.mean()), "std": float(errors.std()),
+            "hd": hd}
+
+
+# ---------------------------------------------------------------------------
+# Figure 5: step-2 (BinSketch vs alternatives) variance on one pair
+# ---------------------------------------------------------------------------
+
+
+def fig5_step2_variance(scale=0.06, trials=64, d=512):
+    spec, x, _ = dataset("enron", scale, 2, seed=4)
+    true = int((x[0] != x[1]).sum())
+    errs: dict[str, list] = {m: [] for m in ("cabin", "bcs", "hlsh", "fh", "sh")}
+    for t in range(trials):
+        # jit=False: each trial reseeds the hash maps -> fresh compile
+        # otherwise; eager is faster at 2-row scale
+        methods = make_methods(spec.n_dims, d, seed=100 + t, jit=False)
+        for name, fn in methods.items():
+            est = fn(x)
+            errs[name].append(float(est[0, 1]) - true)
+    out = {}
+    for name, e in errs.items():
+        e = np.asarray(e)
+        emit(f"fig5.err_mean.{name}", 0.0, f"{e.mean():.2f}")
+        emit(f"fig5.err_std.{name}", 0.0, f"{e.std():.2f}")
+        out[name] = (float(e.mean()), float(e.std()))
+    # claim: BinSketch-based Cabin estimator is ~unbiased with lowest-group
+    # variance among discrete alternatives
+    assert abs(out["cabin"][0]) <= max(8.0, abs(out["sh"][0]))
+    assert out["cabin"][1] <= 2.0 * min(v[1] for k, v in out.items()
+                                        if k != "cabin")
+    return {k: {"mean": v[0], "std": v[1]} for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Figures 6-9 + 10: clustering quality + speedup
+# ---------------------------------------------------------------------------
+
+
+def fig6to10_clustering(scale=0.05, n_rows=180, k=4, dims=(256, 512)):
+    """Clustering quality of sketch-space k-mode vs the full-data ground
+    truth, for Cabin AND the discrete baselines (the paper's claim is
+    RELATIVE: Cabin is among the top approaches at moderate dims)."""
+    from repro.core.baselines import (BaselineParams, bcs_sketch, hlsh_sketch)
+    from repro.core.packing import unpack_bits
+
+    spec, x, _ = dataset("nytimes", scale, n_rows, seed=5, clusters=k)
+    t_full, (truth, _) = timeit(
+        lambda: kmode(x, k, seed=0, n_categories=spec.n_categories), repeat=1)
+    emit("fig10.kmode_full", t_full * 1e6, f"n={spec.n_dims}")
+    out = {}
+    for d in dims:
+        cp = CabinParams.create(spec.n_dims, d, seed=6)
+        bp = BaselineParams(spec.n_dims, d, 6)
+        u_bits = binem(cp, jnp.asarray(x))
+        reprs = {
+            "cabin": np.asarray(unpack_bits(sketch_dense(cp, jnp.asarray(x)), d)),
+            "bcs": np.asarray(bcs_sketch(bp, u_bits)),
+            "hlsh": np.asarray(hlsh_sketch(bp, u_bits)),
+        }
+        scores_d = {}
+        for name, bits in reprs.items():
+            t_sk, (pred, _) = timeit(
+                lambda b=bits: kmode(b, k, seed=0, n_categories=1), repeat=1)
+            scores = {"purity": purity(truth, pred), "nmi": nmi(truth, pred),
+                      "ari": ari(truth, pred)}
+            emit(f"fig6.purity.{name}.d{d}", t_sk * 1e6,
+                 f"{scores['purity']:.3f}")
+            emit(f"fig7.nmi.{name}.d{d}", t_sk * 1e6, f"{scores['nmi']:.3f}")
+            emit(f"fig8.ari.{name}.d{d}", t_sk * 1e6, f"{scores['ari']:.3f}")
+            if name == "cabin":
+                emit(f"fig10.kmode_speedup.d{d}", t_sk * 1e6,
+                     f"{t_full / t_sk:.2f}x")
+            scores_d[name] = scores
+        out[d] = scores_d
+    # paper claims: (i) sketch clustering is meaningful (NMI well above
+    # chance), (ii) Cabin is among the top approaches at the larger dim.
+    top = out[max(dims)]
+    assert top["cabin"]["nmi"] > 0.6, top
+    best_base = max(top[m]["purity"] for m in ("bcs", "hlsh"))
+    assert top["cabin"]["purity"] >= best_base - 0.05, top
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table 4 + Figures 11/12: all-pairs heatmap MAE + speedup
+# ---------------------------------------------------------------------------
+
+
+def table4_heatmap(scale=0.02, n_rows=256, d=1024):
+    spec, x, _ = dataset("braincell", scale, n_rows, seed=7)
+    t_exact, true = timeit(lambda: exact_hd_matrix(x), repeat=1)
+    emit("fig11.heatmap_exact", t_exact * 1e6 / (n_rows**2),
+         f"n={spec.n_dims}")
+    maes = {}
+    times = {}
+    for name, fn in make_methods(spec.n_dims, d, seed=8).items():
+        sec, est = timeit(fn, x, repeat=1)
+        maes[name] = mae(est, true)
+        times[name] = sec
+        emit(f"table4.mae.{name}", sec * 1e6 / (n_rows**2),
+             f"{maes[name]:.2f}")
+    emit("fig11.heatmap_speedup", times["cabin"] * 1e6 / (n_rows**2),
+         f"{t_exact / times['cabin']:.1f}x")
+    # paper claim: Cabin MAE is best (the paper's <1/10-of-baselines margin
+    # appears at the full 1.3M-dim regime; at CPU-budget scale the n/d ratio
+    # is ~25x instead of ~1300x, so FH-with-exact-norms closes the gap —
+    # we assert best-or-statistically-tied and report all MAEs).
+    others = min(v for k2, v in maes.items() if k2 != "cabin")
+    assert maes["cabin"] <= others * 1.1, maes
+    return {"mae": maes, "speedup": t_exact / times["cabin"]}
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2 empirical check (theory table)
+# ---------------------------------------------------------------------------
+
+
+def theorem2_check(scale=0.06, n_rows=96, delta=0.1):
+    spec, x, _ = dataset("kos", scale, n_rows, seed=9)
+    s = int((x != 0).sum(1).max())
+    d = sketch_dim(s, delta)
+    cp = CabinParams.create(spec.n_dims, d, seed=10)
+    sk = sketch_dense(cp, jnp.asarray(x))
+    est = np.asarray(cham_matrix(sk, sk, d))
+    true = exact_hd_matrix(x)
+    iu = np.triu_indices(n_rows, 1)
+    errors = np.abs(est - true)[iu]
+    bound = theorem2_bound(s, delta)
+    frac = float((errors <= bound).mean())
+    emit("thm2.frac_within_bound", 0.0, f"{frac:.4f}")
+    emit("thm2.mean_abs_err", 0.0, f"{errors.mean():.2f}")
+    emit("thm2.bound", 0.0, f"{bound:.2f}")
+    assert frac >= 1 - delta
+    return {"frac_within": frac, "bound": bound,
+            "mean_err": float(errors.mean()), "d": d, "s": s}

@@ -1,0 +1,134 @@
+"""Shared benchmark utilities: timing, dataset prep, method registry.
+
+Benchmarks reproduce the paper's tables/figures on synthetic twins of the
+Table-1 datasets (scaled for the 1-core CPU container; scaling keeps
+sparsity structure — see DESIGN.md section 7).  Output convention:
+``name,us_per_call,derived`` CSV rows via `emit`.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import CabinParams
+from repro.core.baselines import (BaselineParams, bcs_estimate, bcs_sketch,
+                                  fh_estimate, fh_sketch, hlsh_estimate,
+                                  hlsh_sketch, simhash_estimate,
+                                  simhash_sketch)
+from repro.core.cabin import binem, binsketch, sketch_dense
+from repro.core.cham import cham_matrix
+from repro.core.packing import pack_bits
+from repro.data.synthetic import TABLE1, sample_dense, scaled_spec
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn, *args, repeat: int = 3, **kwargs) -> tuple[float, object]:
+    """Returns (seconds_per_call, last_result); blocks jax arrays."""
+    out = None
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        out = jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+            or isinstance(out, jnp.ndarray) else out
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def dataset(name: str, scale: float, n_rows: int, seed: int = 0,
+            clusters: int = 0):
+    spec = scaled_spec(TABLE1[name], scale)
+    x, labels = sample_dense(spec, n_rows, seed=seed, cluster_centers=clusters)
+    return spec, x, labels
+
+
+def exact_hd_matrix(x: np.ndarray) -> np.ndarray:
+    n = x.shape[0]
+    out = np.empty((n, n), dtype=np.int32)
+    for i in range(0, n, 256):
+        out[i:i + 256] = (x[i:i + 256, None, :] != x[None, :, :]).sum(-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# method registry: name -> estimate_matrix_fn
+# every method consumes the categorical matrix and produces an (N, N)
+# estimated-HD matrix from its own sketches, exactly like the paper's RMSE
+# protocol: baselines run on the BinEm embedding (Table 2 note) and get the
+# SAME 2x Lemma-2 unbiasing that Cham applies (HD(u,v) = 2 E[HD(u',v')]),
+# so all methods estimate the ORIGINAL categorical Hamming distance.
+# All estimators are jitted so the speed comparison is apples-to-apples.
+# ---------------------------------------------------------------------------
+
+
+def make_methods(n_dims: int, d: int, seed: int = 0, jit: bool = True):
+    """jit=False keeps estimators eager — used by the variance benchmark
+    which re-seeds every trial (64 recompiles would dominate otherwise)."""
+    import jax as _jax
+
+    cp = CabinParams.create(n_dims, d, seed=seed)
+    bp = BaselineParams(n_dims, d, seed)
+    wrap = _jax.jit if jit else (lambda f: f)
+
+    _cabin = wrap(lambda xj: cham_matrix(sketch_dense(cp, xj),
+                                         sketch_dense(cp, xj), d))
+
+    def cabin(x):
+        return np.asarray(_cabin(jnp.asarray(x)))
+
+    def with_binem(fn):
+        jf = wrap(lambda xj: 2.0 * fn(binem(cp, xj)))
+
+        def inner(x):
+            return np.asarray(jf(jnp.asarray(x)))
+        return inner
+
+    def bcs(u):
+        y = bcs_sketch(bp, u)
+        return bcs_estimate(bp, y[:, None, :], y[None, :, :])
+
+    def hlsh(u):
+        y = hlsh_sketch(bp, u)
+        return hlsh_estimate(bp, y[:, None, :], y[None, :, :])
+
+    def fh(u):
+        y = fh_sketch(bp, u)
+        w = jnp.sum(u, axis=-1).astype(jnp.float32)
+        return fh_estimate(bp, y[:, None, :], y[None, :, :],
+                           w[:, None], w[None, :])
+
+    def sh(u):
+        y = simhash_sketch(bp, u)
+        w = jnp.sum(u, axis=-1).astype(jnp.float32)
+        return simhash_estimate(bp, y[:, None, :], y[None, :, :],
+                                w[:, None], w[None, :])
+
+    return {
+        "cabin": cabin,
+        "bcs": with_binem(bcs),
+        "hlsh": with_binem(hlsh),
+        "fh": with_binem(fh),
+        "sh": with_binem(sh),
+    }
+
+
+def rmse(est: np.ndarray, true: np.ndarray) -> float:
+    iu = np.triu_indices(true.shape[0], 1)
+    err = est[iu].astype(np.float64) - true[iu]
+    return float(np.sqrt((err**2).mean()))
+
+
+def mae(est: np.ndarray, true: np.ndarray) -> float:
+    iu = np.triu_indices(true.shape[0], 1)
+    return float(np.abs(est[iu].astype(np.float64) - true[iu]).mean())

@@ -1,0 +1,68 @@
+"""Benchmark driver: one function per paper table/figure + kernel/system
+benches.  Prints ``name,us_per_call,derived`` CSV; writes a JSON summary to
+experiments/bench_summary.json; appends the roofline table when dry-run
+records exist."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_dedup, bench_kernels, bench_paper
+
+    suites = [
+        ("fig2_table3", bench_paper.fig2_table3_reduction_speed),
+        ("fig3_rmse", bench_paper.fig3_rmse),
+        ("fig4_binem_variance", bench_paper.fig4_binem_variance),
+        ("fig5_step2_variance", bench_paper.fig5_step2_variance),
+        ("fig6to10_clustering", bench_paper.fig6to10_clustering),
+        ("table4_heatmap", bench_paper.table4_heatmap),
+        ("theorem2", bench_paper.theorem2_check),
+        ("kernel_packed", bench_kernels.kernel_packed_vs_unpacked),
+        ("kernel_cham", bench_kernels.kernel_cham_vs_exact_fulldim),
+        ("kernel_sketch", bench_kernels.kernel_sketch_throughput),
+        ("dedup", bench_dedup.dedup_sketch_vs_exact),
+    ]
+    print("name,us_per_call,derived")
+    summary = {}
+    failures = []
+    for name, fn in suites:
+        t0 = time.perf_counter()
+        try:
+            summary[name] = fn()
+        except Exception as e:  # keep the suite running; report at the end
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+        print(f"# suite {name} done in {time.perf_counter() - t0:.1f}s",
+              flush=True)
+
+    # roofline summary from dry-run records, if present
+    dr_dir = os.path.join("experiments", "dryrun")
+    if os.path.isdir(dr_dir):
+        from repro.launch.roofline import load_records
+
+        recs = [r for r in load_records(dr_dir) if r.get("status") == "ok"]
+        for r in recs:
+            roof = r.get("roofline", {})
+            print(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']},0.0,"
+                  f"dom={roof.get('dominant')};"
+                  f"c={roof.get('compute_s', 0):.3g}s;"
+                  f"m={roof.get('memory_s', 0):.3g}s;"
+                  f"n={roof.get('collective_s', 0):.3g}s")
+        summary["dryrun_cells_ok"] = len(recs)
+
+    os.makedirs("experiments", exist_ok=True)
+    with open(os.path.join("experiments", "bench_summary.json"), "w") as f:
+        json.dump(summary, f, indent=1, default=str)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("# all benchmark suites passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Corpus dedup with Cabin sketches vs exact Hamming — the paper's technique
+deployed in the LM data pipeline.
+
+    PYTHONPATH=src python examples/corpus_dedup.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.data.dedup import (dedup_by_sketch, dedup_exact,
+                              docs_to_categorical, sketch_corpus)
+from repro.data.pipeline import synthetic_documents
+
+
+def main() -> None:
+    vocab, n_docs = 65536, 400
+    gen = synthetic_documents(vocab, seed=5, dup_fraction=0.3)
+    docs = [next(gen) for _ in range(n_docs)]
+    idx, val = docs_to_categorical(docs, vocab)
+    print(f"{n_docs} documents over a {vocab}-token vocab "
+          f"(~30% near-duplicates injected)")
+
+    t0 = time.perf_counter()
+    _, sk = sketch_corpus(idx, val, vocab, sketch_dim=1024, seed=0)
+    res = dedup_by_sketch(sk, 1024, threshold=40.0)
+    t_sketch = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ref = dedup_exact(idx, val, vocab, threshold=40.0)
+    t_exact = time.perf_counter() - t0
+
+    agree = float((res.keep_mask == ref.keep_mask).mean())
+    print(f"sketch dedup : {res.n_removed} removed in {t_sketch:.2f}s "
+          f"(32-bit-packed 1024-bit sketches)")
+    print(f"exact dedup  : {ref.n_removed} removed in {t_exact:.2f}s "
+          f"(full {vocab}-dim count vectors)")
+    print(f"agreement    : {agree:.1%}   speedup: {t_exact/t_sketch:.1f}x")
+    assert agree > 0.95
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Config package: base dataclasses + one module per assigned arch."""

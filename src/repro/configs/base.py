@@ -1,0 +1,202 @@
+"""Config system: frozen dataclasses describing model architecture, shapes,
+parallelism and training hyperparameters.
+
+Every assigned architecture file in repro/configs/<id>.py builds a
+ModelConfig via these dataclasses; launchers consume them via
+repro.configs.registry.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Literal
+
+Mixer = Literal["attn", "mla", "mamba", "mlstm", "slstm"]
+MlpKind = Literal["dense", "moe", "none"]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: Mixer = "attn"
+    mlp: MlpKind = "dense"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0  # deepseek-v3 shared expert(s)
+    capacity_factor: float = 1.25
+    group_size: int = 4096  # tokens per dispatch group (memory knob)
+    router_aux_weight: float = 0.01
+    # dtype of the one-hot dispatch/combine tensors: f32 baseline; bf16
+    # halves the dominant all-to-all traffic (see EXPERIMENTS.md section Perf)
+    dispatch_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek multi-head latent attention dims."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    # indices (mod pattern period) using sLSTM; the rest are mLSTM
+    slstm_every: int = 8  # one sLSTM block per this many layers
+    proj_factor: float = 2.0
+
+
+@dataclass(frozen=True)
+class Precision:
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    moment_dtype: str = "float32"
+    logits_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    layer_pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    first_k_dense: int = 0  # leading layers forced to dense MLP (dsv3)
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    mamba: MambaConfig | None = None
+    xlstm: XLSTMConfig | None = None
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False  # qwen2
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    kind: str = "decoder"  # decoder | encdec
+    n_encoder_layers: int = 0  # encdec only
+    frontend: str | None = None  # vision | audio | None (stub embeddings)
+    n_frontend_tokens: int = 0  # patches / audio frames provided by stub
+    max_seq_len: int = 131072
+    # paper-technique integration knobs
+    hashed_embedding: bool = False  # CabinEmbed hashed vocab embedding
+    hashed_embedding_buckets: int = 0
+    hashed_embedding_k: int = 2
+    precision: Precision = field(default_factory=Precision)
+    # sub-quadratic? (controls long_500k applicability)
+    subquadratic: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def layer_spec(self, i: int) -> LayerSpec:
+        if i < self.first_k_dense:
+            base = self.layer_pattern[i % len(self.layer_pattern)]
+            return replace(base, mlp="dense")
+        return self.layer_pattern[i % len(self.layer_pattern)]
+
+    def all_layers(self) -> tuple[LayerSpec, ...]:
+        return tuple(self.layer_spec(i) for i in range(self.n_layers))
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark cell: what gets lowered in the dry-run."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """Parallelism & memory knobs consumed by train/serve/launch."""
+
+    microbatches: int = 1  # gradient accumulation steps
+    remat: str = "block"  # none | block | full
+    sequence_parallel: bool = True  # shard residual seq over 'model'
+    zero3: bool = True  # shard params/moments over 'data'
+    grad_compress_pods: bool = False  # EF-sign cross-pod compression
+    kv_cache_dtype: str = "bfloat16"  # or int8
+    attention_impl: str | None = None  # None=auto, pallas|chunked|ref
+    moe_group_size: int = 4096
+    # Unroll layer scans into straight-line HLO.  Used by the dry-run's cost
+    # pass: XLA's HloCostAnalysis counts while-loop bodies ONCE regardless of
+    # trip count, so flops/bytes/collectives of scanned stacks are measured
+    # on unrolled reduced-depth twins and extrapolated (launch/dryrun.py).
+    unroll_scan: bool = False
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    z_loss: float = 1e-4
+    seed: int = 0
+
+
+def reduced_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests (per spec f)."""
+    pattern_period = len(cfg.layer_pattern)
+    n_layers = max(pattern_period, min(cfg.n_layers, 2 * pattern_period))
+    moe = None
+    if cfg.moe is not None:
+        moe = replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=64,
+            group_size=128,
+        )
+    mla = None
+    if cfg.mla is not None:
+        mla = MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                        qk_rope_dim=8, v_dim=16)
+    return replace(
+        cfg,
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=512,
+        moe=moe,
+        mla=mla,
+        first_k_dense=min(cfg.first_k_dense, 1),
+        n_encoder_layers=min(cfg.n_encoder_layers, 2),
+        n_frontend_tokens=min(cfg.n_frontend_tokens, 8),
+        max_seq_len=512,
+        precision=Precision(param_dtype="float32", compute_dtype="float32"),
+    )

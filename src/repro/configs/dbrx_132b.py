@@ -1,0 +1,20 @@
+"""dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) d_ff=10752(expert)
+vocab=100352, 16 experts top-4 [hf:databricks/dbrx-base]."""
+
+from repro.configs.base import LayerSpec, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    head_dim=128,
+    layer_pattern=(LayerSpec(mixer="attn", mlp="moe"),),
+    moe=MoEConfig(num_experts=16, top_k=4, d_ff_expert=10752,
+                  capacity_factor=1.25),
+    rope_theta=500000.0,
+)

@@ -1,0 +1,32 @@
+"""deepseek-v3-671b [moe]: 61L d_model=7168 128H d_ff=2048(expert)
+vocab=129280, MLA, 1 shared + 256 routed experts top-8 [arXiv:2412.19437].
+
+The dense d_ff (first_k_dense layers + shared expert sizing) is 18432 per
+the paper; routed experts use d_ff_expert=2048 as assigned.
+"""
+
+from repro.configs.base import LayerSpec, MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,  # MLA: latent-shared, head count for q
+    d_ff=18432,      # dense layers (first 3)
+    vocab_size=129280,
+    head_dim=128,
+    layer_pattern=(LayerSpec(mixer="mla", mlp="moe"),),
+    first_k_dense=3,
+    moe=MoEConfig(
+        num_experts=256,
+        top_k=8,
+        d_ff_expert=2048,
+        num_shared_experts=1,
+        capacity_factor=1.25,
+    ),
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128,
+                  qk_rope_dim=64, v_dim=128),
+    rope_theta=10000.0,
+)

@@ -1,0 +1,34 @@
+"""jamba-v0.1-52b [hybrid]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336,
+MoE 16e top-2, Mamba:attn 7:1 interleave [arXiv:2403.19887].
+
+Period of 8 layers: attention at position 3 (jamba convention), Mamba
+elsewhere; MoE MLP every other layer (even offsets dense, odd MoE).
+"""
+
+from repro.configs.base import LayerSpec, MambaConfig, ModelConfig, MoEConfig
+
+_PERIOD = tuple(
+    LayerSpec(
+        mixer="attn" if i == 3 else "mamba",
+        mlp="moe" if i % 2 == 1 else "dense",
+    )
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    head_dim=128,
+    layer_pattern=_PERIOD,
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=14336,
+                  capacity_factor=1.25),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    rope_theta=10000.0,
+    subquadratic=True,  # mamba-dominant: long_500k applicable
+)

@@ -1,0 +1,21 @@
+"""phi-3-vision-4.2b [vlm]: 32L d_model=3072 32H (kv=32) d_ff=8192
+vocab=32064 — phi3-mini backbone + CLIP frontend (stub patch embeddings)
+[hf:microsoft/Phi-3-vision-128k-instruct]."""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    head_dim=96,
+    layer_pattern=(LayerSpec(mixer="attn", mlp="dense"),),
+    rope_theta=10000.0,
+    frontend="vision",
+    n_frontend_tokens=576,  # 24x24 CLIP patch grid (stub embeddings)
+)

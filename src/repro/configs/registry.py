@@ -1,0 +1,36 @@
+"""Architecture registry: --arch <id> -> ModelConfig."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCH_IDS = (
+    "phi_3_vision_4_2b",
+    "llama3_8b",
+    "deepseek_7b",
+    "qwen2_7b",
+    "internlm2_1_8b",
+    "deepseek_v3_671b",
+    "dbrx_132b",
+    "jamba_v0_1_52b",
+    "xlstm_350m",
+    "whisper_tiny",
+)
+
+# public --arch aliases (dashes as in the assignment sheet)
+ALIASES = {aid.replace("_", "-"): aid for aid in ARCH_IDS}
+ALIASES.update({aid: aid for aid in ARCH_IDS})
+
+
+def get_config(arch: str) -> ModelConfig:
+    key = arch.replace("-", "_").replace(".", "_")
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown arch '{arch}'; known: {sorted(ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {aid: get_config(aid) for aid in ARCH_IDS}

@@ -1,0 +1,24 @@
+"""whisper-tiny [audio]: 4L enc + 4L dec, d_model=384 6H d_ff=1536
+vocab=51865 — enc-dec, conv frontend stubbed as precomputed frame
+embeddings (B, 1500, 384) [arXiv:2212.04356]."""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    head_dim=64,
+    layer_pattern=(LayerSpec(mixer="attn", mlp="dense"),),
+    kind="encdec",
+    n_encoder_layers=4,
+    frontend="audio",
+    n_frontend_tokens=1500,  # 30 s of audio at 20 ms hop (stub)
+    tie_embeddings=True,
+    rope_theta=10000.0,
+)

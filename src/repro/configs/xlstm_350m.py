@@ -1,0 +1,26 @@
+"""xlstm-350m [ssm]: 24L d_model=1024 4H d_ff=0 vocab=50304 — sLSTM + mLSTM
+blocks [arXiv:2405.04517].  Period of 8: one sLSTM block per 8 (xLSTM[7:1]),
+no FFN (d_ff=0 per assignment -> mlp='none')."""
+
+from repro.configs.base import LayerSpec, ModelConfig, XLSTMConfig
+
+_PERIOD = tuple(
+    LayerSpec(mixer="slstm" if i == 7 else "mlstm", mlp="none")
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    head_dim=256,
+    layer_pattern=_PERIOD,
+    xlstm=XLSTMConfig(slstm_every=8),
+    tie_embeddings=True,
+    subquadratic=True,
+)

@@ -1,0 +1,39 @@
+"""Core library: the paper's contribution (Cabin + Cham) and its substrate.
+
+Public API:
+    CabinParams, sketch_dense, sketch_sparse, binem, binsketch   (cabin)
+    cham, cham_matrix, binhamming, inner/cosine/jaccard_estimate (cham)
+    sketch_dim, theorem2_bound                                   (theory)
+    pack_bits, unpack_bits, popcount_rows, packed_hamming        (packing)
+"""
+
+from repro.core.cabin import (  # noqa: F401
+    CabinParams,
+    binem,
+    binsketch,
+    sketch_dense,
+    sketch_dense_jit,
+    sketch_sparse,
+    sketch_sparse_jit,
+)
+from repro.core.cham import (  # noqa: F401
+    binhamming,
+    binhamming_from_stats,
+    cham,
+    cham_matrix,
+    cosine_estimate,
+    density_estimate,
+    hamming_matrix_exact,
+    inner_estimate,
+    jaccard_estimate,
+)
+from repro.core.packing import (  # noqa: F401
+    pack_bits,
+    packed_hamming,
+    packed_inner,
+    packed_width,
+    popcount32,
+    popcount_rows,
+    unpack_bits,
+)
+from repro.core.theory import sketch_dim, theorem2_bound  # noqa: F401

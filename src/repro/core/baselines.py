@@ -1,0 +1,145 @@
+"""Baseline sketching algorithms from the paper's experimental section.
+
+Each baseline compresses the BinEm binary embedding u' in {0,1}^n (the paper
+applies BCS and H-LSH "on a BinEm embedding"; FH/SimHash likewise operate on
+the binary representation) and provides a Hamming-distance estimator so all
+methods are scored on the same RMSE task (paper Fig. 3 / Fig. 5).
+
+  * BCS    — parity (XOR) aggregation per bucket [Pratap et al., BigData'18].
+             Estimator: each differing coordinate flips one random bucket's
+             parity, so E[HD(y_u,y_v)] = d(1-(1-2/d)^h)/2 and
+             h_hat = log(1 - 2 HD_s / d) / log(1 - 2/d).
+  * H-LSH  — coordinate sampling [Gionis-Indyk-Motwani'99 as implemented in
+             the paper]: sample d coords, h_hat = HD_sampled * n / d.
+  * FH     — feature hashing [Weinberger et al.'09]: y[j] = sum sigma(i) x_i
+             over bucket j; <y_u, y_v> is an unbiased estimator of <u',v'>;
+             h_hat = |u'| + |v'| - 2 <y_u, y_v> (densities stored as two
+             scalars per point, favouring the baseline — see DESIGN.md 7).
+  * SimHash— signed random projections [Charikar'02]: sign bits of hashed
+             Rademacher projections; collision fraction -> angle -> inner
+             product (with stored norms) -> Hamming.
+
+All baselines are stateless-hash based (same infrastructure as Cabin) so the
+speed comparison in benchmarks is apples-to-apples.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+_EPS = 1e-9
+
+
+@dataclass(frozen=True)
+class BaselineParams:
+    n_dims: int
+    sketch_dim: int
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# BCS: parity buckets
+# ---------------------------------------------------------------------------
+
+
+def bcs_sketch(p: BaselineParams, bits: jnp.ndarray) -> jnp.ndarray:
+    """(..., n) {0,1} -> (..., d) {0,1} parity sketch."""
+    n = bits.shape[-1]
+    buckets = hashing.pi_buckets(jnp.arange(n, dtype=jnp.uint32), p.sketch_dim,
+                                 p.seed + 101)
+    flat = bits.reshape(-1, n)
+    out = jnp.zeros((flat.shape[0], p.sketch_dim), dtype=jnp.int32)
+    out = out.at[:, buckets].add(flat.astype(jnp.int32), mode="drop")
+    return (out & 1).reshape(*bits.shape[:-1], p.sketch_dim)
+
+
+def bcs_estimate(p: BaselineParams, yu: jnp.ndarray, yv: jnp.ndarray) -> jnp.ndarray:
+    d = p.sketch_dim
+    hs = jnp.sum(yu != yv, axis=-1).astype(jnp.float32)
+    ratio = jnp.clip(1.0 - 2.0 * hs / d, _EPS, 1.0)
+    return jnp.log(ratio) / jnp.log1p(-2.0 / d)
+
+
+# ---------------------------------------------------------------------------
+# Hamming-LSH: coordinate sampling
+# ---------------------------------------------------------------------------
+
+
+def hlsh_indices(p: BaselineParams) -> jnp.ndarray:
+    """d sampled coordinates (with replacement, hash-derived)."""
+    j = jnp.arange(p.sketch_dim, dtype=jnp.uint32)
+    return (hashing.hash_u32(j, p.seed + 202) % jnp.uint32(p.n_dims)).astype(jnp.int32)
+
+
+def hlsh_sketch(p: BaselineParams, bits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(bits, hlsh_indices(p), axis=-1)
+
+
+def hlsh_estimate(p: BaselineParams, yu: jnp.ndarray, yv: jnp.ndarray) -> jnp.ndarray:
+    hs = jnp.sum(yu != yv, axis=-1).astype(jnp.float32)
+    return hs * (p.n_dims / p.sketch_dim)
+
+
+# ---------------------------------------------------------------------------
+# Feature hashing
+# ---------------------------------------------------------------------------
+
+
+def fh_sketch(p: BaselineParams, bits: jnp.ndarray) -> jnp.ndarray:
+    """(..., n) {0,1} -> (..., d) int32 signed-sum sketch."""
+    n = bits.shape[-1]
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    buckets = hashing.pi_buckets(idx, p.sketch_dim, p.seed + 303)
+    signs = jnp.where(hashing.hash_u32(idx, p.seed + 404) & jnp.uint32(1), 1, -1)
+    flat = bits.reshape(-1, n).astype(jnp.int32) * signs
+    out = jnp.zeros((flat.shape[0], p.sketch_dim), dtype=jnp.int32)
+    out = out.at[:, buckets].add(flat, mode="drop")
+    return out.reshape(*bits.shape[:-1], p.sketch_dim)
+
+
+def fh_estimate(
+    p: BaselineParams, yu: jnp.ndarray, yv: jnp.ndarray,
+    wu: jnp.ndarray, wv: jnp.ndarray,
+) -> jnp.ndarray:
+    inner = jnp.sum(yu * yv, axis=-1).astype(jnp.float32)
+    return wu + wv - 2.0 * inner
+
+
+# ---------------------------------------------------------------------------
+# SimHash
+# ---------------------------------------------------------------------------
+
+
+def simhash_sketch(p: BaselineParams, bits: jnp.ndarray) -> jnp.ndarray:
+    """d sign bits of Rademacher projections, computed in d-sized chunks.
+
+    Projection matrix entries are hash-derived on the fly: R[j, i] in {-1,+1}.
+    """
+    n = bits.shape[-1]
+    flat = bits.reshape(-1, n).astype(jnp.float32)
+
+    def one_plane(j):
+        r = hashing.rademacher(
+            jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(j) * jnp.uint32(n),
+            p.seed + 505,
+        )
+        return (flat @ r) >= 0.0
+
+    planes = jax.vmap(one_plane)(jnp.arange(p.sketch_dim, dtype=jnp.uint32))
+    out = jnp.transpose(planes).astype(jnp.int32)
+    return out.reshape(*bits.shape[:-1], p.sketch_dim)
+
+
+def simhash_estimate(
+    p: BaselineParams, yu: jnp.ndarray, yv: jnp.ndarray,
+    wu: jnp.ndarray, wv: jnp.ndarray,
+) -> jnp.ndarray:
+    frac = jnp.mean((yu != yv).astype(jnp.float32), axis=-1)
+    theta = jnp.pi * frac
+    inner = jnp.cos(theta) * jnp.sqrt(wu * wv)
+    return jnp.maximum(wu + wv - 2.0 * inner, 0.0)

@@ -1,0 +1,127 @@
+"""Cham: Hamming-distance estimation from Cabin sketches (Algorithm 2).
+
+Implements the BinSketch estimator the paper defers to ([33, Alg. 2]); the
+formula printed in the provided text is PDF-garbled (see DESIGN.md 1.1).
+
+Derivation, with d bins, D = 1 - 1/d, sketch weights wu = |u~|, wv = |v~| and
+sketch inner product st = <u~, v~>:
+
+  E[wu]           = d (1 - D^a)            a = |u'| (pre-sketch density)
+  E[wu + wv - st] = d (1 - D^(a+b-ip))     bins hit by the support UNION
+so
+  a_hat  = log(1 - wu/d) / log D
+  U_hat  = log(1 - (wu + wv - st)/d) / log D
+  ip_hat = a_hat + b_hat - U_hat
+  h_hat  = a_hat + b_hat - 2 ip_hat = 2 U_hat - a_hat - b_hat
+
+and Cham(u~, v~) = 2 h_hat (Lemma 2: HD(u,v) = 2 E[HD(u',v')]).
+
+Also provides the BinSketch bonus estimators (inner product / cosine /
+Jaccard on the pre-sketch binary vectors) and all-pairs matrix forms used by
+heatmap / clustering / dedup workloads.  The all-pairs packed popcount matmul
+has a Pallas TPU kernel twin in repro.kernels.hamming.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+
+_EPS = 1e-9
+
+
+def _safe_log1m(x: jnp.ndarray) -> jnp.ndarray:
+    """log(1 - x), clamped: saturated sketches (x -> 1) clip to a full bin."""
+    return jnp.log(jnp.clip(1.0 - x, _EPS, 1.0))
+
+
+def density_estimate(weight: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Estimate pre-sketch Hamming weight from sketch weight (BinSketch)."""
+    log_d = jnp.log1p(-1.0 / d)
+    return _safe_log1m(weight.astype(jnp.float32) / d) / log_d
+
+
+def binhamming_from_stats(
+    wu: jnp.ndarray, wv: jnp.ndarray, inner: jnp.ndarray, d: int
+) -> jnp.ndarray:
+    """h_hat = estimated HD(u', v') from sketch statistics (broadcasting)."""
+    log_d = jnp.log1p(-1.0 / d)
+    wu = wu.astype(jnp.float32)
+    wv = wv.astype(jnp.float32)
+    st = inner.astype(jnp.float32)
+    a_hat = _safe_log1m(wu / d) / log_d
+    b_hat = _safe_log1m(wv / d) / log_d
+    u_hat = _safe_log1m((wu + wv - st) / d) / log_d
+    return jnp.maximum(2.0 * u_hat - a_hat - b_hat, 0.0)
+
+
+def binhamming(u: jnp.ndarray, v: jnp.ndarray, d: int) -> jnp.ndarray:
+    """BinHamming on packed sketches (..., w) -> estimated HD(u', v')."""
+    wu = packing.popcount_rows(u)
+    wv = packing.popcount_rows(v)
+    inner = packing.packed_inner(u, v)
+    return binhamming_from_stats(wu, wv, inner, d)
+
+
+def cham(u: jnp.ndarray, v: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Cham(u~, v~) = 2 * BinHamming — estimates HD of the ORIGINAL vectors."""
+    return 2.0 * binhamming(u, v, d)
+
+
+def inner_estimate(u: jnp.ndarray, v: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Estimated <u', v'> (BinSketch Theorem 1 quantity)."""
+    wu = packing.popcount_rows(u)
+    wv = packing.popcount_rows(v)
+    st = packing.packed_inner(u, v)
+    log_d = jnp.log1p(-1.0 / d)
+    a_hat = _safe_log1m(wu.astype(jnp.float32) / d) / log_d
+    b_hat = _safe_log1m(wv.astype(jnp.float32) / d) / log_d
+    u_hat = _safe_log1m((wu + wv - st).astype(jnp.float32) / d) / log_d
+    return jnp.maximum(a_hat + b_hat - u_hat, 0.0)
+
+
+def cosine_estimate(u: jnp.ndarray, v: jnp.ndarray, d: int) -> jnp.ndarray:
+    wu = density_estimate(packing.popcount_rows(u), d)
+    wv = density_estimate(packing.popcount_rows(v), d)
+    ip = inner_estimate(u, v, d)
+    return ip / jnp.maximum(jnp.sqrt(wu * wv), _EPS)
+
+
+def jaccard_estimate(u: jnp.ndarray, v: jnp.ndarray, d: int) -> jnp.ndarray:
+    wu = density_estimate(packing.popcount_rows(u), d)
+    wv = density_estimate(packing.popcount_rows(v), d)
+    ip = inner_estimate(u, v, d)
+    return ip / jnp.maximum(wu + wv - ip, _EPS)
+
+
+# ---------------------------------------------------------------------------
+# All-pairs (matrix) forms — heatmaps, RMSE, k-mode, dedup.
+# ---------------------------------------------------------------------------
+
+
+def sketch_stats_matrix(
+    a: jnp.ndarray, b: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pairwise (wa, wb, inner) between packed rows a (N, w) and b (M, w).
+
+    jnp reference path: O(N*M*w) popcounts.  The Pallas kernel in
+    repro.kernels.hamming computes the same tiled in VMEM.
+    """
+    wa = packing.popcount_rows(a)
+    wb = packing.popcount_rows(b)
+    inner = jnp.sum(
+        packing.popcount32(a[:, None, :] & b[None, :, :]), axis=-1
+    )
+    return wa, wb, inner
+
+
+def cham_matrix(a: jnp.ndarray, b: jnp.ndarray, d: int) -> jnp.ndarray:
+    """All-pairs Cham estimates: (N, w), (M, w) packed -> (N, M) float32."""
+    wa, wb, inner = sketch_stats_matrix(a, b)
+    return 2.0 * binhamming_from_stats(wa[:, None], wb[None, :], inner, d)
+
+
+def hamming_matrix_exact(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Exact pairwise HD between packed BINARY rows (used on u'/full data)."""
+    return jnp.sum(packing.popcount32(a[:, None, :] ^ b[None, :, :]), axis=-1)

@@ -1,0 +1,83 @@
+"""Stateless integer hash functions used by Cabin / BinSketch / CabinEmbed.
+
+The paper uses "uniformly random mappings" psi and pi.  A production system
+cannot store a table of n random values for n ~ 1.3M features across hosts, so
+we use stateless mixing hashes keyed by a 32-bit seed: every host, restart, and
+shard derives identical mappings from the seed alone.  splitmix32-style
+finalizers are 2-universal-grade in practice and pass our uniformity tests.
+
+All functions are pure jnp on int32/uint32 and run unchanged inside Pallas
+kernel bodies (no gather, no tables).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Odd multiplicative constants (splitmix64 / murmur3 finalizer family,
+# truncated to 32 bits).  Kept as PYTHON ints and wrapped with jnp.uint32(...)
+# inside each traced function: module-level device arrays would be captured
+# as constants by Pallas kernel traces, which Pallas rejects.
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+_M3 = 0x9E3779B9  # golden-ratio increment
+
+
+def _as_u32(x) -> jnp.ndarray:
+    if isinstance(x, int):
+        return jnp.uint32(x & 0xFFFFFFFF)
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def mix32(x) -> jnp.ndarray:
+    """murmur3 fmix32: bijective avalanche mixer on uint32."""
+    x = _as_u32(x)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_M1)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(_M2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(x, seed) -> jnp.ndarray:
+    """Seeded hash of one uint32 stream."""
+    return mix32(_as_u32(x) + mix32(_as_u32(seed) * jnp.uint32(_M3)))
+
+
+def hash2_u32(x, y, seed) -> jnp.ndarray:
+    """Seeded hash of a pair (x, y) — used for psi(attribute, category)."""
+    hx = hash_u32(x, seed)
+    return mix32(hx ^ (_as_u32(y) * jnp.uint32(_M3) + (hx >> 7)))
+
+
+def psi_bits(attr_idx, categories, seed) -> jnp.ndarray:
+    """The paper's category mapping psi: (attribute i, category a) -> {0,1}.
+
+    psi(i, 0) = 0 by construction (missing features stay 0); for a != 0 the
+    bit is an independent fair coin per (i, a) pair, which is exactly what the
+    Lemma 2 independence argument needs (see DESIGN.md section 1.1).
+    """
+    bits = hash2_u32(attr_idx, categories, seed) & jnp.uint32(1)
+    return jnp.where(_as_u32(categories) == 0, jnp.uint32(0), bits).astype(jnp.int32)
+
+
+def pi_buckets(attr_idx, d: int, seed) -> jnp.ndarray:
+    """The paper's attribute mapping pi: {0..n-1} -> {0..d-1}.
+
+    Uses the high-entropy top bits via a 64-bit-free 'fast range' alternative:
+    (hash * d) >> 32 computed in uint64-free form is awkward on int32-only
+    Pallas, so we use modulo of the mixed hash; bias is <= d / 2^32 which is
+    negligible for d <= 2^20.
+    """
+    return (hash_u32(attr_idx, seed) % jnp.uint32(d)).astype(jnp.int32)
+
+
+def uniform01(x, seed) -> jnp.ndarray:
+    """Hash to a float in [0, 1) — used by baselines (e.g. SimHash planes)."""
+    return hash_u32(x, seed).astype(jnp.float32) * (1.0 / 4294967296.0)
+
+
+def rademacher(x, seed) -> jnp.ndarray:
+    """Hash to {-1, +1} float32."""
+    return jnp.where(hash_u32(x, seed) & jnp.uint32(1), 1.0, -1.0).astype(jnp.float32)

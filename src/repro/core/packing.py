@@ -1,0 +1,86 @@
+"""Bit-packing utilities: {0,1}^d vectors <-> packed int32 lanes.
+
+TPU-native representation of binary sketches: d bits live in ceil(d/32) int32
+words.  All downstream distance math (XOR/AND + popcount) operates on the
+packed form; these helpers are the jnp reference implementations that the
+Pallas kernels mirror.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+LANE_BITS = 32
+
+
+def packed_width(d: int) -> int:
+    return (d + LANE_BITS - 1) // LANE_BITS
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack (..., d) {0,1} int array into (..., ceil(d/32)) int32.
+
+    Bit j of the vector lands in word j // 32 at position j % 32 (LSB-first).
+    """
+    *lead, d = bits.shape
+    w = packed_width(d)
+    pad = w * LANE_BITS - d
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((*lead, pad), dtype=bits.dtype)], axis=-1
+        )
+    bits = bits.reshape(*lead, w, LANE_BITS).astype(jnp.uint32)
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    words = jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+    return words.astype(jnp.int32)
+
+
+def unpack_bits(words: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Inverse of pack_bits: (..., w) int32 -> (..., d) int32 in {0,1}."""
+    *lead, w = words.shape
+    shifts = jnp.arange(LANE_BITS, dtype=jnp.uint32)
+    bits = (words.astype(jnp.uint32)[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*lead, w * LANE_BITS)[..., :d].astype(jnp.int32)
+
+
+def popcount32(x: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount of each int32 word (returns int32 counts 0..32).
+
+    This is the exact bit-trick sequence the Pallas kernels use on the VPU —
+    TPUs expose no popcount primitive through XLA.
+    """
+    v = x.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def popcount_rows(words: jnp.ndarray) -> jnp.ndarray:
+    """Hamming weight of each packed row: (..., w) int32 -> (...,) int32."""
+    return jnp.sum(popcount32(words), axis=-1)
+
+
+def packed_hamming(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """HD between packed rows (broadcasting over leading dims)."""
+    return jnp.sum(popcount32(a ^ b), axis=-1)
+
+
+def packed_inner(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Bitwise inner product <a, b> between packed rows."""
+    return jnp.sum(popcount32(a & b), axis=-1)
+
+
+def np_pack_bits(bits: np.ndarray) -> np.ndarray:
+    """NumPy twin of pack_bits for host-side pipelines (dedup, tests)."""
+    *lead, d = bits.shape
+    w = packed_width(d)
+    pad = w * LANE_BITS - d
+    if pad:
+        bits = np.concatenate(
+            [bits, np.zeros((*lead, pad), dtype=bits.dtype)], axis=-1
+        )
+    bits = bits.reshape(*lead, w, LANE_BITS).astype(np.uint32)
+    shifts = np.arange(LANE_BITS, dtype=np.uint32)
+    return np.sum(bits << shifts, axis=-1, dtype=np.uint32).astype(np.int32)

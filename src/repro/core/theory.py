@@ -1,0 +1,36 @@
+"""Theoretical quantities from the paper: sketch dimension + error bounds."""
+
+from __future__ import annotations
+
+import math
+
+
+def sketch_dim(s: int, delta: float = 0.1) -> int:
+    """Paper's dimension choice d = s * sqrt(s/2 * ln(6/delta)).
+
+    s is an upper bound on the DENSITY (# non-missing features) of the data;
+    note d is independent of the original dimension n.
+    """
+    if s <= 0:
+        raise ValueError("density bound s must be positive")
+    return max(8, int(math.ceil(s * math.sqrt(s / 2.0 * math.log(6.0 / delta)))))
+
+
+def theorem2_bound(s: int, delta: float = 0.1) -> float:
+    """Theorem 2 additive error: |Cham - HD| <= 11 sqrt(s ln(7/delta)) w.p. 1-delta."""
+    return 11.0 * math.sqrt(s * math.log(7.0 / delta))
+
+
+def lemma1_tail(a: int, eps: float) -> float:
+    """Lemma 1(c): Pr[|a' - a/2| >= eps] <= exp(-2 eps^2 / a)."""
+    return math.exp(-2.0 * eps * eps / max(a, 1))
+
+
+def lemma2_tail(hd: int, eps: float) -> float:
+    """Lemma 2(b): Pr[|HD(u',v') - HD(u,v)/2| > eps] <= exp(-2 eps^2 / HD)."""
+    return math.exp(-2.0 * eps * eps / max(hd, 1))
+
+
+def theorem1_accuracy(s: int, delta: float = 0.1) -> float:
+    """BinSketch Thm 1 inner-product accuracy O(sqrt(s ln 1/delta))."""
+    return math.sqrt(s * math.log(1.0 / delta))

@@ -1,0 +1,1 @@
+"""Data substrate: synthetic categorical data, tokenizer, LM pipeline, dedup."""

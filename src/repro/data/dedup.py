@@ -1,0 +1,142 @@
+"""Corpus near-duplicate detection with Cabin sketches + Cham distances.
+
+This is the paper's technique deployed where a production training system
+needs it: documents are categorical vectors over the vocabulary (token counts
+capped at c categories — the paper treats BoW exactly this way), Cabin
+compresses each document to a packed d-bit sketch, and all-pairs Cham
+estimates replace exact Hamming distances in the dedup/diversity stage.
+
+Cost: exact dedup on V-dim count vectors is O(N^2 V); sketch dedup is
+O(N V) sketching + O(N^2 d/32) packed popcounts with d independent of V —
+the same asymptotics that give the paper its 136x heatmap speedup.
+
+Blocked scanning keeps the pairwise pass at O(block^2) memory; candidate
+pairs under `threshold` are unioned (union-find) and one representative per
+duplicate group is kept.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+import functools
+
+import jax
+
+from repro.core.cabin import CabinParams, sketch_sparse_jit
+from repro.core.cham import cham_matrix
+from repro.kernels.hamming.ops import cham_matrix_fast
+
+_cham_matrix_jit = jax.jit(cham_matrix, static_argnums=2)
+
+
+def docs_to_categorical(
+    docs: list[np.ndarray], vocab_size: int, max_count: int = 15
+) -> tuple[np.ndarray, np.ndarray]:
+    """Token-id docs -> padded-COO categorical rows (counts capped at c)."""
+    max_nnz = max((len(np.unique(d)) for d in docs if len(d)), default=1)
+    n = len(docs)
+    indices = np.zeros((n, max_nnz), dtype=np.int32)
+    values = np.zeros((n, max_nnz), dtype=np.int32)
+    for i, doc in enumerate(docs):
+        if len(doc) == 0:
+            continue
+        ids, counts = np.unique(doc, return_counts=True)
+        counts = np.minimum(counts, max_count)
+        indices[i, : len(ids)] = ids
+        values[i, : len(ids)] = counts
+    return indices, values
+
+
+class _UnionFind:
+    def __init__(self, n: int):
+        self.parent = list(range(n))
+
+    def find(self, a: int) -> int:
+        while self.parent[a] != a:
+            self.parent[a] = self.parent[self.parent[a]]
+            a = self.parent[a]
+        return a
+
+    def union(self, a: int, b: int) -> None:
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.parent[max(ra, rb)] = min(ra, rb)
+
+
+@dataclass
+class DedupResult:
+    keep_mask: np.ndarray  # (N,) bool — representatives to keep
+    group_ids: np.ndarray  # (N,) int — duplicate-group id per doc
+    n_groups: int
+    n_removed: int
+
+
+def sketch_corpus(
+    indices: np.ndarray, values: np.ndarray, vocab_size: int,
+    sketch_dim: int = 1024, seed: int = 0,
+) -> tuple[CabinParams, np.ndarray]:
+    params = CabinParams.create(vocab_size, sketch_dim, seed=seed)
+    sketches = np.asarray(
+        sketch_sparse_jit(params, jnp.asarray(indices), jnp.asarray(values))
+    )
+    return params, sketches
+
+
+def dedup_by_sketch(
+    sketches: np.ndarray,
+    sketch_dim: int,
+    threshold: float,
+    block: int = 1024,
+    use_kernel: bool = False,
+) -> DedupResult:
+    """Union docs whose estimated Hamming distance < threshold."""
+    n = sketches.shape[0]
+    uf = _UnionFind(n)
+    sk = jnp.asarray(sketches)
+    for i0 in range(0, n, block):
+        a = sk[i0 : i0 + block]
+        for j0 in range(i0, n, block):
+            b = sk[j0 : j0 + block]
+            if use_kernel:
+                d = np.asarray(cham_matrix_fast(a, b, sketch_dim,
+                                                use_pallas=False))
+            else:
+                d = np.asarray(_cham_matrix_jit(a, b, sketch_dim))
+            ii, jj = np.where(d < threshold)
+            for di, dj in zip(ii.tolist(), jj.tolist()):
+                gi, gj = i0 + di, j0 + dj
+                if gi < gj:
+                    uf.union(gi, gj)
+    roots = np.asarray([uf.find(i) for i in range(n)])
+    _, group_ids = np.unique(roots, return_inverse=True)
+    keep = roots == np.arange(n)
+    return DedupResult(
+        keep_mask=keep,
+        group_ids=group_ids,
+        n_groups=int(group_ids.max()) + 1 if n else 0,
+        n_removed=int((~keep).sum()),
+    )
+
+
+def dedup_exact(
+    indices: np.ndarray, values: np.ndarray, vocab_size: int, threshold: float,
+) -> DedupResult:
+    """Exact-HD dedup baseline (the expensive full-dimension path)."""
+    n = indices.shape[0]
+    uf = _UnionFind(n)
+    dense = np.zeros((n, vocab_size), dtype=np.int32)
+    rows = np.repeat(np.arange(n), indices.shape[1])
+    dense[rows, indices.ravel()] = values.ravel()
+    for i in range(n):
+        hd = (dense[i + 1 :] != dense[i]).sum(axis=1)
+        for j in np.where(hd < threshold)[0]:
+            uf.union(i, i + 1 + int(j))
+    roots = np.asarray([uf.find(i) for i in range(n)])
+    _, group_ids = np.unique(roots, return_inverse=True)
+    keep = roots == np.arange(n)
+    return DedupResult(keep, group_ids, int(group_ids.max()) + 1 if n else 0,
+                       int((~keep).sum()))

@@ -1,0 +1,2 @@
+"""cabin_build kernel package."""
+from repro.kernels.cabin_build import kernel, ops, ref  # noqa: F401

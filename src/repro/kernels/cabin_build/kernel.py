@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused Cabin sketch construction (BinEm + BinSketch).
+
+A GPU port of the paper's algorithm would scatter bits through global memory
+atomics.  TPUs have no scatter/atomics in the kernel programming model, so we
+re-derive the OR-aggregation as MXU work (DESIGN.md section 2):
+
+    out[i, t] = OR_j ( psi(j, x[i,j]) AND pi(j) == t )
+              = ( sum_j bits[i, j] * onehot[j, t] ) > 0
+
+i.e. a {0,1} matmul against an on-the-fly one-hot bucket matrix followed by a
+`> 0`.  Both psi (category mapping) and pi (attribute mapping) are evaluated
+INSIDE the kernel with the same stateless mixers as repro.core.hashing, so
+the kernel reads the raw categorical tile from HBM exactly once and never
+materialises the n-dimensional binary intermediate u'.
+
+Grid: (N/BM, d/BD, n/BK) with the contraction (k over attribute slabs)
+innermost; a (BM, BD) f32 collision-count accumulator lives in VMEM scratch
+and is packed to int32 words (BD/32 per block) on the last k step.
+
+Alignment contract: d % BD == 0 and BD % 128 == 0 (callers round the sketch
+dimension up to a multiple of 128 — the theory gives a MINIMUM d, so rounding
+up only tightens the estimate; ops.py falls back to the jnp reference path
+for unaligned d).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hashing
+
+
+def _cabin_kernel(x_ref, out_ref, acc_ref, *, psi_seed, pi_seed, d, bk, bd,
+                  n_total, k_steps):
+    i = pl.program_id(0)  # noqa: F841  (row block — implicit via BlockSpec)
+    dblk = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]  # (BM, BK) int32 categorical slab
+    j_global = (k * bk + jax.lax.broadcasted_iota(jnp.int32, (x.shape[1],), 0)
+                ).astype(jnp.uint32)
+    # Stage 1 (BinEm): psi(j, x) in {0,1}; padding columns (j >= n) carry
+    # x == 0 and thus bit == 0, contributing nothing.
+    bits = hashing.psi_bits(j_global[None, :], x, psi_seed)  # (BM, BK)
+    # Stage 2 (BinSketch): pi(j) buckets; restrict to this d-block.
+    buckets = hashing.pi_buckets(j_global, d, pi_seed)  # (BK,)
+    local = buckets - dblk * bd
+    t_iota = jax.lax.broadcasted_iota(jnp.int32, (x.shape[1], bd), 1)
+    onehot = (local[:, None] == t_iota).astype(jnp.float32)  # (BK, BD)
+    acc_ref[...] += jnp.dot(
+        bits.astype(jnp.float32), onehot, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _finalize():
+        hit = (acc_ref[...] > 0.0).astype(jnp.uint32)  # (BM, BD)
+        bm = hit.shape[0]
+        lanes = hit.reshape(bm, bd // 32, 32)
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+        out_ref[...] = jnp.sum(lanes << shifts, axis=-1, dtype=jnp.uint32
+                               ).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d", "psi_seed", "pi_seed", "bm", "bd", "bk",
+                              "interpret")
+)
+def cabin_build(
+    x: jnp.ndarray,
+    *,
+    d: int,
+    psi_seed: int,
+    pi_seed: int,
+    bm: int = 128,
+    bd: int = 2048,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused Cabin on dense categorical rows: (N, n) int32 -> (N, d/32) int32.
+
+    Requires d % 128 == 0 (see module docstring).
+    """
+    n_rows, n = x.shape
+    if d % 128:
+        raise ValueError("cabin_build kernel requires d % 128 == 0")
+    bd_ = min(bd, d)
+    while d % bd_:
+        bd_ //= 2
+    bd_ = max(bd_, 128)
+    bm_ = min(bm, max(8, n_rows))
+    bk_ = min(bk, n)
+
+    pad_rows = (-n_rows) % bm_
+    pad_cols = (-n) % bk_
+    x_p = jnp.pad(x, ((0, pad_rows), (0, pad_cols)))
+    mp, np_ = x_p.shape
+    k_steps = np_ // bk_
+    grid = (mp // bm_, d // bd_, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _cabin_kernel,
+            psi_seed=psi_seed,
+            pi_seed=pi_seed,
+            d=d,
+            bk=bk_,
+            bd=bd_,
+            n_total=n,
+            k_steps=k_steps,
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm_, bk_), lambda i, t, k: (i, k))],
+        out_specs=pl.BlockSpec((bm_, bd_ // 32), lambda i, t, k: (i, t)),
+        out_shape=jax.ShapeDtypeStruct((mp, d // 32), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm_, bd_), jnp.float32)],
+        interpret=interpret,
+    )(x_p)
+    return out[:n_rows]

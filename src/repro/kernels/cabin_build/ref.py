@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the cabin_build kernel: the core-library Cabin path."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cabin import CabinParams, sketch_dense
+
+
+def cabin_build_ref(x: jnp.ndarray, *, d: int, psi_seed: int, pi_seed: int
+                    ) -> jnp.ndarray:
+    params = CabinParams(n_dims=x.shape[-1], sketch_dim=d,
+                         psi_seed=psi_seed, pi_seed=pi_seed)
+    return sketch_dense(params, x)

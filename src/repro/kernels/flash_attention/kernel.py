@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: causal flash attention (online softmax), GQA-aware.
+
+The LM stack's perf-critical hot spot.  Standard two-pass-free flash
+algorithm: for each (batch, q-head, q-block) the kernel streams KV blocks,
+maintaining running max m, normaliser l and output accumulator in VMEM
+scratch (all f32), rescaling on the fly.
+
+GQA without materialising repeated KV: the kv BlockSpec index_map divides the
+q-head grid index by the group size, so K/V tiles are fetched from the shared
+kv head directly (no repeat in HBM).
+
+Causal masking: KV blocks entirely above the diagonal are skipped via
+pl.when (they still occupy grid steps but do no flops/стores); the diagonal
+block is masked with iota comparisons.
+
+Block sizes default to (BQ=256, BK=256) with Dh <= 256:
+  VMEM: q (256, Dh) f32-ish + k/v (256, Dh) + acc (256, Dh) f32 + s (256, 256)
+  f32 ~= 1.3 MiB at Dh=128 — comfortable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, bq, bk, kv_steps):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Causal: query block [qi*bq, qi*bq+bq) attends kv block [ki*bk, ...+bk)
+    # only if ki*bk <= qi*bq + bq - 1.
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (bq, bk)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_prev = m_ref[...]  # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, Hq, S, Dh)
+    k: jnp.ndarray,  # (B, Hkv, Skv, Dh)
+    v: jnp.ndarray,  # (B, Hkv, Skv, Dh)
+    *,
+    causal: bool = True,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, s, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    dh_v = v.shape[-1]  # may differ from dh (MLA value dim)
+    assert hq % hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = hq // hkv
+    bq_ = min(bq, s)
+    bk_ = min(bk, skv)
+    assert s % bq_ == 0 and skv % bk_ == 0, "seq must divide block size"
+    kv_steps = skv // bk_
+    scale = 1.0 / (dh ** 0.5)
+
+    grid = (b, hq, s // bq_, kv_steps)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, bq=bq_, bk=bk_,
+            kv_steps=kv_steps,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, dh), lambda bi, h, i, j: (bi, h, i, 0)),
+            pl.BlockSpec((1, 1, bk_, dh),
+                         lambda bi, h, i, j, g=group: (bi, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk_, dh_v),
+                         lambda bi, h, i, j, g=group: (bi, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, dh_v),
+                               lambda bi, h, i, j: (bi, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, dh_v), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, dh_v), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

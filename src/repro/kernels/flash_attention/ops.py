@@ -1,0 +1,84 @@
+"""Jit'd attention dispatcher: pallas flash (TPU) / chunked-lax / reference.
+
+`chunked_attention` is the XLA-level flash algorithm (lax.scan over KV
+blocks with online softmax).  It is the default off-TPU and for dry-run
+lowering: it never materialises the (S, S) score matrix, so 32k-token
+prefill fits in HBM without the Mosaic kernel (same asymptotic flops, so the
+roofline analysis is representative of the TPU kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block"))
+def chunked_attention(q, k, v, *, causal: bool = True, block: int = 1024):
+    """Online-softmax attention scanning KV in blocks. Shapes as ref."""
+    b, hq, s, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dh_v = v.shape[-1]  # may differ from dh (MLA)
+    group = hq // hkv
+    blk = min(block, skv)
+    while skv % blk:
+        blk //= 2
+    steps = skv // blk
+    scale = 1.0 / (dh ** 0.5)
+    qf = q.astype(jnp.float32)
+    k_blocks = k.astype(jnp.float32).reshape(b, hkv, steps, blk, dh)
+    v_blocks = v.astype(jnp.float32).reshape(b, hkv, steps, blk, dh_v)
+    k_blocks = jnp.moveaxis(k_blocks, 2, 0)  # (steps, b, hkv, blk, dh)
+    v_blocks = jnp.moveaxis(v_blocks, 2, 0)
+
+    q_pos = jnp.arange(s)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kb, vb, j = xs
+        kb = jnp.repeat(kb, group, axis=1)  # (b, hq, blk, dh)
+        vb = jnp.repeat(vb, group, axis=1)
+        sres = jnp.einsum("bhqd,bhkd->bhqk", qf, kb) * scale
+        if causal:
+            kpos = j * blk + jnp.arange(blk)
+            mask = q_pos[:, None] >= kpos[None, :]
+            sres = jnp.where(mask, sres, -1e30)
+        m_cur = sres.max(axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(sres - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, hq, s, dh_v), jnp.float32)
+    m0 = jnp.full((b, hq, s, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, s, 1), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (k_blocks, v_blocks, jnp.arange(steps)),
+    )
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, impl: str | None = None,
+              interpret: bool | None = None):
+    """Dispatch: impl in {None(auto), 'pallas', 'chunked', 'ref'}."""
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "chunked"
+    if impl == "pallas":
+        return kernel.flash_attention(
+            q, k, v, causal=causal,
+            interpret=bool(interpret if interpret is not None else not _on_tpu()),
+        )
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal)
+    return ref.attention_ref(q, k, v, causal=causal)

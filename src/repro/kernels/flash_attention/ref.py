@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention (materialised-scores softmax)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q (B,Hq,S,Dh), k/v (B,Hkv,Skv,Dh) -> (B,Hq,S,Dh); f32 math."""
+    b, hq, s, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, kr, vr))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) / (dh ** 0.5)
+    if causal:
+        q_pos = jnp.arange(s)[:, None]
+        k_pos = jnp.arange(skv)[None, :]
+        scores = jnp.where(q_pos >= k_pos, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)

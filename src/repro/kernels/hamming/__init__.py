@@ -1,0 +1,2 @@
+"""hamming kernel package."""
+from repro.kernels.hamming import kernel, ops, ref  # noqa: F401

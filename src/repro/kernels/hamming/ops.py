@@ -1,0 +1,52 @@
+"""Jit'd public wrappers around the hamming pair-stats kernel.
+
+`use_pallas=None` auto-selects: real TPU -> compiled kernel; CPU -> the jnp
+reference (the interpreter is for correctness tests, not production CPU use).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cham import binhamming_from_stats
+from repro.kernels.hamming import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pair_stats(a, b, *, use_pallas: bool | None = None, interpret: bool | None = None):
+    """(inner, hamming) between packed rows a (M,W) and b (N,W)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return kernel.pair_stats(
+            a, b, interpret=bool(interpret if interpret is not None else not _on_tpu())
+        )
+    return ref.pair_stats_ref(a, b)
+
+
+def cham_matrix_fast(a, b, d: int, *, use_pallas: bool | None = None) -> jnp.ndarray:
+    """All-pairs Cham estimate using the kernel for the popcount contraction."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        inner, _ = kernel.pair_stats(a, b, op_ham=False, interpret=not _on_tpu())
+        wa = kernel.row_popcount(a, interpret=not _on_tpu())
+        wb = kernel.row_popcount(b, interpret=not _on_tpu())
+    else:
+        inner, _ = ref.pair_stats_ref(a, b)
+        wa, wb = ref.row_popcount_ref(a), ref.row_popcount_ref(b)
+    return 2.0 * binhamming_from_stats(wa[:, None], wb[None, :], inner, d)
+
+
+def hamming_matrix_fast(a, b, *, use_pallas: bool | None = None) -> jnp.ndarray:
+    """Exact all-pairs HD between packed binary rows."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        _, ham = kernel.pair_stats(a, b, op_inner=False, interpret=not _on_tpu())
+        return ham
+    return ref.pair_stats_ref(a, b)[1]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the hamming/pair_stats kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import popcount32
+
+
+def pair_stats_ref(a: jnp.ndarray, b: jnp.ndarray):
+    """a: (M, W) int32, b: (N, W) int32 -> (inner (M,N), hamming (M,N))."""
+    a3 = a[:, None, :]
+    b3 = b[None, :, :]
+    inner = jnp.sum(popcount32(a3 & b3), axis=-1, dtype=jnp.int32)
+    ham = jnp.sum(popcount32(a3 ^ b3), axis=-1, dtype=jnp.int32)
+    return inner, ham
+
+
+def row_popcount_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(popcount32(x), axis=-1, dtype=jnp.int32)

@@ -1,0 +1,29 @@
+"""Production mesh construction (spec'd shapes: 16x16 single pod, 2x16x16
+multi-pod).  A FUNCTION, not a module constant — importing this module never
+touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for tests / degraded (elastic) configurations."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh over forced host devices for CI-grade distribution tests."""
+    n = jax.device_count()
+    if n < data * model:
+        raise RuntimeError(
+            f"need {data * model} devices, have {n}; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=<n> before "
+            "importing jax")
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,124 @@
+"""Generate the EXPERIMENTS.md dry-run + roofline tables from the JSON
+records produced by repro.launch.dryrun.
+
+    PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun \
+        --out experiments/roofline.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, load_records
+
+V5E_HBM_BYTES = 16 * 1024**3
+
+
+def _fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def bottleneck_note(rec: dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    dom = rec["roofline"]["dominant"]
+    mode = rec["mode"]
+    by_op = rec.get("collectives_by_op", {})
+    if dom == "collective":
+        biggest = max(by_op.items(), key=lambda kv: kv[1]["traffic"],
+                      default=(None, None))[0]
+        if mode == "train":
+            return (f"dominated by {biggest}: shrink activation gathers "
+                    "(SP regather / MoE dispatch) or overlap with compute")
+        return (f"dominated by {biggest}: reshard cache/logits to keep the "
+                "softmax local")
+    if dom == "memory":
+        if mode == "decode":
+            return "HBM-bound KV/state streaming: int8 cache or wider batch"
+        return "HBM-bound: fuse/remat less, raise arithmetic intensity"
+    return "compute-bound: at the MXU roofline; only algorithmic flops cuts"
+
+
+def generate(directory: str) -> str:
+    recs = load_records(directory)
+    ok = [r for r in recs if r.get("status") == "ok" and not r.get("tag")]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+
+    lines = []
+    lines.append("### Dry-run matrix\n")
+    lines.append(f"{len(ok)} compiled cells, {len(skipped)} skipped "
+                 f"(documented inapplicability), {len(errors)} errors.\n")
+    lines.append("| arch | shape | mesh | chips | compile | args/dev | "
+                 "temps/dev | fits v5e? | #coll |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        mem = r.get("memory_analysis", {})
+        args_b = mem.get("argument_size_in_bytes")
+        temp_b = mem.get("temp_size_in_bytes")
+        tot = (args_b or 0) + (temp_b or 0)
+        fits = "yes" if tot and tot < V5E_HBM_BYTES else (
+            "NO (see notes)" if tot else "-")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r['compile_s']:.0f}s | {_fmt_bytes(args_b)} | "
+            f"{_fmt_bytes(temp_b)} | {fits} | {r['collective_count']} |")
+    if skipped:
+        lines.append("\nSkipped cells:\n")
+        for r in sorted(skipped, key=lambda r: (r["arch"], r["shape"])):
+            lines.append(f"* `{r['arch']} x {r['shape']} x {r['mesh']}` — "
+                         f"{r['reason']}")
+
+    lines.append("\n### Roofline (single-pod 16x16 = 256 chips; v5e: "
+                 f"{PEAK_FLOPS/1e12:.0f} TF/s bf16, {HBM_BW/1e9:.0f} GB/s "
+                 f"HBM, {ICI_BW/1e9:.0f} GB/s/link ICI)\n")
+    lines.append("| arch | shape | compute | memory | collective | dominant |"
+                 " MODEL_FLOPS | useful ratio | roofline frac | note |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "pod":
+            continue
+        roof = r["roofline"]
+        total = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        frac = roof["compute_s"] / total if total else 0.0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(roof['compute_s'])} | "
+            f"{_fmt_s(roof['memory_s'])} | {_fmt_s(roof['collective_s'])} | "
+            f"{roof['dominant']} | {roof['model_flops']:.3g} | "
+            f"{roof['useful_ratio']:.2f} | {frac:.2f} | "
+            f"{bottleneck_note(r)} |")
+
+    lines.append("\n`useful ratio` = MODEL_FLOPS / HLO_FLOPs_global "
+                 "(6ND train, 2ND decode/prefill); `roofline frac` = "
+                 "compute_term / max(term) — the fraction of the modelled "
+                 "step time spent at the FLOP roofline.\n")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.md")
+    args = ap.parse_args()
+    text = generate(args.dir)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

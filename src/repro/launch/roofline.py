@@ -1,0 +1,234 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh), all in seconds, derived from the
+PER-DEVICE partitioned module (so dividing global quantities by chip count
+is already done by GSPMD):
+
+  compute    = HLO_flops_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = sum_ops traffic_bytes_per_device(op) / ICI_BW
+
+Collective traffic accounting (ring algorithms, per-device bytes on the
+busiest link):
+  all-gather       : result_bytes * (k-1)/k          (receives the k-1 shards)
+  reduce-scatter   : result_bytes * (k-1)            (streams k-1 partials)
+  all-reduce       : 2 * result_bytes * (k-1)/k      (RS + AG phases)
+  all-to-all       : result_bytes * (k-1)/k
+  collective-permute: result_bytes
+
+k = collective group size parsed from replica_groups.  MODEL_FLOPS uses
+6*N*D for training (fwd+bwd) and 2*N*D per generated/scored token for
+inference, N = active parameter count.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link (conservative single-link accounting)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]' -> bytes; tuples handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+_CONVERT_RE = re.compile(
+    r"^\s*%?[\w.\-]+ = (f32|bf16)\[([\d,]*)\][^=]* convert\(")
+
+
+def parse_convert_bytes(hlo_text: str) -> float:
+    """HBM bytes attributable to f32<->bf16 convert ops.
+
+    The CPU backend materialises f32 converts around bf16 dots (no native
+    bf16 ALU); a TPU MXU consumes bf16 directly, so these ops' traffic is a
+    compile-host artifact.  The memory roofline term subtracts this estimate
+    (operand+result bytes: f32 result from bf16 operand = 1.5x result bytes;
+    bf16 result from f32 operand = 3x result bytes).  Both raw and corrected
+    numbers are recorded in the dry-run JSON.
+    """
+    total = 0.0
+    in_fused = False
+    for line in hlo_text.splitlines():
+        # track computation blocks: converts inside fusion bodies are not
+        # materialised (cost analysis doesn't count them either) — only
+        # top-level/while-body converts hit HBM.
+        stripped = line.strip()
+        if stripped.endswith("{") and "(" in stripped:
+            name = stripped.split("(", 1)[0].strip().lstrip("%")
+            in_fused = name.startswith(("fused_", "wide.fused",
+                                        "region_fused")) or "fused_computation" in name
+            continue
+        if in_fused:
+            continue
+        m = _CONVERT_RE.match(line)
+        if not m:
+            continue
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        if dt == "f32":
+            total += n * 4 * 1.5
+        else:
+            total += n * 2 * 3.0
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    by_op: dict
+    traffic_bytes: float  # per-device busiest-link bytes
+    raw_bytes: float  # sum of result bytes (no ring factors)
+    count: int
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    by_op: dict[str, dict] = {}
+    traffic = 0.0
+    raw = 0.0
+    count = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result-producing collective ops: "%name = SHAPE op-name(...)"
+        m = re.match(r"%?[\w.\-]+ = ((?:\([^)]*\)|[\w\[\],{}\/ ]+?)) ([a-z\-]+)\(",
+                     stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.replace("-start", "")
+        if base not in _COLL_OPS:
+            continue
+        if op.endswith("-done"):
+            continue
+        nbytes = _shape_bytes(m.group(1))
+        k = _group_size(stripped, default_group)
+        if base == "all-gather":
+            t = nbytes * (k - 1) / max(k, 1)
+        elif base == "reduce-scatter":
+            t = nbytes * (k - 1)
+        elif base == "all-reduce":
+            t = 2 * nbytes * (k - 1) / max(k, 1)
+        elif base == "all-to-all":
+            t = nbytes * (k - 1) / max(k, 1)
+        else:  # collective-permute
+            t = nbytes
+        d = by_op.setdefault(base, {"count": 0, "bytes": 0.0, "traffic": 0.0})
+        d["count"] += 1
+        d["bytes"] += nbytes
+        d["traffic"] += t
+        traffic += t
+        raw += nbytes
+        count += 1
+    return CollectiveStats(by_op=by_op, traffic_bytes=traffic, raw_bytes=raw,
+                           count=count)
+
+
+def active_params(cfg) -> int:
+    """Active parameter count per token (MoE: top_k + shared experts only)."""
+    import jax
+    import numpy as np
+
+    from repro.models import transformer as T
+
+    shapes = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    total = 0
+    moe_total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "/moe/w_" in pstr or pstr.endswith("moe/router"):
+            moe_total += n
+    if cfg.moe is None or moe_total == 0:
+        return total
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+    return int(total - moe_total * (1 - frac))
+
+
+def model_flops(cfg, shape, n_active: int) -> float:
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    mult = 6.0 if shape.mode == "train" else 2.0
+    return mult * n_active * tokens
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+
+    def as_dict(self):
+        return self.__dict__.copy()
+
+
+def analyze(record: dict, chips: int) -> Roofline:
+    """record: one dry-run JSON (per-device flops/bytes + collective stats)."""
+    flops_dev = record["flops_per_device"]
+    bytes_dev = record["bytes_per_device"]
+    coll_dev = record["collective_traffic_bytes"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    hlo_global = flops_dev * chips
+    useful = record.get("model_flops", 0.0) / hlo_global if hlo_global else 0.0
+    return Roofline(compute_s=compute_s, memory_s=memory_s,
+                    collective_s=collective_s, dominant=dominant,
+                    model_flops=record.get("model_flops", 0.0),
+                    hlo_flops_global=hlo_global, useful_ratio=useful)
+
+
+def load_records(directory: str) -> list[dict]:
+    import glob
+    import os
+
+    out = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out

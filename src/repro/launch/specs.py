@@ -1,0 +1,77 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every dry-run cell.
+
+No device allocation — only shapes/dtypes for jit(...).lower().  Covers
+train (tokens+labels), prefill (tokens) and decode (token + caches) modes,
+plus the stub modality frontends (vision patches / audio frames) the [vlm]
+and [audio] entries require.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+
+BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model-input ShapeDtypeStructs for train/prefill batches."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: dict = {}
+    if cfg.kind == "encdec":
+        # decoder sees s tokens; encoder sees the stub frames
+        specs["tokens"] = _sds((b, s), jnp.int32)
+        specs["frontend"] = _sds((b, cfg.n_frontend_tokens, cfg.d_model), BF16)
+    elif cfg.frontend is not None:
+        s_text = s - cfg.n_frontend_tokens
+        assert s_text > 0
+        specs["tokens"] = _sds((b, s_text), jnp.int32)
+        specs["frontend"] = _sds((b, cfg.n_frontend_tokens, cfg.d_model), BF16)
+    else:
+        specs["tokens"] = _sds((b, s), jnp.int32)
+    if shape.mode == "train":
+        specs["labels"] = _sds(specs["tokens"].shape, jnp.int32)
+    return specs
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: T.init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int,
+                    kv_dtype: str = "bfloat16"):
+    return jax.eval_shape(
+        lambda: T.init_caches(cfg, batch, max_len, kv_dtype))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig,
+                 kv_dtype: str = "bfloat16") -> dict:
+    """Inputs for serve_step: one new token against a seq_len cache."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": _sds((b, 1), jnp.int32),
+        "caches": abstract_caches(cfg, b, s, kv_dtype),
+        "pos": _sds((), jnp.int32),
+    }
+    if cfg.kind == "encdec":
+        specs["enc_out"] = _sds((b, cfg.n_frontend_tokens, cfg.d_model), BF16)
+    return specs
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) per the assignment's skip rules."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 524k-token decode is the "
+                       "quadratic regime long_500k excludes (DESIGN.md 6)")
+    if cfg.frontend is not None and cfg.kind != "encdec" \
+            and shape.seq_len <= cfg.n_frontend_tokens:
+        return False, "sequence shorter than frontend patch count"
+    return True, ""

@@ -1,0 +1,312 @@
+"""Attention mixers: GQA multi-head attention and DeepSeek-style MLA.
+
+Two execution paths per mixer:
+  * batch path (train / prefill): full-sequence causal attention through the
+    dispatcher in repro.kernels.flash_attention.ops (pallas on TPU, chunked
+    online-softmax lax elsewhere — never materialises (S, S) scores).
+  * decode path: one new token against a cache.  GQA caches K/V directly
+    (optionally int8 with per-token-head scales); MLA caches the compressed
+    latent + rope key and uses the ABSORBED matmul form, so decode flops and
+    cache bytes scale with kv_lora_rank instead of n_heads * head_dim — the
+    MLA serving optimisation from the DeepSeek-V2/V3 papers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.models import layers
+from repro.models.layers import apply_rope, dense_init, dt, matmul, rmsnorm, rmsnorm_init
+
+# ---------------------------------------------------------------------------
+# KV cache quantisation
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: jnp.ndarray):
+    """(..., dh) -> int8 values + f32 scale over the last dim."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(cfg: ModelConfig, key) -> dict:
+    d, h, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    pdt = dt(cfg.precision.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * dh, pdt),
+        "wk": dense_init(ks[1], d, hkv * dh, pdt),
+        "wv": dense_init(ks[2], d, hkv * dh, pdt),
+        "wo": dense_init(ks[3], h * dh, d, pdt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), pdt)
+        p["bk"] = jnp.zeros((hkv * dh,), pdt)
+        p["bv"] = jnp.zeros((hkv * dh,), pdt)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, params, x):
+    cdt = dt(cfg.precision.compute_dtype)
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = matmul(x, params["wq"], cdt)
+    k = matmul(x, params["wk"], cdt)
+    v = matmul(x, params["wv"], cdt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(jnp.float32)
+        k = k + params["bk"].astype(jnp.float32)
+        v = v + params["bv"].astype(jnp.float32)
+    q = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3).astype(cdt)
+    k = k.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3).astype(cdt)
+    v = v.reshape(b, s, hkv, dh).transpose(0, 2, 1, 3).astype(cdt)
+    return q, k, v
+
+
+def gqa_batch(cfg: ModelConfig, params, x, positions, *, causal=True,
+              impl=None, kv_override=None, rope=True):
+    """Train/prefill path. x: (B, S, D). Returns (out, kv) where kv are the
+    pre-transpose K/V (B, Hkv, S, dh) for cache seeding."""
+    cdt = dt(cfg.precision.compute_dtype)
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, params, x)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if kv_override is not None:  # cross-attention (enc-dec)
+        k, v = kv_override
+        causal = False
+    o = attn_ops.attention(q, k, v, causal=causal, impl=impl)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.resolved_head_dim)
+    out = matmul(o, params["wo"], cdt).astype(x.dtype)
+    return out, (k, v)
+
+
+def gqa_init_cache(cfg: ModelConfig, batch: int, max_len: int, quantized: bool):
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    cdt = dt(cfg.precision.compute_dtype)
+    if quantized:
+        return {
+            "k": jnp.zeros((batch, hkv, max_len, dh), jnp.int8),
+            "v": jnp.zeros((batch, hkv, max_len, dh), jnp.int8),
+            "k_scale": jnp.zeros((batch, hkv, max_len, 1), jnp.float32),
+            "v_scale": jnp.zeros((batch, hkv, max_len, 1), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, hkv, max_len, dh), cdt),
+        "v": jnp.zeros((batch, hkv, max_len, dh), cdt),
+    }
+
+
+def gqa_decode(cfg: ModelConfig, params, x, cache: dict, pos: jnp.ndarray):
+    """One-token decode. x: (B, 1, D); pos: scalar int32 (current length).
+
+    Returns (out, new_cache).
+    """
+    cdt = dt(cfg.precision.compute_dtype)
+    b = x.shape[0]
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    group = h // hkv
+    q, k_new, v_new = _project_qkv(cfg, params, x)  # (B,*,1,dh)
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    q = apply_rope(q, pos_arr, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos_arr, cfg.rope_theta)
+
+    quantized = "k_scale" in cache
+    if quantized:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, pos, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, pos, 0))
+        cache["k_scale"] = jax.lax.dynamic_update_slice(
+            cache["k_scale"], ks, (0, 0, pos, 0))
+        cache["v_scale"] = jax.lax.dynamic_update_slice(
+            cache["v_scale"], vs, (0, 0, pos, 0))
+        k_all = dequantize_kv(cache["k"], cache["k_scale"], cdt)
+        v_all = dequantize_kv(cache["v"], cache["v_scale"], cdt)
+    else:
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, 0, pos, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, 0, pos, 0))
+        k_all, v_all = cache["k"], cache["v"]
+
+    # Attention math streams the cache in its STORED dtype with f32
+    # accumulation on the MXU (preferred_element_type) — casting the whole
+    # cache to f32 would double the dominant HBM term of the decode roofline
+    # (EXPERIMENTS.md section Perf, llama3 decode_32k iteration 1).
+    s_max = k_all.shape[2]
+    qg = q.reshape(b, hkv, group, dh)  # (B, Hkv, G, dh); S_q=1 folded into G
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(k_all.dtype), k_all,
+                        preferred_element_type=jnp.float32) / (dh ** 0.5)
+    mask = jnp.arange(s_max)[None, None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhgs,bhsd->bhgd", probs.astype(v_all.dtype), v_all,
+                     preferred_element_type=jnp.float32)
+    ctx = ctx.reshape(b, 1, h * dh).astype(cdt)
+    out = matmul(ctx, params["wo"], cdt).astype(x.dtype)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(cfg: ModelConfig, key) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    pdt = dt(cfg.precision.param_dtype)
+    ks = jax.random.split(key, 5)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank, pdt),
+        "q_norm": rmsnorm_init(m.q_lora_rank, pdt),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, h * qk_dim, pdt),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_dim, pdt),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, pdt),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank, h * (m.qk_nope_dim + m.v_dim), pdt),
+        "wo": dense_init(ks[4], h * m.v_dim, d, pdt),
+    }
+
+
+def _mla_q(cfg: ModelConfig, params, x, positions):
+    m = cfg.mla
+    cdt = dt(cfg.precision.compute_dtype)
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_lat = matmul(x, params["wq_a"], cdt).astype(cdt)
+    q_lat = rmsnorm(params["q_norm"], q_lat, cfg.norm_eps)
+    q = matmul(q_lat, params["wq_b"], cdt)
+    q = q.reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim).transpose(0, 2, 1, 3)
+    q_nope = q[..., : m.qk_nope_dim].astype(cdt)
+    q_rope = apply_rope(q[..., m.qk_nope_dim:].astype(cdt), positions,
+                        cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg: ModelConfig, params, x, positions):
+    m = cfg.mla
+    cdt = dt(cfg.precision.compute_dtype)
+    kv = matmul(x, params["wkv_a"], cdt)
+    c_kv = rmsnorm(params["kv_norm"], kv[..., : m.kv_lora_rank].astype(cdt),
+                   cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:].astype(cdt)  # (B, S, rope)
+    k_rope = apply_rope(k_rope[:, None], positions, cfg.rope_theta)[:, 0]
+    return c_kv, k_rope
+
+
+def mla_batch(cfg: ModelConfig, params, x, positions, *, impl=None):
+    """Naive (expanded) MLA for train/prefill: flops-equivalent to GQA with
+    per-head qk_dim keys, using the flash path."""
+    m = cfg.mla
+    cdt = dt(cfg.precision.compute_dtype)
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(cfg, params, x, positions)
+    c_kv, k_rope = _mla_latent(cfg, params, x, positions)
+    kv = matmul(c_kv, params["wkv_b"], cdt)
+    kv = kv.reshape(b, s, h, m.qk_nope_dim + m.v_dim).transpose(0, 2, 1, 3)
+    k_nope = kv[..., : m.qk_nope_dim].astype(cdt)
+    v = kv[..., m.qk_nope_dim:].astype(cdt)
+    k_rope_h = jnp.broadcast_to(k_rope[:, None], (b, h, s, m.qk_rope_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1).astype(cdt)
+    o = attn_ops.attention(q_full, k_full, v, causal=True, impl=impl)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_dim)
+    out = matmul(o, params["wo"], cdt).astype(x.dtype)
+    return out, (c_kv, k_rope)
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, quantized: bool):
+    m = cfg.mla
+    cdt = dt(cfg.precision.compute_dtype)
+    if quantized:
+        return {
+            "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), jnp.int8),
+            "c_scale": jnp.zeros((batch, max_len, 1), jnp.float32),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), cdt),
+        }
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), cdt),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), cdt),
+    }
+
+
+def mla_decode(cfg: ModelConfig, params, x, cache: dict, pos: jnp.ndarray):
+    """Absorbed-form MLA decode: score/value math in latent space."""
+    m = cfg.mla
+    cdt = dt(cfg.precision.compute_dtype)
+    b = x.shape[0]
+    h = cfg.n_heads
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(cfg, params, x, pos_arr)  # (B,H,1,*)
+    c_new, kr_new = _mla_latent(cfg, params, x, pos_arr)  # (B,1,r), (B,1,rope)
+
+    cache = dict(cache)
+    quantized = "c_scale" in cache
+    if quantized:
+        cq, cs = quantize_kv(c_new)
+        cache["c_kv"] = jax.lax.dynamic_update_slice(cache["c_kv"], cq, (0, pos, 0))
+        cache["c_scale"] = jax.lax.dynamic_update_slice(
+            cache["c_scale"], cs, (0, pos, 0))
+        c_all = dequantize_kv(cache["c_kv"], cache["c_scale"], cdt)
+    else:
+        cache["c_kv"] = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+        c_all = cache["c_kv"]
+    cache["k_rope"] = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    kr_all = cache["k_rope"]
+
+    # Absorb k-projection into q: q_lat (B,H,r) = q_nope (B,H,nope) @ Wk^h.
+    # Latent cache streamed in its stored dtype with f32 MXU accumulation
+    # (same HBM-term reasoning as gqa_decode).
+    wkv_b = params["wkv_b"].astype(cdt).reshape(
+        m.kv_lora_rank, h, m.qk_nope_dim + m.v_dim)
+    w_k = wkv_b[..., : m.qk_nope_dim]  # (r, H, nope)
+    w_v = wkv_b[..., m.qk_nope_dim:]  # (r, H, v)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, :, 0].astype(cdt), w_k,
+                       preferred_element_type=jnp.float32)
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat.astype(c_all.dtype), c_all,
+                        preferred_element_type=jnp.float32)
+    scores = scores + jnp.einsum(
+        "bhd,bsd->bhs", q_rope[:, :, 0].astype(kr_all.dtype), kr_all,
+        preferred_element_type=jnp.float32)
+    scores = scores / ((m.qk_nope_dim + m.qk_rope_dim) ** 0.5)
+    s_max = c_all.shape[1]
+    mask = jnp.arange(s_max)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", probs.astype(c_all.dtype), c_all,
+                         preferred_element_type=jnp.float32)
+    ctx = jnp.einsum("bhr,rhv->bhv", ctx_lat.astype(cdt), w_v,
+                     preferred_element_type=jnp.float32)
+    ctx = ctx.reshape(b, 1, h * m.v_dim).astype(cdt)
+    out = matmul(ctx, params["wo"], cdt).astype(x.dtype)
+    return out, cache
+
+
+__all__ = [
+    "gqa_init", "gqa_batch", "gqa_decode", "gqa_init_cache",
+    "mla_init", "mla_batch", "mla_decode", "mla_init_cache",
+    "quantize_kv", "dequantize_kv",
+]

@@ -1,0 +1,69 @@
+"""CabinEmbed: hashed vocabulary embeddings built on the paper's machinery.
+
+Token ids are categorical values; BinSketch's random attribute map pi gives
+k independent bucket assignments per id and the BinEm-style sign hash psi
+gives a Rademacher sign per (id, repetition):
+
+    embed(t) = (1/sqrt(k)) * sum_j sign_j(t) * table[pi_j(t)]
+
+This shrinks a (V, D) table to (n_buckets, D) with V-independent size — the
+same "dimension depends on density, not on the ambient dimension" property
+the paper proves for Cabin sketches, applied to the embedding matrix.  The
+tied output head uses the transposed trick: y = x @ table^T (B,S,buckets),
+then logits[t] = sum_j sign_j(t) * y[pi_j(t)].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.configs.base import ModelConfig
+from repro.models.layers import dt
+
+
+def _bucket_and_sign(cfg: ModelConfig, token_ids: jnp.ndarray, j: int):
+    nb = cfg.hashed_embedding_buckets
+    t = token_ids.astype(jnp.uint32)
+    bucket = hashing.pi_buckets(t, nb, seed=811 + j)
+    sign = hashing.rademacher(t, seed=911 + j)
+    return bucket, sign
+
+
+def hashed_embed_init(cfg: ModelConfig, key) -> dict:
+    nb = cfg.hashed_embedding_buckets
+    pdt = dt(cfg.precision.param_dtype)
+    table = (jax.random.normal(key, (nb, cfg.d_model), jnp.float32) * 0.02
+             ).astype(pdt)
+    return {"table": table}
+
+
+def hashed_embed(cfg: ModelConfig, params, token_ids: jnp.ndarray) -> jnp.ndarray:
+    """token_ids (B, S) -> embeddings (B, S, D)."""
+    k = cfg.hashed_embedding_k
+    out = None
+    table = params["table"]
+    for j in range(k):
+        bucket, sign = _bucket_and_sign(cfg, token_ids, j)
+        e = jnp.take(table, bucket, axis=0).astype(jnp.float32)
+        e = e * sign[..., None]
+        out = e if out is None else out + e
+    return (out / (k ** 0.5)).astype(table.dtype)
+
+
+def hashed_logits(cfg: ModelConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied output head: x (B, S, D) -> logits (B, S, V)."""
+    k = cfg.hashed_embedding_k
+    cdt = dt(cfg.precision.compute_dtype)
+    table = params["table"].astype(cdt)
+    y = jax.lax.dot_general(
+        x.astype(cdt), table.T, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (B, S, n_buckets)
+    vocab = jnp.arange(cfg.vocab_size, dtype=jnp.uint32)
+    logits = None
+    for j in range(k):
+        bucket, sign = _bucket_and_sign(cfg, vocab, j)
+        lj = jnp.take(y, bucket, axis=-1) * sign
+        logits = lj if logits is None else logits + lj
+    return logits / (k ** 0.5)

@@ -1,0 +1,138 @@
+"""Mamba (S6 selective state space) mixer — used by jamba's hybrid stack.
+
+Train/prefill runs the recurrence with lax.scan over time, keeping the live
+state at (B, ED, N) — the associative-scan formulation materialises
+(B, S, ED, N) which is a 32x activation blowup at jamba scale, so the
+sequential scan is the memory-sane XLA path (a chunked Pallas kernel is the
+TPU-native alternative; see DESIGN.md/EXPERIMENTS notes).  Decode is the
+natural O(1) recurrent step carrying (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, dt, matmul
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mamba
+    ed = m.expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return m, ed, dt_rank
+
+
+def mamba_init(cfg: ModelConfig, key) -> dict:
+    m, ed, dt_rank = _dims(cfg)
+    pdt = dt(cfg.precision.param_dtype)
+    ks = jax.random.split(key, 5)
+    a = jnp.tile(jnp.arange(1, m.d_state + 1, dtype=jnp.float32)[None, :],
+                 (ed, 1))
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * ed, pdt),
+        "conv_w": (jax.random.normal(ks[1], (ed, m.d_conv), jnp.float32)
+                   * (1.0 / m.d_conv) ** 0.5).astype(pdt),
+        "conv_b": jnp.zeros((ed,), pdt),
+        "x_proj": dense_init(ks[2], ed, dt_rank + 2 * m.d_state, pdt),
+        "dt_w": dense_init(ks[3], dt_rank, ed, pdt),
+        "dt_b": jnp.full((ed,), -4.6, pdt),  # softplus^-1(0.01)
+        "a_log": jnp.log(a),  # f32: selective dynamics stay in f32
+        "d": jnp.ones((ed,), jnp.float32),
+        "out_proj": dense_init(ks[4], ed, cfg.d_model, pdt),
+    }
+
+
+def _ssm_inputs(cfg: ModelConfig, params, xc):
+    """xc: (B, S, ED) post-conv. Returns dt_full, b_in, c_in (f32)."""
+    m, ed, dt_rank = _dims(cfg)
+    cdt = dt(cfg.precision.compute_dtype)
+    proj = matmul(xc, params["x_proj"], cdt)  # (B,S,R+2N) f32 accum
+    dt_part = proj[..., :dt_rank]
+    b_in = proj[..., dt_rank : dt_rank + m.d_state].astype(jnp.float32)
+    c_in = proj[..., dt_rank + m.d_state :].astype(jnp.float32)
+    dt_full = jax.nn.softplus(
+        matmul(dt_part.astype(cdt), params["dt_w"], cdt)
+        + params["dt_b"].astype(jnp.float32))  # (B,S,ED) f32
+    return dt_full, b_in, c_in
+
+
+def _causal_conv(cfg, params, x, conv_state=None):
+    """Depthwise causal conv. x: (B, S, ED). conv_state: (B, K-1, ED)."""
+    m, ed, _ = _dims(cfg)
+    k = m.d_conv
+    xf = x.astype(jnp.float32)
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, ed), jnp.float32)
+    else:
+        pad = conv_state.astype(jnp.float32)
+    xp = jnp.concatenate([pad, xf], axis=1)  # (B, S+K-1, ED)
+    w = params["conv_w"].astype(jnp.float32)  # (ED, K)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[:, i] for i in range(k))
+    out = out + params["conv_b"].astype(jnp.float32)
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(out), new_state
+
+
+def mamba_batch(cfg: ModelConfig, params, x, positions=None):
+    """x: (B, S, D) -> (out, final_state) with lax.scan over time."""
+    m, ed, _ = _dims(cfg)
+    cdt = dt(cfg.precision.compute_dtype)
+    b, s, d = x.shape
+    xz = matmul(x, params["in_proj"], cdt)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(cfg, params, x1)
+    dt_full, b_in, c_in = _ssm_inputs(cfg, params, xc.astype(cdt))
+    a = -jnp.exp(params["a_log"])  # (ED, N)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,ED),(B,ED),(B,N),(B,N)
+        da = jnp.exp(dtt[..., None] * a[None])  # (B,ED,N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("ben,bn->be", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((b, ed, m.d_state), jnp.float32)
+    xs = (
+        jnp.moveaxis(xc.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt_full, 1, 0),
+        jnp.moveaxis(b_in, 1, 0),
+        jnp.moveaxis(c_in, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,ED)
+    y = y + params["d"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = matmul(y.astype(cdt), params["out_proj"], cdt).astype(x.dtype)
+    return out, {"conv": conv_state.astype(cdt), "ssm": h_final}
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, max_len: int, quantized: bool):
+    m, ed, _ = _dims(cfg)
+    cdt = dt(cfg.precision.compute_dtype)
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, ed), cdt),
+        "ssm": jnp.zeros((batch, ed, m.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(cfg: ModelConfig, params, x, cache: dict, pos=None):
+    """x: (B, 1, D) single-token step."""
+    m, ed, _ = _dims(cfg)
+    cdt = dt(cfg.precision.compute_dtype)
+    b = x.shape[0]
+    xz = matmul(x, params["in_proj"], cdt)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(cfg, params, x1.astype(cdt), cache["conv"])
+    dt_full, b_in, c_in = _ssm_inputs(cfg, params, xc.astype(cdt))
+    a = -jnp.exp(params["a_log"])
+    xt, dtt = xc[:, 0].astype(jnp.float32), dt_full[:, 0]
+    bt, ct = b_in[:, 0], c_in[:, 0]
+    da = jnp.exp(dtt[..., None] * a[None])
+    h = da * cache["ssm"] + (dtt * xt)[..., None] * bt[:, None, :]
+    y = jnp.einsum("ben,bn->be", h, ct)
+    y = y + params["d"].astype(jnp.float32) * xt
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = matmul(y[:, None].astype(cdt), params["out_proj"], cdt).astype(x.dtype)
+    return out, {"conv": conv_state.astype(cdt), "ssm": h}

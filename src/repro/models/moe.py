@@ -1,0 +1,138 @@
+"""Mixture-of-Experts layer: top-k routing with capacity, GShard-style
+one-hot dispatch/combine einsums (the GSPMD-proven formulation).
+
+Memory discipline: tokens are reshaped into dispatch GROUPS of
+`moe.group_size` tokens so the (S_g, E, C) dispatch tensor stays bounded
+regardless of batch x seq (DESIGN.md section 5) — capacity C is computed per
+group.  Experts live on the 'model' mesh axis (expert parallelism); the
+dispatch einsum therefore lowers to the expected all-to-all style
+collectives under pjit.
+
+DeepSeek-V3 extras supported: `num_shared_experts` dense experts applied to
+every token, and first_k_dense layers handled by the stack (configs).
+Router uses softmax gating + Switch-style load-balance aux loss (dsv3's
+sigmoid+bias-free balancing is noted as a deviation in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers
+from repro.models.layers import dense_init, dt, matmul, mlp_init, mlp_apply
+
+
+def moe_init(cfg: ModelConfig, key) -> dict:
+    m = cfg.moe
+    pdt = dt(cfg.precision.param_dtype)
+    k_router, k_experts, k_shared = jax.random.split(key, 3)
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    ks = jax.random.split(k_experts, 3)
+    params = {
+        "router": dense_init(k_router, d, e, jnp.float32),  # router in f32
+        "w_gate": (jax.random.normal(ks[0], (e, d, f), jnp.float32)
+                   * (1.0 / d) ** 0.5).astype(pdt),
+        "w_up": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                 * (1.0 / d) ** 0.5).astype(pdt),
+        "w_down": (jax.random.normal(ks[2], (e, f, d), jnp.float32)
+                   * (1.0 / f) ** 0.5).astype(pdt),
+    }
+    if m.num_shared_experts:
+        params["shared"] = mlp_init(
+            k_shared, d, f * m.num_shared_experts, pdt)
+    return params
+
+
+def _dispatch_groups(cfg: ModelConfig, params, x, capacity: int):
+    """x: (G, S, D) dispatch groups. Returns (out (G, S, D), aux_loss).
+
+    Explicit group-batched einsums (no vmap) so the sharding constraints
+    below reach GSPMD: groups stay on their data shard ('dp'), the expert
+    dim lives on 'model', contraction dims are UNSHARDED.  Without these
+    constraints XLA propagates the sequence-parallel 'model' sharding into
+    the dispatch contractions and all-reduces dispatch-sized tensors every
+    layer — the dominant term of the deepseek-v3 baseline (EXPERIMENTS.md
+    section Perf, cell A iteration 2).
+    """
+    m = cfg.moe
+    cdt = dt(cfg.precision.compute_dtype)
+    gn, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+
+    ddt = dt(m.dispatch_dtype)
+    x = constrain(x, "dp", None, None)  # gather SP shards once for routing
+    logits = matmul(x, params["router"], jnp.float32)  # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (G, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # Positions within each expert's capacity buffer, assigned in slot-major
+    # order per group: slot 0 for all tokens, then slot 1 (GShard).
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # (G, S, k, E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(gn, k * s, e)  # slot-major
+    pos_flat = jnp.cumsum(flat, axis=1) - flat  # (G, k*S, E)
+    pos = pos_flat.reshape(gn, k, s, e).transpose(0, 2, 1, 3)  # (G, S, k, E)
+    pos = jnp.sum(pos * onehot, axis=-1)  # (G, S, k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch/combine (G, S, E, C); dtype is a traffic knob (position math
+    # above stays f32 for exactness)
+    onehot_d = onehot.astype(ddt)
+    pos_oh = (jax.nn.one_hot(pos, capacity, dtype=jnp.float32)
+              * keep[..., None]).astype(ddt)
+    disp = jnp.einsum("gske,gskc->gsec", onehot_d, pos_oh)  # {0,1}
+    comb = jnp.einsum("gske,gskc,gsk->gsec", onehot_d, pos_oh,
+                      gate_vals.astype(ddt))
+    disp = constrain(disp, "dp", None, "model", None)
+    comb = constrain(comb, "dp", None, "model", None)
+
+    xe = jnp.einsum("gsd,gsec->gecd", x.astype(ddt), disp).astype(cdt)
+    xe = constrain(xe, "dp", "model", None, None)
+    g = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(cdt),
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(cdt),
+                   preferred_element_type=jnp.float32)
+    h = constrain((jax.nn.silu(g) * u).astype(cdt),
+                  "dp", "model", None, None)
+    eo = jnp.einsum("gecf,efd->gecd", h, params["w_down"].astype(cdt),
+                    preferred_element_type=jnp.float32)
+    eo = constrain(eo.astype(ddt), "dp", "model", None, None)
+    out = jnp.einsum("gecd,gsec->gsd", eo, comb,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    # reduce over the model-sharded expert dim lands as reduce-scatter back
+    # into the sequence-parallel layout:
+    out = constrain(out, "dp", "model", None)
+
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    f_e = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))  # top-1 routing fraction
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e)
+    return out, aux
+
+
+def moe_apply(cfg: ModelConfig, params, x) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    g_size = min(m.group_size, b * s)
+    # pad to a multiple of the group size
+    pad = (-tokens.shape[0]) % g_size
+    if pad:
+        tokens = jnp.concatenate(
+            [tokens, jnp.zeros((pad, d), tokens.dtype)], axis=0)
+    groups = tokens.reshape(-1, g_size, d)
+    capacity = max(1, int(g_size * m.top_k * m.capacity_factor / m.num_experts))
+
+    out, aux_loss = _dispatch_groups(cfg, params, groups, capacity)
+    out = out.reshape(-1, d)[: b * s].reshape(b, s, d)
+
+    if m.num_shared_experts:
+        out = out + mlp_apply(params["shared"], x,
+                              dt(cfg.precision.compute_dtype))
+    return out, aux_loss * m.router_aux_weight

@@ -1,0 +1,488 @@
+"""Model assembly: heterogeneous decoder stacks (+ enc-dec) with scan.
+
+Depth discipline: layers are grouped into STAGES of repeating periods
+(jamba: 4 repeats x 8-layer period; deepseek-v3: 3 dense layers then 58
+identical MoE layers; dense archs: n_layers x 1-layer period).  Parameters
+for a stage are stacked over the repeat axis and applied with lax.scan, so
+HLO size and compile time are O(period), not O(depth) — essential for the
+40-cell x 512-device dry-run matrix.
+
+Three entry points:
+  forward(...)      train/prefill logits (+ MoE aux loss)
+  prefill(...)      forward + populated decode caches
+  decode_step(...)  one-token step updating caches (scan over repeats, too)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig, ParallelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import hashed_embedding as hemb
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    dense_init, dt, embed_init, matmul, mlp_apply, mlp_init, rmsnorm,
+    rmsnorm_init,
+)
+
+
+@dataclass(frozen=True)
+class Stage:
+    specs: tuple[LayerSpec, ...]
+    n_repeat: int
+
+
+def build_stages(cfg: ModelConfig) -> tuple[Stage, ...]:
+    all_layers = cfg.all_layers()
+    stages: list[Stage] = []
+    i = cfg.first_k_dense
+    if i:
+        stages.append(Stage(all_layers[:i], 1))
+    rest = all_layers[i:]
+    p = len(cfg.layer_pattern)
+    if rest:
+        if len(rest) % p:
+            # fall back to a single unrolled stage
+            stages.append(Stage(tuple(rest), 1))
+        else:
+            stages.append(Stage(tuple(rest[:p]), len(rest) // p))
+    return tuple(stages)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+_MIXER_INIT = {
+    "attn": attn.gqa_init,
+    "mla": attn.mla_init,
+    "mamba": mamba_mod.mamba_init,
+    "mlstm": xlstm_mod.mlstm_init,
+    "slstm": xlstm_mod.slstm_init,
+}
+_MIXER_KEY = {"attn": "attn", "mla": "attn", "mamba": "mamba",
+              "mlstm": "lstm", "slstm": "lstm"}
+_MIXER_BATCH = {
+    "attn": attn.gqa_batch,
+    "mla": attn.mla_batch,
+    "mamba": mamba_mod.mamba_batch,
+    "mlstm": xlstm_mod.mlstm_batch,
+    "slstm": xlstm_mod.slstm_batch,
+}
+_MIXER_DECODE = {
+    "attn": attn.gqa_decode,
+    "mla": attn.mla_decode,
+    "mamba": mamba_mod.mamba_decode,
+    "mlstm": xlstm_mod.mlstm_decode,
+    "slstm": xlstm_mod.slstm_decode,
+}
+_MIXER_CACHE = {
+    "attn": attn.gqa_init_cache,
+    "mla": attn.mla_init_cache,
+    "mamba": mamba_mod.mamba_init_cache,
+    "mlstm": xlstm_mod.mlstm_init_cache,
+    "slstm": xlstm_mod.slstm_init_cache,
+}
+
+
+def _layer_init(cfg: ModelConfig, spec: LayerSpec, key, cross_attn=False):
+    pdt = dt(cfg.precision.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm1": rmsnorm_init(cfg.d_model, pdt),
+         _MIXER_KEY[spec.mixer]: _MIXER_INIT[spec.mixer](cfg, k1)}
+    if cross_attn:
+        p["norm_x"] = rmsnorm_init(cfg.d_model, pdt)
+        p["xattn"] = attn.gqa_init(cfg, k4)
+    if spec.mlp != "none":
+        p["norm2"] = rmsnorm_init(cfg.d_model, pdt)
+        if spec.mlp == "dense":
+            p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, pdt)
+        else:
+            p["moe"] = moe_mod.moe_init(cfg, k3)
+    return p
+
+
+def _project_cross_kv(cfg, p_x, enc_out):
+    cdt = dt(cfg.precision.compute_dtype)
+    b, t, _ = enc_out.shape
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = matmul(enc_out, p_x["wk"], cdt).reshape(b, t, hkv, dh).transpose(0, 2, 1, 3)
+    v = matmul(enc_out, p_x["wv"], cdt).reshape(b, t, hkv, dh).transpose(0, 2, 1, 3)
+    return k.astype(cdt), v.astype(cdt)
+
+
+def _layer_batch(cfg, spec, p, x, positions, pcfg: ParallelConfig,
+                 enc_kv=None):
+    mixer_key = _MIXER_KEY[spec.mixer]
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if spec.mixer in ("attn", "mla"):
+        out, _ = _MIXER_BATCH[spec.mixer](cfg, p[mixer_key], h, positions,
+                                          impl=pcfg.attention_impl)
+    else:
+        out, _ = _MIXER_BATCH[spec.mixer](cfg, p[mixer_key], h, positions)
+    x = x + out
+    if enc_kv is not None and "xattn" in p:
+        _, enc_out, _ = enc_kv
+        kv = _project_cross_kv(cfg, p["xattn"], enc_out)
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        out, _ = attn.gqa_batch(cfg, p["xattn"], h, positions,
+                                impl=pcfg.attention_impl, kv_override=kv,
+                                rope=False)
+        x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mlp != "none":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if spec.mlp == "dense":
+            x = x + mlp_apply(p["mlp"], h, dt(cfg.precision.compute_dtype))
+        else:
+            out, aux = moe_mod.moe_apply(cfg, p["moe"], h)
+            x = x + out
+    if pcfg.sequence_parallel:
+        x = constrain(x, "dp", "model", None)
+    return x, aux
+
+
+def _layer_decode(cfg, spec, p, x, cache, pos, enc_kv=None):
+    mixer_key = _MIXER_KEY[spec.mixer]
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    out, new_cache = _MIXER_DECODE[spec.mixer](cfg, p[mixer_key], h,
+                                               cache["mixer"], pos)
+    x = x + out
+    new_entry = {"mixer": new_cache}
+    if enc_kv is not None and "xattn" in p:
+        h = rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        # cross attention over fixed encoder KV (no cache update)
+        out, _ = attn.gqa_batch(cfg, p["xattn"], h,
+                                jnp.zeros((1,), jnp.int32),
+                                impl="ref", kv_override=enc_kv, rope=False)
+        x = x + out
+    if spec.mlp != "none":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if spec.mlp == "dense":
+            x = x + mlp_apply(p["mlp"], h, dt(cfg.precision.compute_dtype))
+        else:
+            out, _ = moe_mod.moe_apply(cfg, p["moe"], h)
+            x = x + out
+    return x, new_entry
+
+
+def _layer_cache(cfg, spec, batch, max_len, quantized):
+    return {"mixer": _MIXER_CACHE[spec.mixer](cfg, batch, max_len, quantized)}
+
+
+# ---------------------------------------------------------------------------
+# stack init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    pdt = dt(cfg.precision.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: dict = {}
+    if cfg.hashed_embedding:
+        params["hashed_embed"] = hemb.hashed_embed_init(cfg, keys[0])
+    else:
+        params["embed"] = {"table": embed_init(keys[0], cfg.vocab_size,
+                                               cfg.d_model, pdt)}
+    stages = build_stages(cfg)
+    stage_params = []
+    for si, stage in enumerate(stages):
+        def init_one(k):
+            ks = jax.random.split(k, len(stage.specs))
+            return {f"l{i}": _layer_init(cfg, spec, ks[i])
+                    for i, spec in enumerate(stage.specs)}
+        rep_keys = jax.random.split(jax.random.fold_in(keys[1], si),
+                                    stage.n_repeat)
+        stage_params.append(jax.vmap(init_one)(rep_keys))
+    params["stages"] = stage_params
+    params["final_norm"] = rmsnorm_init(cfg.d_model, pdt)
+    if not cfg.tie_embeddings and not cfg.hashed_embedding:
+        params["lm_head"] = dense_init(keys[2], cfg.d_model, cfg.vocab_size, pdt)
+
+    if cfg.kind == "encdec":
+        enc_spec = LayerSpec(mixer="attn", mlp="dense")
+        def init_enc(k):
+            return {"l0": _layer_init(cfg, enc_spec, k)}
+        enc_keys = jax.random.split(keys[3], cfg.n_encoder_layers)
+        params["encoder"] = {
+            "stage": jax.vmap(init_enc)(enc_keys),
+            "final_norm": rmsnorm_init(cfg.d_model, pdt),
+        }
+        # decoder layers additionally get cross-attention
+        def init_one_x(k):
+            ks = jax.random.split(k, len(stages[0].specs))
+            return {f"l{i}": _layer_init(cfg, spec, ks[i], cross_attn=True)
+                    for i, spec in enumerate(stages[0].specs)}
+        rep_keys = jax.random.split(keys[4], stages[0].n_repeat)
+        params["stages"] = [jax.vmap(init_one_x)(rep_keys)]
+    return params
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
+    if cfg.hashed_embedding:
+        return hemb.hashed_embed(cfg, params["hashed_embed"], tokens)
+    return jnp.take(params["embed"]["table"], tokens, axis=0)
+
+
+def lm_logits(cfg: ModelConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    cdt = dt(cfg.precision.compute_dtype)
+    if cfg.hashed_embedding:
+        logits = hemb.hashed_logits(cfg, params["hashed_embed"], x)
+    elif cfg.tie_embeddings:
+        table = params["embed"]["table"].astype(cdt)
+        logits = jax.lax.dot_general(
+            x.astype(cdt), table.T, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        logits = matmul(x, params["lm_head"], cdt)
+    logits = constrain(logits, "dp", None, "model")
+    return logits.astype(dt(cfg.precision.logits_dtype))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill logits)
+# ---------------------------------------------------------------------------
+
+
+def _stage_scan(cfg, stage: Stage, stage_params, x, positions, pcfg,
+                enc_kv=None, remat=True):
+    def body(carry, rep_params):
+        h, aux = carry
+        for i, spec in enumerate(stage.specs):
+            h, a = _layer_batch(cfg, spec, rep_params[f"l{i}"], h, positions,
+                                pcfg, enc_kv=enc_kv)
+            aux = aux + a
+        return (h, aux), None
+
+    if remat and pcfg.remat == "dots":
+        # save matmul/collective outputs, recompute elementwise only:
+        # trades HBM for the backward re-gather traffic (Perf cell A it7)
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif remat and pcfg.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if pcfg.unroll_scan:
+        for r in range(stage.n_repeat):
+            rep = jax.tree_util.tree_map(lambda a: a[r], stage_params)
+            carry, _ = body(carry, rep)
+        x, aux = carry
+        return x, aux
+    (x, aux), _ = jax.lax.scan(body, carry, stage_params)
+    return x, aux
+
+
+def _run_encoder(cfg, params, frontend, pcfg):
+    enc_spec = LayerSpec(mixer="attn", mlp="dense")
+    x = frontend.astype(dt(cfg.precision.compute_dtype))
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, rep_params):
+        h = carry
+        hh = rmsnorm(rep_params["l0"]["norm1"], h, cfg.norm_eps)
+        out, _ = attn.gqa_batch(cfg, rep_params["l0"]["attn"], hh, positions,
+                                causal=False, impl=pcfg.attention_impl)
+        h = h + out
+        hh = rmsnorm(rep_params["l0"]["norm2"], h, cfg.norm_eps)
+        h = h + mlp_apply(rep_params["l0"]["mlp"], hh,
+                          dt(cfg.precision.compute_dtype))
+        return h, None
+
+    stage = params["encoder"]["stage"]
+    if pcfg.unroll_scan:
+        n_rep = jax.tree_util.tree_leaves(stage)[0].shape[0]
+        for r in range(n_rep):
+            x, _ = body(x, jax.tree_util.tree_map(lambda a: a[r], stage))
+    else:
+        x, _ = jax.lax.scan(body, x, stage)
+    return rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, batch: dict,
+            pcfg: ParallelConfig = ParallelConfig()):
+    """batch: {'tokens': (B, S_text)[, 'frontend': (B, P, D)]}.
+
+    Returns (logits (B, S_total, V), aux_loss scalar).
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    enc_kv = None
+    if cfg.kind == "encdec":
+        enc_out = _run_encoder(cfg, params, batch["frontend"], pcfg)
+        # precompute nothing: cross-attn projects per layer from enc_out
+        enc_positions = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+        enc_kv = ("enc_out", enc_out, enc_positions)
+    elif cfg.frontend is not None and "frontend" in batch:
+        fe = batch["frontend"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    x = constrain(x, "dp", None, None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    total_aux = jnp.zeros((), jnp.float32)
+    for stage, sp in zip(build_stages(cfg), params["stages"]):
+        x, aux = _stage_scan(cfg, stage, sp, x, positions, pcfg, enc_kv=enc_kv)
+        total_aux = total_aux + aux
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(cfg, params, x), total_aux
+
+
+# ---------------------------------------------------------------------------
+# caches / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                kv_dtype: str = "bfloat16") -> list:
+    quantized = kv_dtype == "int8"
+    caches = []
+    for stage in build_stages(cfg):
+        entry = {f"l{i}": _layer_cache(cfg, spec, batch, max_len, quantized)
+                 for i, spec in enumerate(stage.specs)}
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (stage.n_repeat,) + a.shape),
+            entry)
+        caches.append(stacked)
+    return caches
+
+
+def decode_step(cfg: ModelConfig, params, caches: list, tokens: jnp.ndarray,
+                pos, pcfg: ParallelConfig = ParallelConfig(), enc_out=None):
+    """tokens: (B, 1) int32; pos: scalar int32 current position.
+
+    Returns (logits (B, 1, V), new_caches).
+    """
+    x = embed_tokens(cfg, params, tokens)
+    enc_kv = None
+    if cfg.kind == "encdec" and enc_out is not None:
+        enc_kv = ("raw", enc_out, jnp.arange(enc_out.shape[1], dtype=jnp.int32))
+    new_caches = []
+    for stage, sp, cache in zip(build_stages(cfg), params["stages"], caches):
+        def body(carry, xs):
+            h = carry
+            rep_params, rep_cache = xs
+            new_entries = {}
+            for i, spec in enumerate(stage.specs):
+                kv = None
+                if enc_kv is not None:
+                    _, eo, _ = enc_kv
+                    kv = _project_cross_kv(cfg, rep_params[f"l{i}"]["xattn"], eo)
+                h, entry = _layer_decode(cfg, spec, rep_params[f"l{i}"], h,
+                                         rep_cache[f"l{i}"], pos,
+                                         enc_kv=kv)
+                new_entries[f"l{i}"] = entry
+            return h, new_entries
+
+        if pcfg.unroll_scan:
+            outs = []
+            for r in range(stage.n_repeat):
+                xs_r = jax.tree_util.tree_map(lambda a: a[r], (sp, cache))
+                x, upd = body(x, xs_r)
+                outs.append(upd)
+            updated = jax.tree_util.tree_map(
+                lambda *leaves: jnp.stack(leaves), *outs)
+        else:
+            x, updated = jax.lax.scan(body, x, (sp, cache))
+        new_caches.append(updated)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(cfg, params, x), new_caches
+
+
+def prefill(cfg: ModelConfig, params, batch: dict, max_len: int,
+            pcfg: ParallelConfig = ParallelConfig(),
+            kv_dtype: str = "bfloat16"):
+    """Run the batch path token-by-token-free prefill, returning logits and
+    caches seeded with the prompt.  Implementation: run forward() for the
+    logits, then replay per-layer batch mixers to collect K/V/state (memory
+    identical to forward; double compute is accepted on the serving prefill
+    path off-TPU — the pallas path fuses this on real hardware)."""
+    logits, _ = forward(cfg, params, batch, pcfg)
+    caches = init_caches(cfg, batch["tokens"].shape[0], max_len, kv_dtype)
+    x = embed_tokens(cfg, params, batch["tokens"])
+    if cfg.frontend is not None and cfg.kind != "encdec" and "frontend" in batch:
+        x = jnp.concatenate([batch["frontend"].astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    s = x.shape[1]
+    quantized = kv_dtype == "int8"
+    new_caches = []
+    for stage, sp, cache in zip(build_stages(cfg), params["stages"], caches):
+        def body(carry, xs):
+            h = carry
+            rep_params, rep_cache = xs
+            new_entries = {}
+            for i, spec in enumerate(stage.specs):
+                p_l = rep_params[f"l{i}"]
+                hh = rmsnorm(p_l["norm1"], h, cfg.norm_eps)
+                mixer_key = _MIXER_KEY[spec.mixer]
+                out, state = _MIXER_BATCH[spec.mixer](
+                    cfg, p_l[mixer_key], hh, positions)
+                h = h + out
+                entry = dict(rep_cache[f"l{i}"])
+                mc = dict(entry["mixer"])
+                if spec.mixer == "attn":
+                    k_new, v_new = state
+                    if quantized:
+                        kq, ks = attn.quantize_kv(k_new)
+                        vq, vs = attn.quantize_kv(v_new)
+                        mc["k"] = jax.lax.dynamic_update_slice(
+                            mc["k"], kq, (0, 0, 0, 0))
+                        mc["v"] = jax.lax.dynamic_update_slice(
+                            mc["v"], vq, (0, 0, 0, 0))
+                        mc["k_scale"] = jax.lax.dynamic_update_slice(
+                            mc["k_scale"], ks, (0, 0, 0, 0))
+                        mc["v_scale"] = jax.lax.dynamic_update_slice(
+                            mc["v_scale"], vs, (0, 0, 0, 0))
+                    else:
+                        mc["k"] = jax.lax.dynamic_update_slice(
+                            mc["k"], k_new.astype(mc["k"].dtype), (0, 0, 0, 0))
+                        mc["v"] = jax.lax.dynamic_update_slice(
+                            mc["v"], v_new.astype(mc["v"].dtype), (0, 0, 0, 0))
+                elif spec.mixer == "mla":
+                    c_kv, k_rope = state
+                    if quantized:
+                        cq, cs = attn.quantize_kv(c_kv)
+                        mc["c_kv"] = jax.lax.dynamic_update_slice(
+                            mc["c_kv"], cq, (0, 0, 0))
+                        mc["c_scale"] = jax.lax.dynamic_update_slice(
+                            mc["c_scale"], cs, (0, 0, 0))
+                    else:
+                        mc["c_kv"] = jax.lax.dynamic_update_slice(
+                            mc["c_kv"], c_kv.astype(mc["c_kv"].dtype), (0, 0, 0))
+                    mc["k_rope"] = jax.lax.dynamic_update_slice(
+                        mc["k_rope"], k_rope.astype(mc["k_rope"].dtype),
+                        (0, 0, 0))
+                else:
+                    mc = jax.tree_util.tree_map(
+                        lambda _, s_new: s_new.astype(_.dtype), mc, state)
+                entry["mixer"] = mc
+                new_entries[f"l{i}"] = entry
+                if spec.mlp == "dense":
+                    hh = rmsnorm(p_l["norm2"], h, cfg.norm_eps)
+                    h = h + mlp_apply(p_l["mlp"], hh,
+                                      dt(cfg.precision.compute_dtype))
+                elif spec.mlp == "moe":
+                    hh = rmsnorm(p_l["norm2"], h, cfg.norm_eps)
+                    out, _ = moe_mod.moe_apply(cfg, p_l["moe"], hh)
+                    h = h + out
+            return h, new_entries
+
+        x, updated = jax.lax.scan(body, x, (sp, cache))
+        new_caches.append(updated)
+    return logits, new_caches

@@ -1,0 +1,219 @@
+"""xLSTM mixers: mLSTM (matrix memory, exp gating) and sLSTM (scalar memory).
+
+Faithful to the xLSTM paper's cell equations (exponential input gate,
+sigmoid/exp forget gate, max-stabiliser state m, normaliser state n):
+
+  mLSTM:  C_t = f C_{t-1} + i v_t k_t^T,  n_t = f n_{t-1} + i k_t,
+          h_t = o * (C_t q_t) / max(|n_t . q_t|, 1)
+  sLSTM:  c_t = f c_{t-1} + i z_t,        n_t = f n_{t-1} + i,
+          h_t = o * c_t / n_t            (per-head recurrent R weights)
+
+Both run as lax.scan over time (state O(B*H*dh^2) resp. O(B*d)); decode is a
+single recurrent step — this is what makes long_500k O(1)-per-token for the
+ssm family.  Stabilisation follows Appendix A of the paper: all gate math in
+f32 with running log-max m_t.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, dt, matmul
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    """(inner_dim, head_dim) with the xLSTM up-projection factor."""
+    pf = cfg.xlstm.proj_factor if cfg.xlstm is not None else 2.0
+    inner = int(pf * cfg.d_model)
+    return inner, inner // cfg.n_heads
+
+
+def mlstm_init(cfg: ModelConfig, key) -> dict:
+    """xLSTM mLSTM block: up-projection (x2, with a gating branch),
+    BLOCK-DIAGONAL per-head q/k/v (the paper's parameter-efficient form),
+    matrix-memory cell, down-projection."""
+    d, h = cfg.d_model, cfg.n_heads
+    inner, dh = _mlstm_dims(cfg)
+    pdt = dt(cfg.precision.param_dtype)
+    ks = jax.random.split(key, 7)
+
+    def headwise(k):
+        return (jax.random.normal(k, (h, dh, dh), jnp.float32)
+                * (1.0 / dh) ** 0.5).astype(pdt)
+
+    return {
+        "w_up": dense_init(ks[0], d, inner, pdt),
+        "w_z": dense_init(ks[1], d, inner, pdt),  # gating branch
+        "wq": headwise(ks[2]),
+        "wk": headwise(ks[3]),
+        "wv": headwise(ks[4]),
+        "w_i": dense_init(ks[5], d, h, pdt),
+        "w_f": dense_init(ks[6], d, h, pdt),
+        "w_down": dense_init(jax.random.fold_in(ks[0], 7), inner, d, pdt),
+    }
+
+
+def _mlstm_qkv_gates(cfg, params, x):
+    cdt = dt(cfg.precision.compute_dtype)
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    inner, dh = _mlstm_dims(cfg)
+    xm = matmul(x, params["w_up"], cdt).reshape(b, s, h, dh).astype(cdt)
+    q = jnp.einsum("bshd,hde->bshe", xm, params["wq"].astype(cdt),
+                   preferred_element_type=jnp.float32) / (dh ** 0.5)
+    k = jnp.einsum("bshd,hde->bshe", xm, params["wk"].astype(cdt),
+                   preferred_element_type=jnp.float32)
+    v = jnp.einsum("bshd,hde->bshe", xm, params["wv"].astype(cdt),
+                   preferred_element_type=jnp.float32)
+    i_pre = matmul(x, params["w_i"], cdt)  # (B,S,H) log-space input gate
+    f_pre = matmul(x, params["w_f"], cdt)  # (B,S,H)
+    z = matmul(x, params["w_z"], cdt)  # (B,S,inner) output gating branch
+    return (q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), i_pre.astype(jnp.float32),
+            f_pre.astype(jnp.float32), z.astype(jnp.float32))
+
+
+def _mlstm_step(state, inp):
+    c, n, m = state  # (B,H,dh,dh), (B,H,dh), (B,H)
+    qt, kt, vt, it, ft = inp  # (B,H,dh) x3, (B,H) x2
+    log_f = -jax.nn.softplus(-ft)  # log sigmoid(f)
+    m_new = jnp.maximum(log_f + m, it)
+    i_s = jnp.exp(it - m_new)[..., None]  # (B,H,1)
+    f_s = jnp.exp(log_f + m - m_new)[..., None]
+    c = f_s[..., None] * c + i_s[..., None] * vt[..., :, None] * kt[..., None, :]
+    n = f_s * n + i_s * kt
+    num = jnp.einsum("bhvk,bhk->bhv", c, qt)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+    h_t = num / den[..., None]
+    return (c, n, m_new), h_t
+
+
+def mlstm_batch(cfg: ModelConfig, params, x, positions=None):
+    cdt = dt(cfg.precision.compute_dtype)
+    b, s, d = x.shape
+    h = cfg.n_heads
+    inner, dh = _mlstm_dims(cfg)
+    q, k, v, i_pre, f_pre, z = _mlstm_qkv_gates(cfg, params, x)
+    # reorder (B,S,H,*) -> (S,B,H,*) for the time scan
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+          jnp.moveaxis(i_pre, 1, 0), jnp.moveaxis(f_pre, 1, 0))
+    state0 = (
+        jnp.zeros((b, h, dh, dh), jnp.float32),
+        jnp.zeros((b, h, dh), jnp.float32),
+        jnp.full((b, h), -1e30, jnp.float32),
+    )
+    state, hs = jax.lax.scan(_mlstm_step, state0, xs)
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, inner)  # (B,S,inner)
+    y = y * jax.nn.silu(z)  # output gating branch
+    out = matmul(y.astype(cdt), params["w_down"], cdt).astype(x.dtype)
+    return out, {"c": state[0], "n": state[1], "m": state[2]}
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, max_len: int, quantized: bool):
+    h = cfg.n_heads
+    _, dh = _mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(cfg: ModelConfig, params, x, cache: dict, pos=None):
+    cdt = dt(cfg.precision.compute_dtype)
+    b = x.shape[0]
+    inner, dh = _mlstm_dims(cfg)
+    q, k, v, i_pre, f_pre, z = _mlstm_qkv_gates(cfg, params, x)
+    state = (cache["c"], cache["n"], cache["m"])
+    state, h_t = _mlstm_step(state, (q[:, 0], k[:, 0], v[:, 0],
+                                     i_pre[:, 0], f_pre[:, 0]))
+    y = h_t.reshape(b, 1, inner) * jax.nn.silu(z)
+    out = matmul(y.astype(cdt), params["w_down"], cdt).astype(x.dtype)
+    return out, {"c": state[0], "n": state[1], "m": state[2]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    pdt = dt(cfg.precision.param_dtype)
+    ks = jax.random.split(key, 9)
+    p = {}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}" if g == "z" else f"w_{g}"] = dense_init(ks[i], d, d, pdt)
+        p[f"r_{g}"] = dense_init(ks[4 + i], d, d, pdt, scale=0.5 / d ** 0.5)
+    p["out_proj"] = dense_init(ks[8], d, d, pdt)
+    return p
+
+
+def _slstm_step(cfg, params, state, xt):
+    """state: (c, n, m, h_prev) each (B, d); xt: (B, d) f32 pre-acts dict."""
+    c, n, m, h_prev = state
+    cdt = dt(cfg.precision.compute_dtype)
+
+    def pre(wname, rname):
+        return (xt[wname]
+                + matmul(h_prev.astype(cdt), params[rname], cdt))
+
+    z = jnp.tanh(pre("wz", "r_z"))
+    i_pre = pre("w_i", "r_i")
+    f_pre = pre("w_f", "r_f")
+    o = jax.nn.sigmoid(pre("w_o", "r_o"))
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c = f_s * c + i_s * z
+    n = f_s * n + i_s
+    h = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new, h), h
+
+
+def _slstm_preacts(cfg, params, x):
+    cdt = dt(cfg.precision.compute_dtype)
+    return {name: matmul(x, params[name], cdt)
+            for name in ("wz", "w_i", "w_f", "w_o")}
+
+
+def slstm_batch(cfg: ModelConfig, params, x, positions=None):
+    cdt = dt(cfg.precision.compute_dtype)
+    b, s, d = x.shape
+    pre = _slstm_preacts(cfg, params, x)
+    xs = {k2: jnp.moveaxis(v, 1, 0) for k2, v in pre.items()}
+    state0 = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+              jnp.full((b, d), -1e30, jnp.float32), jnp.zeros((b, d), jnp.float32))
+    state, hs = jax.lax.scan(
+        lambda st, xt: _slstm_step(cfg, params, st, xt), state0, xs)
+    y = jnp.moveaxis(hs, 0, 1)
+    out = matmul(y.astype(cdt), params["out_proj"], cdt).astype(x.dtype)
+    return out, {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, max_len: int, quantized: bool):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def slstm_decode(cfg: ModelConfig, params, x, cache: dict, pos=None):
+    cdt = dt(cfg.precision.compute_dtype)
+    pre = _slstm_preacts(cfg, params, x)
+    xt = {k2: v[:, 0] for k2, v in pre.items()}
+    state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    state, h = _slstm_step(cfg, params, state, xt)
+    out = matmul(h[:, None].astype(cdt), params["out_proj"], cdt).astype(x.dtype)
+    return out, {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}

@@ -1,0 +1,118 @@
+"""Cross-pod gradient compression: EF-SignSGD with packed sign bits.
+
+At 512+ chips the inter-pod hop (DCN) is the slow link; intra-pod ICI is an
+order of magnitude faster.  This module compresses ONLY the cross-pod
+gradient reduction:
+
+  1. within-pod mean over ('data',) happens in the backward pass as usual;
+  2. signs of the pod-local gradient are packed 32/lane into int32 using the
+     paper's bit-packing substrate (repro.core.packing semantics — same
+     LSB-first layout as Cabin sketches),
+  3. packed words are all-gathered across 'pod' (16x fewer bytes than bf16,
+     32x fewer than f32),
+  4. pods combine by majority vote (popcount over the pod axis) scaled by
+     the mean |g| (1-bit SGD's scale restoration),
+  5. the compression residual e = g - decompress(compress(g)) is fed back
+     into the next step's gradient (error feedback keeps convergence).
+
+All steps are jnp inside shard_map over the pod axis; the packed all-gather
+is the only cross-pod collective in the compressed path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _pack_signs_1d(g: jnp.ndarray) -> jnp.ndarray:
+    """g: (n,) float -> (ceil(n/32),) int32 of sign bits (1 = positive)."""
+    n = g.shape[0]
+    pad = (-n) % 32
+    bits = (g >= 0).astype(jnp.uint32)
+    if pad:
+        bits = jnp.concatenate([bits, jnp.zeros((pad,), jnp.uint32)])
+    lanes = bits.reshape(-1, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(lanes << shifts, axis=-1, dtype=jnp.uint32).astype(jnp.int32)
+
+
+def _unpack_signs_1d(words: jnp.ndarray, n: int) -> jnp.ndarray:
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words.astype(jnp.uint32)[:, None] >> shifts) & jnp.uint32(1)
+    signs = bits.reshape(-1)[:n].astype(jnp.float32) * 2.0 - 1.0
+    return signs
+
+
+def compress_decompress_local(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-device reference: returns (reconstruction, packed_words)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    words = _pack_signs_1d(flat)
+    scale = jnp.mean(jnp.abs(flat))
+    recon = (_unpack_signs_1d(words, flat.shape[0]) * scale).reshape(g.shape)
+    return recon.astype(g.dtype), words
+
+
+def cross_pod_sign_allreduce(g: jnp.ndarray, axis_name: str = "pod"):
+    """Inside shard_map: combine pod-local mean gradients by sign majority.
+
+    g: pod-local gradient (already reduced within the pod).  Returns the
+    sign-majority combined gradient with magnitude = mean over pods of
+    mean|g|.  Communication: one all-gather of packed int32 (n/32 words) and
+    one psum of a scalar, instead of psum of n floats.
+    """
+    flat = g.reshape(-1).astype(jnp.float32)
+    words = _pack_signs_1d(flat)
+    n_pods = jax.lax.psum(1, axis_name)
+    all_words = jax.lax.all_gather(words, axis_name)  # (P, n/32) int32
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (all_words.astype(jnp.uint32)[..., None] >> shifts) & jnp.uint32(1)
+    votes = jnp.sum(bits, axis=0)  # (n/32, 32) counts of positive votes
+    majority = (votes * 2 >= n_pods).reshape(-1)[: flat.shape[0]]
+    signs = majority.astype(jnp.float32) * 2.0 - 1.0
+    scale = jax.lax.pmean(jnp.mean(jnp.abs(flat)), axis_name)
+    return (signs * scale).reshape(g.shape).astype(g.dtype)
+
+
+def ef_correct(grads, error_feedback):
+    """g_tilde = g + e (error feedback injection)."""
+    if error_feedback is None:
+        return grads
+    return jax.tree_util.tree_map(
+        lambda g, e: g + e.astype(g.dtype), grads, error_feedback)
+
+
+def ef_residual(grads_corrected, grads_applied):
+    """e' = g_tilde - applied."""
+    return jax.tree_util.tree_map(
+        lambda gt, ga: (gt.astype(jnp.float32) - ga.astype(jnp.float32)),
+        grads_corrected, grads_applied)
+
+
+def compress_tree_cross_pod(grads, mesh, error_feedback=None):
+    """shard_map wrapper applying cross-pod sign compression to a grad tree.
+
+    Only used when the mesh has a 'pod' axis; grads are assumed already
+    psum-med over 'data' (pjit backward does this).  Returns
+    (combined_grads, new_error_feedback).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    corrected = ef_correct(grads, error_feedback)
+
+    def comm(g):
+        return cross_pod_sign_allreduce(g, "pod")
+
+    def one(g):
+        fn = shard_map(
+            comm, mesh=mesh,
+            in_specs=P(),  # replicated within pod for optimizer-visible grads
+            out_specs=P(),
+            check_rep=False,
+        )
+        return fn(g)
+
+    applied = jax.tree_util.tree_map(one, corrected)
+    new_ef = ef_residual(corrected, applied)
+    return applied, new_ef

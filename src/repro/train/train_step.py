@@ -1,0 +1,132 @@
+"""Training step: loss, microbatched gradients, optimizer update.
+
+Built for pjit: the exported `make_train_step(cfg, pcfg, tcfg)` returns a
+pure function (params, opt_state, batch, rng) -> (params, opt_state,
+metrics) that the launcher jits with in/out shardings.  Features:
+
+  * cross-entropy with z-loss (logit drift control at scale),
+  * frontend-token masking for VLM (loss only on text positions),
+  * gradient accumulation over `pcfg.microbatches` via lax.scan (activation
+    memory / collective-size knob),
+  * remat policy inherited from the model stack (pcfg.remat),
+  * optional cross-pod EF-sign gradient compression hook (pcfg.grad_compress_pods)
+    applied by the launcher between grad and optimizer (see launch/train.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.distributed.sharding import constrain, current_mesh, param_specs
+from repro.models import transformer as T
+from repro.train import optimizer as opt
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None, z_loss: float):
+    """logits (B, S, V) f32, labels (B, S) int32. Returns (loss, metrics)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    zl = z_loss * lse**2
+    per_tok = nll + zl
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (per_tok * mask).sum() / denom
+    acc = ((logits.argmax(-1) == labels) * mask).sum() / denom
+    return loss, {"nll": (nll * mask).sum() / denom, "accuracy": acc}
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict,
+            pcfg: ParallelConfig, tcfg: TrainConfig):
+    logits, aux = T.forward(cfg, params, batch, pcfg)
+    labels = batch["labels"]
+    if cfg.frontend is not None and cfg.kind != "encdec":
+        # VLM: logits cover [frontend; text]; loss on text positions only.
+        logits = logits[:, cfg.n_frontend_tokens:, :]
+    mask = batch.get("mask")
+    loss, metrics = cross_entropy(logits, labels, mask, tcfg.z_loss)
+    metrics["aux_loss"] = aux
+    metrics["loss"] = loss + aux
+    return loss + aux, metrics
+
+
+def _split_microbatches(batch: dict, n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} must divide microbatches {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def grads_fn(cfg: ModelConfig, params, batch: dict,
+             pcfg: ParallelConfig, tcfg: TrainConfig):
+    """Returns (grads, metrics) with microbatch accumulation."""
+    vg = jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b, pcfg, tcfg), has_aux=True)
+
+    if pcfg.microbatches <= 1:
+        (loss, metrics), grads = vg(params, batch)
+        return grads, metrics
+
+    micro = _split_microbatches(batch, pcfg.microbatches)
+
+    def body(carry, mb):
+        acc_g, acc_m = carry
+        (loss, metrics), grads = vg(params, mb)
+        acc_g = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), acc_g, grads)
+        acc_m = jax.tree_util.tree_map(lambda a, m: a + m, acc_m, metrics)
+        return (acc_g, acc_m), None
+
+    zeros_g = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zeros_m = {"nll": 0.0, "accuracy": 0.0, "aux_loss": 0.0, "loss": 0.0}
+    zeros_m = jax.tree_util.tree_map(jnp.float32, zeros_m)
+    (grads, metrics), _ = jax.lax.scan(body, (zeros_g, zeros_m), micro)
+    inv = 1.0 / pcfg.microbatches
+    grads = jax.tree_util.tree_map(
+        lambda g: (g * inv), grads)
+    metrics = jax.tree_util.tree_map(lambda m: m * inv, metrics)
+    grads = jax.tree_util.tree_map(
+        lambda g, p: g.astype(p.dtype) if p.dtype == jnp.float32 else g,
+        grads, params)
+    return grads, metrics
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainConfig,
+                    grad_hook=None):
+    """grad_hook: optional (grads, hook_state) -> (grads, hook_state) applied
+    before the optimizer (used for cross-pod sign compression)."""
+
+    def train_step(params, opt_state, batch, hook_state=None):
+        batch = {k: constrain(v, "dp", *([None] * (v.ndim - 1)))
+                 for k, v in batch.items()}
+        grads, metrics = grads_fn(cfg, params, batch, pcfg, tcfg)
+        if current_mesh() is not None:
+            # Pin gradients to the parameter layout straight out of the
+            # backward pass: turns the data-axis gradient sync into
+            # reduce-scatters landing on the ZeRO shards instead of full
+            # f32 all-reduce + slice (EXPERIMENTS.md section Perf, cell A
+            # iteration 6 — 45 GB/layer of expert grads at deepseek-v3).
+            import jax as _jax
+
+            specs = param_specs(grads)
+            grads = _jax.tree_util.tree_map(
+                lambda g, s: _jax.lax.with_sharding_constraint(g, s),
+                grads, specs)
+        if grad_hook is not None:
+            grads, hook_state = grad_hook(grads, hook_state)
+        params, opt_state, opt_metrics = opt.apply_updates(
+            tcfg, params, grads, opt_state)
+        metrics.update(opt_metrics)
+        if grad_hook is not None:
+            return params, opt_state, metrics, hook_state
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,104 @@
+"""Training loop: checkpoint/resume, heartbeats, straggler tracking, metrics.
+
+The Trainer is deliberately thin: all heavy lifting is in the jitted step
+function built by make_train_step; the loop owns restart semantics (resume
+from latest checkpoint — restart-safe because the data pipeline is seeded
+and the step index replays its position) and failure-injection hooks used by
+the fault-tolerance tests.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig, ParallelConfig, TrainConfig
+from repro.models import transformer as T
+from repro.runtime.fault_tolerance import HeartbeatWriter, StragglerMonitor
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerReport:
+    steps_run: int = 0
+    final_step: int = 0
+    metrics_history: list[dict] = field(default_factory=list)
+    resumed_from: int | None = None
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        pcfg: ParallelConfig,
+        tcfg: TrainConfig,
+        batch_iter,
+        ckpt_dir: str,
+        ckpt_every: int = 50,
+        host_id: int = 0,
+        heartbeat_dir: str | None = None,
+        jit: bool = True,
+    ):
+        self.cfg, self.pcfg, self.tcfg = cfg, pcfg, tcfg
+        self.batch_iter = batch_iter
+        self.ckpt = Checkpointer(ckpt_dir, keep=3)
+        self.ckpt_every = ckpt_every
+        self.heartbeat = (HeartbeatWriter(heartbeat_dir, host_id)
+                          if heartbeat_dir else None)
+        self.straggler = StragglerMonitor()
+        self.host_id = host_id
+        step_fn = make_train_step(cfg, pcfg, tcfg)
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1)) if jit else step_fn
+
+    # -- state --------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        params = T.init_params(self.cfg, jax.random.PRNGKey(seed))
+        opt_state = opt.init_state(params, self.cfg.precision.moment_dtype)
+        return params, opt_state, 0
+
+    def restore_or_init(self, seed: int = 0):
+        params, opt_state, step = self.init_state(seed)
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return params, opt_state, 0, None
+        state, _ = self.ckpt.restore({"params": params, "opt": opt_state})
+        return state["params"], state["opt"], latest, latest
+
+    # -- loop ---------------------------------------------------------------
+    def run(self, n_steps: int, seed: int = 0,
+            fail_at: int | None = None,
+            on_metrics: Callable[[int, dict], None] | None = None
+            ) -> TrainerReport:
+        params, opt_state, start, resumed = self.restore_or_init(seed)
+        report = TrainerReport(resumed_from=resumed)
+        step = start
+        while step < n_steps:
+            if fail_at is not None and step == fail_at:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = next(self.batch_iter)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            dt_step = time.perf_counter() - t0
+            self.straggler.record(self.host_id, dt_step)
+            step += 1
+            report.steps_run += 1
+            report.metrics_history.append({"step": step, **metrics,
+                                           "sec": dt_step})
+            if self.heartbeat:
+                self.heartbeat.beat(step, {"loss": metrics.get("loss")})
+            if on_metrics:
+                on_metrics(step, metrics)
+            if step % self.ckpt_every == 0 or step == n_steps:
+                self.ckpt.save(step, {"params": params, "opt": opt_state})
+        self.ckpt.wait()
+        report.final_step = step
+        self._final = (params, opt_state)
+        return report

@@ -1,0 +1,158 @@
+"""Tests for baseline sketches, clustering metrics and k-mode."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import CabinParams
+from repro.core.baselines import (
+    BaselineParams,
+    bcs_estimate,
+    bcs_sketch,
+    fh_estimate,
+    fh_sketch,
+    hlsh_estimate,
+    hlsh_sketch,
+    simhash_estimate,
+    simhash_sketch,
+)
+from repro.core.cabin import binem
+from repro.core.kmode import kmode, kmode_precomputed
+from repro.core.metrics import ari, nmi, purity
+
+
+def _binary_pair(rng, n, density):
+    bits = np.zeros((2, n), np.int32)
+    common = rng.choice(n, size=density // 2, replace=False)
+    bits[:, common] = 1
+    for r in range(2):
+        extra = rng.choice(n, size=density // 2, replace=False)
+        bits[r, extra] = 1
+    return bits
+
+
+def test_bcs_estimator_mean():
+    rng = np.random.default_rng(0)
+    n, density, d = 4000, 300, 2048
+    bits = _binary_pair(rng, n, density)
+    true_hd = int((bits[0] != bits[1]).sum())
+    ests = []
+    for seed in range(24):
+        p = BaselineParams(n, d, seed)
+        y = bcs_sketch(p, jnp.asarray(bits))
+        ests.append(float(bcs_estimate(p, y[0], y[1])))
+    assert abs(np.mean(ests) - true_hd) < 0.15 * true_hd + 10
+
+
+def test_hlsh_estimator_mean():
+    rng = np.random.default_rng(1)
+    n, density, d = 4000, 300, 2048
+    bits = _binary_pair(rng, n, density)
+    true_hd = int((bits[0] != bits[1]).sum())
+    ests = []
+    for seed in range(24):
+        p = BaselineParams(n, d, seed)
+        y = hlsh_sketch(p, jnp.asarray(bits))
+        ests.append(float(hlsh_estimate(p, y[0], y[1])))
+    assert abs(np.mean(ests) - true_hd) < 0.25 * true_hd + 10
+
+
+def test_fh_estimator_mean():
+    rng = np.random.default_rng(2)
+    n, density, d = 4000, 300, 2048
+    bits = _binary_pair(rng, n, density)
+    true_hd = int((bits[0] != bits[1]).sum())
+    wu, wv = float(bits[0].sum()), float(bits[1].sum())
+    ests = []
+    for seed in range(24):
+        p = BaselineParams(n, d, seed)
+        y = fh_sketch(p, jnp.asarray(bits))
+        ests.append(float(fh_estimate(p, y[0], y[1], wu, wv)))
+    assert abs(np.mean(ests) - true_hd) < 0.15 * true_hd + 10
+
+
+def test_simhash_estimator_mean():
+    rng = np.random.default_rng(3)
+    n, density, d = 1000, 120, 512
+    bits = _binary_pair(rng, n, density)
+    true_hd = int((bits[0] != bits[1]).sum())
+    wu, wv = float(bits[0].sum()), float(bits[1].sum())
+    p = BaselineParams(n, d, 0)
+    y = simhash_sketch(p, jnp.asarray(bits))
+    est = float(simhash_estimate(p, y[0], y[1], wu, wv))
+    assert abs(est - true_hd) < 0.35 * true_hd + 15
+
+
+def test_binem_feeds_baselines():
+    # Full paper comparison path: categorical -> BinEm -> baseline sketch.
+    rng = np.random.default_rng(4)
+    n, c = 1000, 10
+    x = rng.integers(0, c + 1, size=(2, n)).astype(np.int32)
+    p = CabinParams.create(n, 256, seed=0)
+    u1 = binem(p, jnp.asarray(x))
+    bp = BaselineParams(n, 256, 0)
+    assert bcs_sketch(bp, u1).shape == (2, 256)
+    assert fh_sketch(bp, u1).shape == (2, 256)
+    assert hlsh_sketch(bp, u1).shape == (2, 256)
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_perfect_clustering():
+    truth = np.asarray([0, 0, 1, 1, 2, 2])
+    assert purity(truth, truth) == 1.0
+    assert nmi(truth, truth) > 0.999
+    assert ari(truth, truth) == 1.0
+
+
+def test_metrics_label_permutation_invariant():
+    truth = np.asarray([0, 0, 1, 1, 2, 2])
+    pred = np.asarray([2, 2, 0, 0, 1, 1])
+    assert purity(truth, pred) == 1.0
+    assert ari(truth, pred) == 1.0
+
+
+def test_metrics_random_clustering_low():
+    rng = np.random.default_rng(0)
+    truth = np.repeat(np.arange(4), 50)
+    pred = rng.integers(0, 4, size=200)
+    assert ari(truth, pred) < 0.15
+    assert nmi(truth, pred) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# k-mode
+# ---------------------------------------------------------------------------
+
+
+def _clustered_categorical(rng, k, per, n, c, noise=0.05):
+    centers = rng.integers(1, c + 1, size=(k, n)).astype(np.int32)
+    rows, labels = [], []
+    for ci in range(k):
+        for _ in range(per):
+            row = centers[ci].copy()
+            flip = rng.random(n) < noise
+            row[flip] = rng.integers(1, c + 1, size=int(flip.sum()))
+            rows.append(row)
+            labels.append(ci)
+    return np.stack(rows), np.asarray(labels)
+
+
+def test_kmode_recovers_separable_clusters():
+    rng = np.random.default_rng(5)
+    x, truth = _clustered_categorical(rng, k=3, per=30, n=120, c=6)
+    labels, _ = kmode(x, k=3, seed=1, n_categories=6)
+    assert purity(truth, labels) > 0.9
+
+
+def test_kmode_precomputed_with_exact_distance():
+    rng = np.random.default_rng(6)
+    x, truth = _clustered_categorical(rng, k=3, per=25, n=100, c=5)
+
+    def dist(a, b):
+        return (a[:, None, :] != b[None, :, :]).sum(-1)
+
+    labels = kmode_precomputed(dist, x, k=3, seed=1)
+    assert purity(truth, labels) > 0.9

@@ -1,0 +1,47 @@
+"""Unit + property tests for bit-packing and popcount primitives."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+@given(st.integers(1, 300), st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(d, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(3, d)).astype(np.int32)
+    packed = packing.pack_bits(jnp.asarray(bits))
+    assert packed.shape == (3, packing.packed_width(d))
+    back = packing.unpack_bits(packed, d)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+@given(st.lists(st.integers(-(2**31), 2**31 - 1), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_popcount32_matches_python(words):
+    arr = jnp.asarray(np.asarray(words, dtype=np.int64).astype(np.int32))
+    got = np.asarray(packing.popcount32(arr))
+    want = [bin(w & 0xFFFFFFFF).count("1") for w in words]
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_packed_hamming_and_inner_match_unpacked(d, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2, size=d).astype(np.int32)
+    b = rng.integers(0, 2, size=d).astype(np.int32)
+    pa, pb = packing.pack_bits(jnp.asarray(a)), packing.pack_bits(jnp.asarray(b))
+    assert int(packing.packed_hamming(pa, pb)) == int((a != b).sum())
+    assert int(packing.packed_inner(pa, pb)) == int((a & b).sum())
+    assert int(packing.popcount_rows(pa)) == int(a.sum())
+
+
+def test_np_pack_matches_jnp():
+    rng = np.random.default_rng(7)
+    bits = rng.integers(0, 2, size=(5, 97)).astype(np.int32)
+    np.testing.assert_array_equal(
+        packing.np_pack_bits(bits), np.asarray(packing.pack_bits(jnp.asarray(bits)))
+    )

@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family configs,
+one forward + one train-ish step on CPU, shape and NaN assertions, plus
+decode-vs-forward autoregressive consistency for cached mixers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ParallelConfig, reduced_for_smoke
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import transformer as T
+
+PCFG = ParallelConfig(remat="none", sequence_parallel=False)
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(3, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.kind == "encdec" or cfg.frontend is not None:
+        batch["frontend"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nans(arch):
+    cfg = reduced_for_smoke(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = T.forward(cfg, params, batch, PCFG)
+    s_total = batch["tokens"].shape[1]
+    if cfg.frontend is not None and cfg.kind != "encdec":
+        s_total += cfg.n_frontend_tokens
+    assert logits.shape == (2, s_total, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_grad_step_no_nans(arch):
+    cfg = reduced_for_smoke(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg, s=8)
+    labels = jnp.roll(batch["tokens"], -1, axis=1)
+
+    def loss_fn(p):
+        logits, aux = T.forward(cfg, p, batch, PCFG)
+        logits = logits[:, -labels.shape[1]:, :]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - ll) + aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_matches_forward(arch):
+    cfg = reduced_for_smoke(get_config(arch))
+    params = T.init_params(cfg, jax.random.PRNGKey(2))
+    batch = _batch(cfg, s=12)
+    logits_f, _ = T.forward(cfg, params, batch, PCFG)
+    logits_p, caches = T.prefill(cfg, params, batch, max_len=24, pcfg=PCFG)
+    np.testing.assert_allclose(np.asarray(logits_f), np.asarray(logits_p),
+                               rtol=1e-4, atol=1e-4)
+    assert caches is not None
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "qwen2_7b", "deepseek_v3_671b",
+                                  "xlstm_350m", "jamba_v0_1_52b"])
+def test_decode_consistent_with_forward(arch):
+    """Teacher-forced decode after prefill reproduces forward() logits.
+
+    MoE configs get a no-drop capacity factor: capacity-based token dropping
+    legitimately differs between a 20-token forward and a 2-token decode
+    step, which is a property of capacity MoE, not of the cache."""
+    from dataclasses import replace
+
+    cfg = reduced_for_smoke(get_config(arch))
+    if cfg.moe is not None:
+        cfg = replace(cfg, moe=replace(cfg.moe, capacity_factor=64.0))
+    params = T.init_params(cfg, jax.random.PRNGKey(3))
+    b, s_pre, s_tot = 2, 6, 10
+    full = _batch(cfg, b=b, s=s_tot, seed=7)
+    pre = {k: (v[:, :s_pre] if k == "tokens" else v) for k, v in full.items()}
+    logits_full, _ = T.forward(cfg, params, full, PCFG)
+    _, caches = T.prefill(cfg, params, pre, max_len=s_tot, pcfg=PCFG)
+    offset = cfg.n_frontend_tokens if (cfg.frontend and cfg.kind != "encdec") else 0
+    for t in range(s_pre, s_tot):
+        # decode consumes the token AT position t (teacher forcing the true
+        # token) and must reproduce forward logits at position t.
+        tok = full["tokens"][:, t:t + 1]
+        logits_d, caches = T.decode_step(cfg, params, caches, tok,
+                                         jnp.int32(t + offset), PCFG)
+        want = logits_full[:, t + offset]
+        got = logits_d[:, 0]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_param_counts_full_configs_match_names():
+    """Full (non-reduced) configs produce parameter counts in the right
+    ballpark of their names, via abstract eval (no allocation)."""
+    import re
+
+    expected = {
+        "llama3_8b": 8.0e9,
+        "deepseek_7b": 6.9e9,
+        "qwen2_7b": 7.6e9,
+        "internlm2_1_8b": 1.8e9,
+        "deepseek_v3_671b": 671e9,
+        "dbrx_132b": 132e9,
+        "jamba_v0_1_52b": 52e9,
+        "xlstm_350m": 0.35e9,
+        "phi_3_vision_4_2b": 3.8e9,  # backbone only (vision tower stubbed)
+        "whisper_tiny": 0.037e9,
+    }
+    for arch, target in expected.items():
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(
+            lambda key: T.init_params(cfg, key), jax.random.PRNGKey(0))
+        n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(shapes))
+        assert 0.5 * target < n < 1.6 * target, (arch, n, target)
+
+
+def test_hashed_embedding_variant():
+    """CabinEmbed flag shrinks embedding params and still trains."""
+    from dataclasses import replace
+
+    cfg = reduced_for_smoke(get_config("llama3_8b"))
+    cfg = replace(cfg, hashed_embedding=True, hashed_embedding_buckets=64,
+                  hashed_embedding_k=2)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    assert "hashed_embed" in params and "embed" not in params
+    assert params["hashed_embed"]["table"].shape == (64, cfg.d_model)
+    batch = _batch(cfg, s=8)
+    logits, _ = T.forward(cfg, params, batch, PCFG)
+    assert logits.shape[-1] == cfg.vocab_size
+    assert bool(jnp.all(jnp.isfinite(logits)))
