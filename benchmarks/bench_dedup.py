@@ -9,8 +9,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.data.dedup import (dedup_by_sketch, dedup_exact,
-                              docs_to_categorical, sketch_corpus)
+from repro.data.dedup import (dedup_by_sketch, dedup_by_sketch_blocked,
+                              dedup_exact, docs_to_categorical, sketch_corpus)
 from repro.data.pipeline import synthetic_documents
 
 
@@ -41,3 +41,33 @@ def dedup_sketch_vs_exact(n_docs=256, vocab=32768, dup_fraction=0.25):
     emit("dedup.agreement", 0.0, f"{agree:.4f}")
     assert agree > 0.95
     return {"speedup": t_exact / (t_sketch + t_est), "agreement": agree}
+
+
+def dedup_streaming_vs_blocked(n_docs=2048, vocab=32768, dup_fraction=0.25,
+                               sketch_dim=1024, threshold=40.0):
+    """The engine rewire measured head-to-head at N >= 2048: streaming
+    device-resident candidate extraction (repro.core.allpairs) vs the seed
+    blocked scan (per-block host sync + np.where + per-pair union feed).
+    Both produce identical DedupResults; only the pairwise pass differs."""
+    gen = synthetic_documents(vocab, seed=11, dup_fraction=dup_fraction)
+    docs = [next(gen) for _ in range(n_docs)]
+    idx, val = docs_to_categorical(docs, vocab)
+    _, sk = sketch_corpus(idx, val, vocab, sketch_dim=sketch_dim, seed=0)
+
+    # warm both jitted paths, then measure steady state
+    res_s = dedup_by_sketch(sk, sketch_dim, threshold=threshold)
+    res_b = dedup_by_sketch_blocked(sk, sketch_dim, threshold=threshold)
+    assert np.array_equal(res_s.keep_mask, res_b.keep_mask)
+    t_stream, _ = timeit(
+        lambda: dedup_by_sketch(sk, sketch_dim, threshold=threshold),
+        repeat=3)
+    t_blocked, _ = timeit(
+        lambda: dedup_by_sketch_blocked(sk, sketch_dim, threshold=threshold),
+        repeat=3)
+    emit("dedup.streaming_pass", t_stream * 1e6 / n_docs,
+         f"n={n_docs};removed={res_s.n_removed}")
+    emit("dedup.blocked_pass", t_blocked * 1e6 / n_docs, f"n={n_docs}")
+    emit("dedup.streaming_speedup", t_stream * 1e6 / n_docs,
+         f"{t_blocked / t_stream:.2f}x")
+    return {"n_docs": n_docs, "t_streaming_s": t_stream,
+            "t_blocked_s": t_blocked, "speedup": t_blocked / t_stream}

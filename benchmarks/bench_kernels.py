@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import dataset, emit, timeit
 from repro.core import CabinParams
-from repro.core.cabin import sketch_dense
+from repro.core.cabin import sketch_dense, sketch_sparse_jnp
 from repro.core.cham import cham_matrix, hamming_matrix_exact
 from repro.core.packing import pack_bits, unpack_bits
 
@@ -72,3 +72,42 @@ def kernel_sketch_throughput(scale=0.05, n_rows=512, d=1024):
     emit("kernel.cabin_sketch", t * 1e6 / n_rows,
          f"n={spec.n_dims};d={d}")
     return {"us_per_row": t * 1e6 / n_rows}
+
+
+def bench_sparse_sketch(n_rows=1024, n_dims=1 << 20, nnz=200, d=1024):
+    """Sparse-Cabin path at Table-1 dimensionality (n ~ 1M).
+
+    The padded-COO path is the only one that can even RUN here — a dense
+    (n_rows, 1M) matrix would be 4 GB — so the comparison point is the dense
+    path at the largest n that fits comfortably (16k), scaled per dimension.
+    On TPU the fused cabin_build_sparse kernel replaces the scatter; what is
+    measurable on CPU is the layout win itself: cost O(N*m) vs O(N*n).
+    """
+    rng = np.random.default_rng(0)
+    idx = np.zeros((n_rows, nnz), np.int32)
+    val = np.zeros((n_rows, nnz), np.int32)
+    for i in range(n_rows):
+        idx[i] = rng.choice(n_dims, size=nnz, replace=False)
+        val[i] = rng.integers(1, 15, size=nnz)
+    cp = CabinParams.create(n_dims, d, seed=0)
+    sparse_jit = jax.jit(sketch_sparse_jnp, static_argnums=0)
+    idx_j, val_j = jnp.asarray(idx), jnp.asarray(val)
+    t_sparse, _ = timeit(lambda: sparse_jit(cp, idx_j, val_j), repeat=3)
+    emit("kernel.sparse_sketch", t_sparse * 1e6 / n_rows,
+         f"n={n_dims};nnz={nnz};d={d}")
+
+    n_small = 1 << 14
+    cp_s = CabinParams.create(n_small, d, seed=0)
+    dense = np.zeros((n_rows, n_small), np.int32)
+    dense[np.arange(n_rows)[:, None], idx % n_small] = val
+    dense_jit = jax.jit(sketch_dense, static_argnums=0)
+    xj = jnp.asarray(dense)
+    t_dense, _ = timeit(lambda: dense_jit(cp_s, xj), repeat=3)
+    emit("kernel.dense_sketch_16k", t_dense * 1e6 / n_rows, f"n={n_small}")
+    # per-dimension cost ratio: how much the COO layout saves at 1M dims
+    per_dim_ratio = (t_dense / n_small) / (t_sparse / n_dims)
+    emit("kernel.sparse_layout_advantage", t_sparse * 1e6 / n_rows,
+         f"{per_dim_ratio:.0f}x_per_dim")
+    return {"us_per_row_sparse": t_sparse * 1e6 / n_rows,
+            "us_per_row_dense_16k": t_dense * 1e6 / n_rows,
+            "per_dim_advantage": per_dim_ratio}

@@ -1,14 +1,23 @@
 """Benchmark driver: one function per paper table/figure + kernel/system
 benches.  Prints ``name,us_per_call,derived`` CSV; writes a JSON summary to
-experiments/bench_summary.json; appends the roofline table when dry-run
-records exist."""
+experiments/bench_summary.json and the kernel/dedup perf-trajectory record
+to BENCH_kernels.json (repo root, committed — one snapshot per PR); appends
+the roofline table when dry-run records exist.
+
+``--suites a,b,c`` filters by substring (e.g. ``--suites kernel,dedup``
+re-records just the trajectory file)."""
 
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 import traceback
+
+# suites whose results feed the BENCH_kernels.json perf trajectory
+_TRAJECTORY_SUITES = ("kernel_packed", "kernel_cham", "kernel_sketch",
+                      "kernel_sparse_sketch", "dedup", "dedup_streaming")
 
 
 def main() -> None:
@@ -25,8 +34,21 @@ def main() -> None:
         ("kernel_packed", bench_kernels.kernel_packed_vs_unpacked),
         ("kernel_cham", bench_kernels.kernel_cham_vs_exact_fulldim),
         ("kernel_sketch", bench_kernels.kernel_sketch_throughput),
+        ("kernel_sparse_sketch", bench_kernels.bench_sparse_sketch),
         ("dedup", bench_dedup.dedup_sketch_vs_exact),
+        ("dedup_streaming", bench_dedup.dedup_streaming_vs_blocked),
     ]
+    only = None
+    for i, arg in enumerate(sys.argv[1:]):
+        if arg == "--suites":
+            if 2 + i >= len(sys.argv):
+                raise SystemExit("usage: run.py [--suites substr[,substr...]]")
+            only = sys.argv[2 + i].split(",")
+    if only:
+        suites = [(n, f) for n, f in suites
+                  if any(sel in n for sel in only)]
+        if not suites:
+            raise SystemExit(f"--suites {','.join(only)} matched no suite")
     print("name,us_per_call,derived")
     summary = {}
     failures = []
@@ -58,6 +80,22 @@ def main() -> None:
     os.makedirs("experiments", exist_ok=True)
     with open(os.path.join("experiments", "bench_summary.json"), "w") as f:
         json.dump(summary, f, indent=1, default=str)
+    trajectory = {k: v for k, v in summary.items() if k in _TRAJECTORY_SUITES}
+    if trajectory:
+        import jax
+
+        # merge into the committed record so filtered / partially-failed
+        # runs refresh their suites without discarding the others
+        record = {"backend": jax.default_backend(), "suites": {}}
+        if os.path.exists("BENCH_kernels.json"):
+            try:
+                with open("BENCH_kernels.json") as f:
+                    record["suites"] = json.load(f).get("suites", {})
+            except (json.JSONDecodeError, OSError):
+                pass
+        record["suites"].update(trajectory)
+        with open("BENCH_kernels.json", "w") as f:
+            json.dump(record, f, indent=1, default=str)
     if failures:
         print("FAILURES:", failures)
         raise SystemExit(1)

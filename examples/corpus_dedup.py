@@ -1,6 +1,11 @@
 """Corpus dedup with Cabin sketches vs exact Hamming — the paper's technique
 deployed in the LM data pipeline.
 
+The sketch pass streams: sketching dispatches to the fused sparse-Cabin
+kernel (repro.kernels.cabin_build_sparse) on TPU, and the pairwise pass
+extracts candidate pairs on device via repro.core.allpairs — the host only
+ever sees the compact candidate list, never an (N, N) distance matrix.
+
     PYTHONPATH=src python examples/corpus_dedup.py
 """
 
@@ -32,7 +37,7 @@ def main() -> None:
 
     agree = float((res.keep_mask == ref.keep_mask).mean())
     print(f"sketch dedup : {res.n_removed} removed in {t_sketch:.2f}s "
-          f"(32-bit-packed 1024-bit sketches)")
+          f"(32-bit-packed 1024-bit sketches, streaming candidate pass)")
     print(f"exact dedup  : {ref.n_removed} removed in {t_exact:.2f}s "
           f"(full {vocab}-dim count vectors)")
     print(f"agreement    : {agree:.1%}   speedup: {t_exact/t_sketch:.1f}x")

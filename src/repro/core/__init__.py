@@ -5,7 +5,15 @@ Public API:
     cham, cham_matrix, binhamming, inner/cosine/jaccard_estimate (cham)
     sketch_dim, theorem2_bound                                   (theory)
     pack_bits, unpack_bits, popcount_rows, packed_hamming        (packing)
+    threshold_pairs, argmin_rows, topk_rows, rowsum              (allpairs)
 """
+
+from repro.core.allpairs import (  # noqa: F401
+    argmin_rows,
+    rowsum,
+    threshold_pairs,
+    topk_rows,
+)
 
 from repro.core.cabin import (  # noqa: F401
     CabinParams,

@@ -1,0 +1,535 @@
+"""Streaming all-pairs engine over packed Cabin sketches.
+
+Every O(N^2) consumer in this repo (dedup candidate generation, k-mode
+assignment, medoid updates, nearest-neighbour queries) used to materialise
+full (N, M) Cham/Hamming matrices and sync them to host block by block.
+This module replaces that with device-resident tiled passes: the distance
+tile is computed, REDUCED, and discarded inside a single fused `lax`
+loop, so peak memory is O(N * block) and exactly one host transfer happens
+per query — the compact result.
+
+Reductions provided:
+
+  threshold_pairs(a, b, d, threshold)  -> compact (i, j) candidate list of
+                                          pairs with dist < threshold
+                                          (dedup candidate generation)
+  argmin_rows(a, b, d)                 -> per-row nearest column + distance
+                                          (k-mode assignment)
+  topk_rows(a, b, d, k)                -> per-row k smallest distances +
+                                          indices (neighbour queries)
+  rowsum(a, b, d)                      -> per-row total distance
+                                          (k-medoid centre updates)
+
+Distance semantics are IDENTICAL to repro.core.cham.cham_matrix /
+hamming_matrix_exact: the pairwise statistics (wa, wb, inner) are exact
+integers however the tile is computed, and the Cham estimator is elementwise
+on those integers, so results are bit-identical to the dense reference
+regardless of tiling — this is what lets data.dedup swap engines without
+changing a single DedupResult.
+
+Tile backends (`mode`):
+  * "popcount" — the jnp SWAR popcount contraction (repro.core.cham): the
+                 contraction depth is d/32 packed words, which XLA CPU
+                 vectorises well — the default off-TPU.
+  * "matmul"   — unpack the packed words to {0,1} float32 and take the tile
+                 inner product as a GEMM.  Counts <= d < 2^24 are exactly
+                 representable in float32, so this is EXACT too; it does
+                 32x more raw MACs than "popcount" but wins on hardware
+                 with idle matmul units.
+  * "pallas"   — the repro.kernels.hamming pair_stats TPU kernel.
+  * None       — auto: "pallas" on TPU, "popcount" elsewhere.
+
+Metrics: "cham" (estimated HD of the original categorical vectors, float32)
+and "hamming" (exact HD between packed binary rows, computed as
+wa + wb - 2*inner, returned as float32 so both metrics share one code path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.cham import binhamming_from_stats
+
+
+def _auto_mode(mode: str | None) -> str:
+    if mode is not None:
+        return mode
+    return "pallas" if jax.default_backend() == "tpu" else "popcount"
+
+
+def _tile_inner(a_blk: jnp.ndarray, b_blk: jnp.ndarray, d: int, mode: str
+                ) -> jnp.ndarray:
+    """Exact pairwise <a_i, b_j> bit inner products for one tile."""
+    if mode == "matmul":
+        ua = packing.unpack_bits(a_blk, d).astype(jnp.float32)
+        ub = packing.unpack_bits(b_blk, d).astype(jnp.float32)
+        return jnp.dot(ua, ub.T,
+                       preferred_element_type=jnp.float32).astype(jnp.int32)
+    if mode == "popcount":
+        return jnp.sum(
+            packing.popcount32(a_blk[:, None, :] & b_blk[None, :, :]), axis=-1
+        )
+    if mode == "pallas":
+        from repro.kernels.hamming import kernel as _hk
+
+        inner, _ = _hk.pair_stats(a_blk, b_blk, op_ham=False,
+                                  interpret=jax.default_backend() != "tpu")
+        return inner
+    raise ValueError(f"unknown tile mode {mode!r}")
+
+
+def _tile_dist(a_blk: jnp.ndarray, b_blk: jnp.ndarray, d: int, metric: str,
+               mode: str) -> jnp.ndarray:
+    """One (bm, bn) float32 distance tile; bit-identical to cham_matrix /
+    hamming_matrix_exact on the same rows."""
+    wa = packing.popcount_rows(a_blk)
+    wb = packing.popcount_rows(b_blk)
+    inner = _tile_inner(a_blk, b_blk, d, mode)
+    if metric == "cham":
+        return 2.0 * binhamming_from_stats(wa[:, None], wb[None, :], inner, d)
+    if metric == "hamming":
+        return (wa[:, None] + wb[None, :] - 2 * inner).astype(jnp.float32)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def _pad_rows(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    pad = (-x.shape[0]) % block
+    return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+
+# ---------------------------------------------------------------------------
+# threshold candidate extraction (dedup)
+# ---------------------------------------------------------------------------
+
+
+def _append_hits(carry, flat, n_hits, i0, j0, width, capacity):
+    """Append this tile's hits to the (buf_i, buf_j, count) carry.
+
+    Buffers carry `capacity` extra slack slots: each tile appends with one
+    dynamic_update_slice of length `capacity` starting at the running count;
+    slots past the tile's hit count hold garbage but are overwritten by the
+    next tile (its window starts exactly at the new count) and never escape
+    the final [:count] slice.  Rank r's hit lives at the first flat index
+    with cumsum == r: a log(tile) binary-search gather per output slot, far
+    cheaper than scattering the whole tile into the buffer.  Tiles with no
+    candidates skip extraction entirely.
+    """
+
+    def extract(c):
+        bi, bj, cnt = c
+        csum = jnp.cumsum(flat)
+        ranks = jnp.arange(1, capacity + 1, dtype=csum.dtype)
+        pos = jnp.searchsorted(csum, ranks)
+        pos = jnp.minimum(pos, flat.shape[0] - 1)
+        gi_v = (i0 + pos // width).astype(jnp.int32)
+        gj_v = (j0 + pos % width).astype(jnp.int32)
+        off = jnp.minimum(cnt, capacity)
+        bi = jax.lax.dynamic_update_slice(bi, gi_v, (off,))
+        bj = jax.lax.dynamic_update_slice(bj, gj_v, (off,))
+        return bi, bj, cnt + n_hits
+
+    return jax.lax.cond(
+        n_hits > 0, extract, lambda c: (c[0], c[1], c[2] + n_hits), carry)
+
+
+def _prune_scores(x_p, n_valid, d, metric):
+    """Per-row lower-bound score s with the property
+    dist(i, j) >= factor * |s_i - s_j| (factor 2 for cham, 1 for hamming):
+    cham >= 2|a_hat - b_hat| because the union estimate u_hat >= max(a_hat,
+    b_hat); exact HD >= |wu - wv|.  Padded rows get (+inf, -inf) so fully
+    padded tiles always prune."""
+    w = packing.popcount_rows(x_p).astype(jnp.float32)
+    if metric == "cham":
+        from repro.core.cham import density_estimate
+
+        s = density_estimate(w, d)
+    else:
+        s = w
+    valid = jnp.arange(x_p.shape[0]) < n_valid
+    s_min = jnp.where(valid, s, jnp.inf)
+    s_max = jnp.where(valid, s, -jnp.inf)
+    return s_min, s_max
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "m", "block", "capacity", "symmetric", "metric",
+                     "mode", "d"),
+)
+def _threshold_pairs_impl(a_p, b_p, offsets, threshold, *, n, m, block,
+                          capacity, symmetric, metric, mode, d):
+    n_tiles = offsets.shape[0]
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    factor = 2.0 if metric == "cham" else 1.0
+    # weight-band tile prune: per-block score ranges; a tile whose blocks'
+    # score intervals are further apart than threshold/factor cannot contain
+    # a candidate, so its distance tile is never computed.  The 0.05 margin
+    # absorbs float noise between this bound and the estimator's internals
+    # (distances are O(10..1000); cross-graph noise is O(1e-3)).
+    sa_min, sa_max = _prune_scores(a_p, n, d, metric)
+    sb_min, sb_max = _prune_scores(b_p, m, d, metric)
+    blk_a_min = sa_min.reshape(-1, block).min(axis=1)
+    blk_a_max = sa_max.reshape(-1, block).max(axis=1)
+    blk_b_min = sb_min.reshape(-1, block).min(axis=1)
+    blk_b_max = sb_max.reshape(-1, block).max(axis=1)
+    buf_len = 2 * capacity  # slack slots for _append_hits windows
+
+    def body(t, carry):
+        i0 = offsets[t, 0]
+        j0 = offsets[t, 1]
+        ib = i0 // block
+        jb = j0 // block
+        gap = jnp.maximum(
+            jnp.maximum(blk_b_min[jb] - blk_a_max[ib],
+                        blk_a_min[ib] - blk_b_max[jb]), 0.0)
+        prunable = factor * gap >= threshold + 0.05
+
+        def compute(carry):
+            a_blk = jax.lax.dynamic_slice(a_p, (i0, 0), (block, a_p.shape[1]))
+            b_blk = jax.lax.dynamic_slice(b_p, (j0, 0), (block, b_p.shape[1]))
+            dist = _tile_dist(a_blk, b_blk, d, metric, mode)
+            gi = i0 + row_iota
+            gj = j0 + col_iota
+            mask = (dist < threshold) & (gi < n) & (gj < m)
+            if symmetric:
+                mask &= gi < gj
+            flat = mask.ravel().astype(jnp.int32)
+            return _append_hits(carry, flat, jnp.sum(flat), i0, j0, block,
+                                capacity)
+
+        return jax.lax.cond(prunable, lambda c: c, compute, carry)
+
+    buf_i = jnp.full((buf_len,), -1, jnp.int32)
+    buf_j = jnp.full((buf_len,), -1, jnp.int32)
+    count = jnp.int32(0)
+    buf_i, buf_j, count = jax.lax.fori_loop(
+        0, n_tiles, body, (buf_i, buf_j, count))
+    return buf_i, buf_j, count
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "block", "width", "capacity", "metric", "mode",
+                     "d", "logfree"),
+)
+def _banded_pairs_impl(a_pp, threshold, *, n, block, width, capacity, metric,
+                       mode, d, logfree):
+    """Symmetric weight-sorted fast path: for each row block, all candidate
+    columns j > i live in [i0, i0 + width) — one (block, width) strip per
+    row block instead of a tile grid, so the loop has few, large, well-
+    vectorised iterations.
+
+    `logfree` (cham, no saturated sketches) replaces the per-pair log-based
+    estimator with the exactly equivalent inner-product test
+
+        cham(u, v) < t  <=>  st > wa + wb - d + d * D^(t/4) * ra * rb,
+        ra = sqrt(1 - wa/d) = D^(a_hat/2),
+
+    obtained by inverting the monotone union estimate u_hat: the per-pair
+    work drops from three logarithm evaluations to one multiply.  Requires
+    max weight < d (else the estimator's log clamping has no inner-product
+    twin; the caller checks and falls back)."""
+    n_blocks = (n + block - 1) // block
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (block, width), 0)
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (block, width), 1)
+    buf_len = 2 * capacity
+    w_rows = packing.popcount_rows(a_pp).astype(jnp.float32)
+    if logfree:
+        log_d = jnp.log1p(-1.0 / jnp.float32(d))
+        k_thr = jnp.float32(d) * jnp.exp(log_d * threshold * 0.25)
+        radii = jnp.sqrt(jnp.maximum(1.0 - w_rows / d, 0.0))
+
+    def body(ib, carry):
+        i0 = ib * block
+        a_blk = jax.lax.dynamic_slice(a_pp, (i0, 0), (block, a_pp.shape[1]))
+        strip = jax.lax.dynamic_slice(a_pp, (i0, 0), (width, a_pp.shape[1]))
+        gi = i0 + row_iota
+        gj = i0 + col_iota
+        if logfree:
+            inner = _tile_inner(a_blk, strip, d, mode).astype(jnp.float32)
+            wa = jax.lax.dynamic_slice(w_rows, (i0,), (block,))
+            wb = jax.lax.dynamic_slice(w_rows, (i0,), (width,))
+            ra = jax.lax.dynamic_slice(radii, (i0,), (block,))
+            rb = jax.lax.dynamic_slice(radii, (i0,), (width,))
+            bound = (wa[:, None] + wb[None, :] - d
+                     + k_thr * ra[:, None] * rb[None, :])
+            mask = (inner > bound) & (gi < gj) & (gj < n)
+        else:
+            dist = _tile_dist(a_blk, strip, d, metric, mode)  # (block, width)
+            mask = (dist < threshold) & (gi < gj) & (gj < n)
+        flat = mask.ravel().astype(jnp.int32)
+        return _append_hits(carry, flat, jnp.sum(flat), i0, i0, width,
+                            capacity)
+
+    buf_i = jnp.full((buf_len,), -1, jnp.int32)
+    buf_j = jnp.full((buf_len,), -1, jnp.int32)
+    count = jnp.int32(0)
+    buf_i, buf_j, count = jax.lax.fori_loop(
+        0, n_blocks, body, (buf_i, buf_j, count))
+    return buf_i, buf_j, count
+
+
+def _np_prune_score(weights: np.ndarray, d: int, metric: str) -> np.ndarray:
+    """Host twin of _prune_scores for band-width planning (float64; the
+    0.05 prune margin absorbs the f32/f64 gap)."""
+    if metric == "cham":
+        w = weights.astype(np.float64)
+        return np.log(np.clip(1.0 - w / d, 1e-9, 1.0)) / np.log1p(-1.0 / d)
+    return weights.astype(np.float64)
+
+
+def _band_width(scores: np.ndarray, n: int, block: int, threshold: float,
+                factor: float) -> int:
+    """Max strip width so that every j >= i0 + width is prunable for row
+    block i0 (columns beyond it satisfy factor*gap >= threshold + margin)."""
+    reach = (threshold + 0.05) / factor
+    width = block
+    for i0 in range(0, n, block):
+        s_hi = scores[min(i0 + block, n) - 1]
+        hi = int(np.searchsorted(scores, s_hi + reach, side="left"))
+        width = max(width, hi - i0)
+    n_pad = ((n + block - 1) // block) * block
+    # bucket to a block multiple: fewer recompiles across similar corpora
+    return min(((width + block - 1) // block) * block, n_pad)
+
+
+def threshold_pairs(
+    a,
+    b=None,
+    *,
+    d: int,
+    threshold: float,
+    metric: str = "cham",
+    block: int = 256,
+    capacity: int | None = None,
+    mode: str | None = None,
+    sorted_by_weight: bool = False,
+    weights: np.ndarray | None = None,
+) -> np.ndarray:
+    """All pairs (i, j) with dist(a[i], b[j]) < threshold, as a compact
+    (K, 2) int32 host array.
+
+    b=None scans the upper triangle of a vs itself (i < j) — the dedup case.
+    `capacity` bounds the candidate buffer on device; on overflow the pass
+    transparently re-runs with doubled capacity (a recompile, so size it
+    generously when the duplicate rate is known).
+
+    `sorted_by_weight=True` (symmetric only) promises the rows are sorted by
+    sketch Hamming weight; the scan then switches to banded strips whose
+    width comes from the weight bound dist >= factor*|s_i - s_j| — columns
+    outside the band provably cannot be candidates, so total work drops from
+    O(N^2/2) to O(N * band).  The banded cham pass also swaps the per-pair
+    log estimator for the exactly-equivalent log-free inner-product test
+    (see _banded_pairs_impl); it decides knife-edge pairs whose distance
+    equals the threshold to within a float ulp by different rounding than
+    the log formula, so choose thresholds away from exact distance values
+    when bit-stable candidate sets matter.  `weights` optionally passes the
+    per-row sketch Hamming weights the caller already has (skips one
+    device popcount + host sync).
+    """
+    symmetric = b is None
+    a = jnp.asarray(a)
+    b_arr = a if symmetric else jnp.asarray(b)
+    n, m = a.shape[0], b_arr.shape[0]
+    if n == 0 or m == 0:
+        return np.zeros((0, 2), np.int32)
+    block = max(1, min(block, max(n, m)))
+    if capacity is None:
+        capacity = max(4096, 8 * max(n, m))
+    mode = _auto_mode(mode)
+
+    def run_with_capacity(run, capacity):
+        # overflow -> transparent re-run with a doubled (recompiled) buffer
+        while True:
+            bi, bj, cnt = run(capacity)
+            cnt = int(cnt)
+            if cnt <= capacity:
+                return np.stack(
+                    [np.asarray(bi)[:cnt], np.asarray(bj)[:cnt]], axis=1)
+            capacity = max(2 * capacity, cnt)
+
+    if symmetric and sorted_by_weight:
+        if weights is None:
+            weights = np.asarray(packing.popcount_rows(a))
+        if np.any(np.diff(weights) < 0):
+            raise ValueError("sorted_by_weight=True but rows are not sorted "
+                             "by sketch weight")
+        scores = _np_prune_score(weights, d, metric)
+        factor = 2.0 if metric == "cham" else 1.0
+        width = _band_width(scores, n, block, threshold, factor)
+        n_pad = ((n + block - 1) // block) * block
+        a_pp = jnp.pad(a, ((0, n_pad + width - n), (0, 0)))
+        # log-free inner-product test needs the estimator unclamped
+        logfree = metric == "cham" and int(weights.max(initial=0)) < d
+        return run_with_capacity(
+            lambda cap: _banded_pairs_impl(
+                a_pp, jnp.float32(threshold), n=n, block=block, width=width,
+                capacity=cap, metric=metric, mode=mode, d=d, logfree=logfree),
+            capacity)
+
+    a_p = _pad_rows(a, block)
+    b_p = a_p if symmetric else _pad_rows(b_arr, block)
+    nb_a = a_p.shape[0] // block
+    nb_b = b_p.shape[0] // block
+    if symmetric:
+        offs = [(i * block, j * block)
+                for i in range(nb_a) for j in range(i, nb_b)]
+    else:
+        offs = [(i * block, j * block)
+                for i in range(nb_a) for j in range(nb_b)]
+    offsets = jnp.asarray(offs, dtype=jnp.int32)
+
+    return run_with_capacity(
+        lambda cap: _threshold_pairs_impl(
+            a_p, b_p, offsets, jnp.float32(threshold), n=n, m=m, block=block,
+            capacity=cap, symmetric=symmetric, metric=metric, mode=mode,
+            d=d),
+        capacity)
+
+
+# ---------------------------------------------------------------------------
+# row-wise argmin (k-mode assignment)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "block", "metric", "mode", "d"))
+def _argmin_rows_impl(a, b_p, *, m, block, metric, mode, d):
+    n_tiles = b_p.shape[0] // block
+
+    def body(t, carry):
+        best, besti = carry
+        j0 = t * block
+        b_blk = jax.lax.dynamic_slice(b_p, (j0, 0), (block, b_p.shape[1]))
+        dist = _tile_dist(a, b_blk, d, metric, mode)  # (n, block)
+        col = j0 + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+        dist = jnp.where(col < m, dist, jnp.inf)
+        tmin = jnp.min(dist, axis=1)
+        targ = j0 + jnp.argmin(dist, axis=1).astype(jnp.int32)
+        # strict < keeps the FIRST global minimum — matches np.argmin on the
+        # full (n, m) matrix, which is what the seed k-mode loop used
+        upd = tmin < best
+        return jnp.where(upd, tmin, best), jnp.where(upd, targ, besti)
+
+    best = jnp.full((a.shape[0],), jnp.inf, jnp.float32)
+    besti = jnp.zeros((a.shape[0],), jnp.int32)
+    return jax.lax.fori_loop(0, n_tiles, body, (best, besti))
+
+
+def argmin_rows(a, b, *, d: int, metric: str = "cham", block: int = 2048,
+                mode: str | None = None):
+    """Per-row nearest column: returns (indices (N,), distances (N,)) on
+    host, streaming over blocks of b.  Tie-break = first minimum, identical
+    to np.argmin over the dense matrix."""
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    m = b.shape[0]
+    block = max(1, min(block, m))
+    b_p = _pad_rows(b, block)
+    best, besti = _argmin_rows_impl(a, b_p, m=m, block=block, metric=metric,
+                                    mode=_auto_mode(mode), d=d)
+    return np.asarray(besti), np.asarray(best)
+
+
+# ---------------------------------------------------------------------------
+# row-wise top-k (neighbour queries)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "k", "block", "metric", "mode", "d"))
+def _topk_rows_impl(a, b_p, *, m, k, block, metric, mode, d):
+    n_tiles = b_p.shape[0] // block
+    n = a.shape[0]
+
+    def body(t, carry):
+        vals, idxs = carry  # (n, k) running smallest, ascending
+        j0 = t * block
+        b_blk = jax.lax.dynamic_slice(b_p, (j0, 0), (block, b_p.shape[1]))
+        dist = _tile_dist(a, b_blk, d, metric, mode)  # (n, block)
+        col = j0 + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+        dist = jnp.where(col < m, dist, jnp.inf)
+        cand_v = jnp.concatenate([vals, dist], axis=1)
+        cand_i = jnp.concatenate(
+            [idxs, jnp.broadcast_to(col, (n, block))], axis=1)
+        order = jnp.argsort(cand_v, axis=1)[:, :k]  # stable: earlier j wins ties
+        return (jnp.take_along_axis(cand_v, order, axis=1),
+                jnp.take_along_axis(cand_i, order, axis=1))
+
+    vals = jnp.full((n, k), jnp.inf, jnp.float32)
+    idxs = jnp.full((n, k), -1, jnp.int32)
+    return jax.lax.fori_loop(0, n_tiles, body, (vals, idxs))
+
+
+def topk_rows(a, b, k: int, *, d: int, metric: str = "cham",
+              block: int = 2048, mode: str | None = None):
+    """Per-row k nearest columns of b: (indices (N, k), distances (N, k)),
+    ascending by distance, streaming over blocks of b."""
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    m = b.shape[0]
+    k = min(k, m)
+    block = max(1, min(block, m))
+    b_p = _pad_rows(b, block)
+    vals, idxs = _topk_rows_impl(a, b_p, m=m, k=k, block=block, metric=metric,
+                                 mode=_auto_mode(mode), d=d)
+    return np.asarray(idxs), np.asarray(vals)
+
+
+# ---------------------------------------------------------------------------
+# row sums (k-medoid centre update)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "metric", "mode", "d"))
+def _rowsum_impl(a_p, b_p, m, *, block, metric, mode, d):
+    # m is a TRACED scalar: rowsum is called from the k-mode medoid loop
+    # with a different member count per cluster per iteration, so the jit
+    # cache must key on the (power-of-two bucketed) shapes only
+    n_tiles = b_p.shape[0] // block
+
+    def body(t, acc):
+        j0 = t * block
+        b_blk = jax.lax.dynamic_slice(b_p, (j0, 0), (block, b_p.shape[1]))
+        dist = _tile_dist(a_p, b_blk, d, metric, mode)
+        col = j0 + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+        dist = jnp.where(col < m, dist, 0.0)
+        return acc + jnp.sum(dist, axis=1)
+
+    return jax.lax.fori_loop(
+        0, n_tiles, body, jnp.zeros((a_p.shape[0],), jnp.float32))
+
+
+def _pow2_rows(x: jnp.ndarray, floor: int = 8) -> jnp.ndarray:
+    """Zero-pad rows up to the next power of two (>= floor): bounds the
+    number of distinct compiled shapes to O(log n) across varying inputs."""
+    n = x.shape[0]
+    target = floor
+    while target < n:
+        target *= 2
+    return jnp.pad(x, ((0, target - n), (0, 0))) if target > n else x
+
+
+def rowsum(a, b=None, *, d: int, metric: str = "cham", block: int = 2048,
+           mode: str | None = None) -> np.ndarray:
+    """Per-row total distance to all rows of b (b=None: of a itself),
+    streaming over blocks of b.  Used for medoid selection; shapes are
+    bucketed to powers of two so repeated calls with varying row counts
+    (the k-mode medoid loop) reuse a handful of compiled graphs."""
+    a = jnp.asarray(a)
+    b = a if b is None else jnp.asarray(b)
+    n, m = a.shape[0], b.shape[0]
+    a_p = _pow2_rows(a)
+    b_p2 = _pow2_rows(b)
+    block = max(1, min(block, b_p2.shape[0]))
+    b_p = _pad_rows(b_p2, block)
+    out = _rowsum_impl(a_p, b_p, jnp.int32(m), block=block, metric=metric,
+                       mode=_auto_mode(mode), d=d)
+    return np.asarray(out)[:n]

@@ -88,14 +88,15 @@ def sketch_dense(params: CabinParams, x: jnp.ndarray) -> jnp.ndarray:
     return binsketch(params, binem(params, x))
 
 
-def sketch_sparse(
+def sketch_sparse_jnp(
     params: CabinParams, indices: jnp.ndarray, values: jnp.ndarray
 ) -> jnp.ndarray:
-    """Cabin on padded-COO rows.
+    """jnp reference path for Cabin on padded-COO rows: per-row scatter-max.
 
-    indices: (..., m) int32 feature positions; values: (..., m) categories,
-    0 = padding / missing (psi maps it to 0, and we also mask the scatter so
-    padded entries can share index 0 safely).
+    This is the oracle the fused Pallas kernel
+    (repro.kernels.cabin_build_sparse) is tested against bit-for-bit, and
+    the fallback `sketch_sparse` uses when the sketch dim is not 128-aligned
+    or no accelerator is present.
     """
     bits = hashing.psi_bits(indices.astype(jnp.uint32), values, params.psi_seed)
     buckets = hashing.pi_buckets(indices.astype(jnp.uint32),
@@ -110,6 +111,50 @@ def sketch_sparse(
     )
     out = out.reshape(*indices.shape[:-1], params.sketch_dim)
     return packing.pack_bits(out)
+
+
+def sketch_sparse(
+    params: CabinParams,
+    indices: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Cabin on padded-COO rows -> packed sketches (..., w) int32.
+
+    indices: (..., m) int32 feature positions; values: (..., m) categories,
+    0 = padding / missing (psi maps it to 0, so padded entries can share
+    index 0 safely).
+
+    Dispatch: when the sketch dim is 128-aligned and a TPU is present (or the
+    kernel is explicitly requested via use_pallas=True, e.g. under
+    interpret=True in tests), the fused Pallas kernel
+    repro.kernels.cabin_build_sparse builds the packed sketch in one pass;
+    otherwise the jnp scatter-max reference path runs.  Both produce
+    bit-identical output.
+    """
+    if use_pallas is None:
+        use_pallas = (jax.default_backend() == "tpu"
+                      and params.sketch_dim % 128 == 0)
+    if use_pallas and params.sketch_dim % 128 == 0:
+        # lazy import: repro.kernels.* imports this module for CabinParams
+        from repro.kernels.cabin_build_sparse import kernel as _sparse_kernel
+
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        m = indices.shape[-1]
+        lead = indices.shape[:-1]
+        out = _sparse_kernel.cabin_build_sparse(
+            indices.reshape(-1, m),
+            values.reshape(-1, m),
+            d=params.sketch_dim,
+            psi_seed=params.psi_seed,
+            pi_seed=params.pi_seed,
+            interpret=bool(interpret),
+        )
+        return out.reshape(*lead, params.packed_width)
+    return sketch_sparse_jnp(params, indices, values)
 
 
 @functools.partial(jax.jit, static_argnums=0)

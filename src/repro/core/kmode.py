@@ -5,6 +5,10 @@ and for clustering binary sketches (binary vectors are categorical with c=2).
 NumPy host implementation with chunked distance computation; deterministic
 k-means++-style seeding so all methods start from identical centres (the
 paper fixes the seed across baselines for exactly this reason).
+
+`kmode_precomputed` additionally supports packed Cabin sketches directly
+(sketch_dim=...): assignment and medoid updates then stream through
+repro.core.allpairs on device instead of calling a host distance oracle.
 """
 
 from __future__ import annotations
@@ -94,25 +98,67 @@ def kmode_precomputed(
     k: int,
     n_iter: int = 15,
     seed: int = 0,
+    *,
+    sketch_dim: int | None = None,
+    block: int = 2048,
 ) -> np.ndarray:
-    """k-medoids-flavoured variant for representations with an estimated
-    distance oracle (e.g. Cham on packed sketches): centres are member rows,
-    assignment uses dist_fn(x_repr, centers_repr) -> (N, k) matrix.
+    """k-medoids-flavoured variant: centres are member rows, assignment is
+    nearest-centre under an estimated distance.
+
+    Two modes:
+
+    * `sketch_dim` given — x_repr is a matrix of PACKED Cabin sketches
+      (N, d/32) int32 and every distance pass (seeding, assignment, medoid
+      update) runs on the streaming all-pairs engine
+      (repro.core.allpairs) under the Cham metric: assignment is a
+      device-resident row-argmin against the centre block, medoid updates
+      are streaming row-sums — no (N, k) or (s, s) float matrix is built on
+      host.  `dist_fn` is ignored and may be None.  This is the path the
+      packed Pallas kernels drive on TPU.
+
+    * `sketch_dim` None — legacy oracle mode: `dist_fn(a, b) -> (len(a),
+      len(b))` distance matrix, evaluated on host per iteration (kept for
+      arbitrary representations and as the equivalence reference).
+
+    Both modes draw the identical rng sequence, so on the same
+    representation they produce the same clustering.
     """
     n = x_repr.shape[0]
+    use_engine = sketch_dim is not None
+    if use_engine:
+        from repro.core import allpairs  # local: keep numpy-only import path
+
+        def col_dist(rows: np.ndarray, center: np.ndarray) -> np.ndarray:
+            # distances of `rows` to ONE centre row: (len(rows),) float
+            _, vals = allpairs.argmin_rows(rows, center[None, :],
+                                           d=sketch_dim, block=block)
+            return vals
+
     rng = np.random.default_rng(seed)
     center_idx = [int(rng.integers(n))]
-    d = np.asarray(dist_fn(x_repr, x_repr[center_idx]))[:, 0].astype(np.float64)
+    if use_engine:
+        d = col_dist(x_repr, x_repr[center_idx[0]]).astype(np.float64)
+    else:
+        d = np.asarray(dist_fn(x_repr, x_repr[center_idx]))[:, 0].astype(np.float64)
     for _ in range(1, k):
         p = np.maximum(d, 0)
         p = p / max(p.sum(), 1e-12)
         center_idx.append(int(rng.choice(n, p=p)))
-        d = np.minimum(d, np.asarray(dist_fn(x_repr, x_repr[[center_idx[-1]]]))[:, 0])
+        if use_engine:
+            d = np.minimum(d, col_dist(x_repr, x_repr[center_idx[-1]]))
+        else:
+            d = np.minimum(
+                d, np.asarray(dist_fn(x_repr, x_repr[[center_idx[-1]]]))[:, 0])
     centers = x_repr[np.asarray(center_idx)]
     labels = np.zeros(n, dtype=np.int64)
     for _ in range(n_iter):
-        dist = np.asarray(dist_fn(x_repr, centers))
-        new_labels = dist.argmin(axis=1)
+        if use_engine:
+            new_labels, _ = allpairs.argmin_rows(x_repr, centers,
+                                                 d=sketch_dim, block=block)
+            new_labels = new_labels.astype(np.int64)
+        else:
+            dist = np.asarray(dist_fn(x_repr, centers))
+            new_labels = dist.argmin(axis=1)
         if np.array_equal(new_labels, labels):
             break
         labels = new_labels
@@ -121,6 +167,11 @@ def kmode_precomputed(
             members = np.where(labels == c)[0]
             if len(members) == 0:
                 continue
-            sub = np.asarray(dist_fn(x_repr[members], x_repr[members]))
-            centers[c] = x_repr[members[sub.sum(axis=1).argmin()]]
+            if use_engine:
+                totals = allpairs.rowsum(x_repr[members], d=sketch_dim,
+                                         block=block)
+            else:
+                sub = np.asarray(dist_fn(x_repr[members], x_repr[members]))
+                totals = sub.sum(axis=1)
+            centers[c] = x_repr[members[totals.argmin()]]
     return labels

@@ -10,9 +10,17 @@ Cost: exact dedup on V-dim count vectors is O(N^2 V); sketch dedup is
 O(N V) sketching + O(N^2 d/32) packed popcounts with d independent of V —
 the same asymptotics that give the paper its 136x heatmap speedup.
 
-Blocked scanning keeps the pairwise pass at O(block^2) memory; candidate
-pairs under `threshold` are unioned (union-find) and one representative per
-duplicate group is kept.
+The pairwise pass streams through repro.core.allpairs: distance tiles are
+computed, thresholded, and compacted to candidate (i, j) pairs ON DEVICE in
+one fused loop — no (N, M) float matrix ever reaches the host and the only
+transfer is the compact candidate list.  Duplicate groups then come from a
+vectorised min-label connected-components pass over the candidate batch
+(identical grouping to the per-pair union-find it replaced: both converge to
+the minimum index of each connected component).
+
+`dedup_by_sketch_blocked` keeps the pre-engine blocked scan (per-block host
+sync + np.where + per-pair union feed) as the equivalence/benchmark
+reference.
 """
 
 from __future__ import annotations
@@ -22,13 +30,11 @@ from dataclasses import dataclass
 import numpy as np
 import jax.numpy as jnp
 
-import functools
-
 import jax
 
+from repro.core import allpairs
 from repro.core.cabin import CabinParams, sketch_sparse_jit
 from repro.core.cham import cham_matrix
-from repro.kernels.hamming.ops import cham_matrix_fast
 
 _cham_matrix_jit = jax.jit(cham_matrix, static_argnums=2)
 
@@ -67,6 +73,30 @@ class _UnionFind:
             self.parent[max(ra, rb)] = min(ra, rb)
 
 
+def _components_from_pairs(n: int, pairs: np.ndarray) -> np.ndarray:
+    """Vectorised connected components: labels[i] = min index reachable
+    from i over the candidate-pair graph.
+
+    Min-label propagation with pointer jumping; converges in O(log n)
+    sweeps, each a handful of vectorised scatter/gather ops over the whole
+    candidate batch.  Produces exactly the roots the per-pair union-find
+    yields (union-by-min makes every root the component's minimum index).
+    """
+    labels = np.arange(n, dtype=np.int64)
+    if len(pairs) == 0:
+        return labels
+    pi = pairs[:, 0].astype(np.int64)
+    pj = pairs[:, 1].astype(np.int64)
+    while True:
+        nxt = labels.copy()
+        np.minimum.at(nxt, pi, labels[pj])
+        np.minimum.at(nxt, pj, labels[pi])
+        nxt = nxt[nxt]  # pointer jumping halves chain depth
+        if np.array_equal(nxt, labels):
+            return labels
+        labels = nxt
+
+
 @dataclass
 class DedupResult:
     keep_mask: np.ndarray  # (N,) bool — representatives to keep
@@ -75,10 +105,24 @@ class DedupResult:
     n_removed: int
 
 
+def _result_from_roots(roots: np.ndarray, n: int) -> DedupResult:
+    _, group_ids = np.unique(roots, return_inverse=True)
+    keep = roots == np.arange(n)
+    return DedupResult(
+        keep_mask=keep,
+        group_ids=group_ids,
+        n_groups=int(group_ids.max()) + 1 if n else 0,
+        n_removed=int((~keep).sum()),
+    )
+
+
 def sketch_corpus(
     indices: np.ndarray, values: np.ndarray, vocab_size: int,
     sketch_dim: int = 1024, seed: int = 0,
 ) -> tuple[CabinParams, np.ndarray]:
+    """Sketch padded-COO docs; dispatches to the fused sparse-Cabin Pallas
+    kernel on TPU for 128-aligned sketch dims (repro.kernels.cabin_build_sparse),
+    the jnp scatter path otherwise."""
     params = CabinParams.create(vocab_size, sketch_dim, seed=seed)
     sketches = np.asarray(
         sketch_sparse_jit(params, jnp.asarray(indices), jnp.asarray(values))
@@ -90,10 +134,52 @@ def dedup_by_sketch(
     sketches: np.ndarray,
     sketch_dim: int,
     threshold: float,
-    block: int = 1024,
+    block: int = 256,
     use_kernel: bool = False,
+    capacity: int | None = None,
 ) -> DedupResult:
-    """Union docs whose estimated Hamming distance < threshold."""
+    """Union docs whose estimated Hamming distance < threshold.
+
+    Streaming pass: rows are scanned in sketch-weight order so the engine's
+    weight-band prune can skip tiles whose length ranges are incompatible
+    with the threshold (Cham >= 2|a_hat - b_hat|, a sound bound — the
+    candidate set is unchanged); surviving tiles are thresholded and
+    compacted to candidate pairs on device by
+    repro.core.allpairs.threshold_pairs (one compact transfer), then grouped
+    by the vectorised components pass.  use_kernel=True forces the Pallas
+    pair-stats tile backend on TPU (off-TPU it is ignored: the Pallas
+    interpreter would be orders of magnitude slower than the jnp tiles).
+    """
+    n = sketches.shape[0]
+    if n == 0:
+        return _result_from_roots(np.arange(0), 0)
+    sk = np.ascontiguousarray(sketches)
+    weights = np.unpackbits(sk.view(np.uint8), axis=1).sum(axis=1)
+    order = np.argsort(weights, kind="stable").astype(np.int64)
+    force_pallas = use_kernel and jax.default_backend() == "tpu"
+    pairs = allpairs.threshold_pairs(
+        sk[order],
+        d=sketch_dim,
+        threshold=threshold,
+        block=block,
+        capacity=capacity,
+        mode="pallas" if force_pallas else None,
+        sorted_by_weight=True,
+        weights=weights[order],
+    )
+    roots = _components_from_pairs(n, order[pairs] if len(pairs) else pairs)
+    return _result_from_roots(roots, n)
+
+
+def dedup_by_sketch_blocked(
+    sketches: np.ndarray,
+    sketch_dim: int,
+    threshold: float,
+    block: int = 1024,
+) -> DedupResult:
+    """Pre-engine reference: blocked scan with per-block host sync and a
+    per-pair union-find feed.  Kept for equivalence tests and as the
+    benchmark baseline the streaming pass is measured against."""
     n = sketches.shape[0]
     uf = _UnionFind(n)
     sk = jnp.asarray(sketches)
@@ -101,25 +187,14 @@ def dedup_by_sketch(
         a = sk[i0 : i0 + block]
         for j0 in range(i0, n, block):
             b = sk[j0 : j0 + block]
-            if use_kernel:
-                d = np.asarray(cham_matrix_fast(a, b, sketch_dim,
-                                                use_pallas=False))
-            else:
-                d = np.asarray(_cham_matrix_jit(a, b, sketch_dim))
+            d = np.asarray(_cham_matrix_jit(a, b, sketch_dim))
             ii, jj = np.where(d < threshold)
             for di, dj in zip(ii.tolist(), jj.tolist()):
                 gi, gj = i0 + di, j0 + dj
                 if gi < gj:
                     uf.union(gi, gj)
     roots = np.asarray([uf.find(i) for i in range(n)])
-    _, group_ids = np.unique(roots, return_inverse=True)
-    keep = roots == np.arange(n)
-    return DedupResult(
-        keep_mask=keep,
-        group_ids=group_ids,
-        n_groups=int(group_ids.max()) + 1 if n else 0,
-        n_removed=int((~keep).sum()),
-    )
+    return _result_from_roots(roots, n)
 
 
 def dedup_exact(
@@ -136,7 +211,4 @@ def dedup_exact(
         for j in np.where(hd < threshold)[0]:
             uf.union(i, i + 1 + int(j))
     roots = np.asarray([uf.find(i) for i in range(n)])
-    _, group_ids = np.unique(roots, return_inverse=True)
-    keep = roots == np.arange(n)
-    return DedupResult(keep, group_ids, int(group_ids.max()) + 1 if n else 0,
-                       int((~keep).sum()))
+    return _result_from_roots(roots, n)

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 
 def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
     return (n_stages - 1) / (n_stages + n_microbatches - 1)
@@ -79,7 +81,7 @@ def pipeline_apply(mesh: Mesh, stage_fn, stage_params, x_microbatches,
         buf, outs = jax.lax.fori_loop(0, total, body, (buf, outs))
         return outs[None]  # restore stage-leading dim
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=P(axis),

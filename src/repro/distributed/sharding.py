@@ -34,7 +34,40 @@ def current_mesh() -> Mesh | None:
             return None
         return m
     except Exception:
+        pass
+    # jax < 0.5: no abstract-mesh API; the ambient mesh entered via
+    # `with mesh:` lives in the legacy thread-resources env.
+    try:
+        from jax.interpreters import pxla
+
+        m = pxla.thread_resources.env.physical_mesh
+        if m is None or m.empty:
+            return None
+        return m
+    except Exception:
         return None
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager activating `mesh`: jax.sharding.set_mesh on new jax,
+    the Mesh object itself (legacy global-mesh context) on jax < 0.5."""
+    sm = getattr(jax.sharding, "set_mesh", None)
+    if sm is not None:
+        return sm(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs, check_vma: bool = False):
+    """jax.shard_map on new jax; jax.experimental.shard_map (check_rep) on
+    jax < 0.5.  Only the kwargs this repo uses are forwarded."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+
+    return legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=check_vma)
 
 
 def mesh_axis_names() -> tuple[str, ...]:

@@ -20,7 +20,8 @@ and is packed to int32 words (BD/32 per block) on the last k step.
 Alignment contract: d % BD == 0 and BD % 128 == 0 (callers round the sketch
 dimension up to a multiple of 128 — the theory gives a MINIMUM d, so rounding
 up only tightens the estimate; ops.py falls back to the jnp reference path
-for unaligned d).
+for unaligned d).  The same d % 128 contract is shared by the padded-COO
+twin, repro.kernels.cabin_build_sparse.
 """
 
 from __future__ import annotations

@@ -1,0 +1,3 @@
+from repro.kernels.cabin_build_sparse.kernel import cabin_build_sparse  # noqa: F401
+from repro.kernels.cabin_build_sparse.ops import cabin_sketch_sparse  # noqa: F401
+from repro.kernels.cabin_build_sparse.ref import cabin_build_sparse_ref  # noqa: F401

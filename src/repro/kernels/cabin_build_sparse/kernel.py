@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: fused Cabin sketch construction on padded-COO rows.
+
+This is the sparse twin of repro.kernels.cabin_build — the path that matters
+for the paper's Table-1 datasets, where n runs to millions of dimensions but
+each row carries only a few hundred nonzeros.  The dense kernel's contraction
+runs over ALL n attribute columns; here it runs over the m <= few-hundred
+padded-COO slots, so the kernel is O(N * m * d) instead of O(N * n * d) with
+the same output.
+
+Derivation (DESIGN.md section 2 applied to the COO layout): the dense kernel
+exploits that pi(j) is shared by every row in a column slab, turning the
+OR-aggregation into one (BK, BD) one-hot matmul on the MXU.  In COO layout
+the attribute index — and therefore the bucket — varies PER ELEMENT, so no
+shared one-hot matrix exists.  We instead evaluate the OR-aggregation as a
+VPU compare-reduce over a (BM, BK, BD) broadcast:
+
+    hit[i, t] = OR_k ( psi(idx[i,k], val[i,k]) AND pi(idx[i,k]) == t )
+    acc[i, t] += sum_k bits[i, k] * (local_bucket[i, k] == t)
+
+with psi and pi evaluated INSIDE the kernel by the same stateless mixers as
+repro.core.hashing (no tables, no gathers, no scatter/atomics).  Padding
+slots carry value 0 and psi(., 0) = 0 by construction, so they contribute
+nothing even though they alias attribute index 0.
+
+Grid: (N/BM, d/BD, m/BK), contraction innermost; an int32 (BM, BD)
+collision-count accumulator lives in VMEM scratch and is packed to int32
+words (BD/32 per block) on the last k step — identical packing (LSB-first,
+bit j -> word j//32) to the dense kernel and repro.core.packing.
+
+Alignment contract (shared with cabin_build): d % BD == 0 and BD % 128 == 0;
+callers round the sketch dimension up to a multiple of 128 (the theory gives
+a MINIMUM d, so rounding up only tightens the estimate).  ops.py falls back
+to the jnp reference path for unaligned d.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hashing
+
+
+def _cabin_sparse_kernel(idx_ref, val_ref, out_ref, acc_ref, *, psi_seed,
+                         pi_seed, d, bd, k_steps):
+    dblk = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = idx_ref[...]  # (BM, BK) int32 attribute positions
+    val = val_ref[...]  # (BM, BK) int32 categories, 0 = padding
+    # Stage 1 (BinEm): psi(idx, val) in {0,1}; psi(., 0) == 0 masks padding.
+    bits = hashing.psi_bits(idx.astype(jnp.uint32), val, psi_seed)  # (BM, BK)
+    # Stage 2 (BinSketch): per-ELEMENT buckets, restricted to this d-block.
+    buckets = hashing.pi_buckets(idx.astype(jnp.uint32), d, pi_seed)
+    local = buckets - dblk * bd  # (BM, BK)
+    t_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bd), 2)
+    # (BM, BK, BD) compare-reduce: no shared one-hot exists in COO layout.
+    hit = (local[:, :, None] == t_iota) & (bits[:, :, None] > 0)
+    acc_ref[...] += jnp.sum(hit.astype(jnp.int32), axis=1)
+
+    @pl.when(k == k_steps - 1)
+    def _finalize():
+        hit_bits = (acc_ref[...] > 0).astype(jnp.uint32)  # (BM, BD)
+        bm = hit_bits.shape[0]
+        lanes = hit_bits.reshape(bm, bd // 32, 32)
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+        out_ref[...] = jnp.sum(lanes << shifts, axis=-1, dtype=jnp.uint32
+                               ).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d", "psi_seed", "pi_seed", "bm", "bd", "bk",
+                              "interpret")
+)
+def cabin_build_sparse(
+    indices: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    d: int,
+    psi_seed: int,
+    pi_seed: int,
+    bm: int = 8,
+    bd: int = 512,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused Cabin on padded-COO rows: (N, m) x2 int32 -> (N, d/32) int32.
+
+    indices[i, k] is the attribute position of slot k of row i; values[i, k]
+    its category, with 0 meaning padding/missing.  Requires d % 128 == 0
+    (see module docstring).
+    """
+    if indices.shape != values.shape or indices.ndim != 2:
+        raise ValueError("indices/values must be identically-shaped (N, m)")
+    n_rows, m = indices.shape
+    if d % 128:
+        raise ValueError("cabin_build_sparse kernel requires d % 128 == 0")
+    bd_ = min(bd, d)
+    while d % bd_:
+        bd_ //= 2
+    bd_ = max(bd_, 128)
+    bm_ = min(bm, max(1, n_rows))
+    bk_ = min(bk, m)
+
+    pad_rows = (-n_rows) % bm_
+    pad_cols = (-m) % bk_
+    # zero padding is safe: value 0 => psi bit 0 => no contribution
+    idx_p = jnp.pad(indices, ((0, pad_rows), (0, pad_cols)))
+    val_p = jnp.pad(values, ((0, pad_rows), (0, pad_cols)))
+    mp, m_p = idx_p.shape
+    k_steps = m_p // bk_
+    grid = (mp // bm_, d // bd_, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _cabin_sparse_kernel,
+            psi_seed=psi_seed,
+            pi_seed=pi_seed,
+            d=d,
+            bd=bd_,
+            k_steps=k_steps,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, t, k: (i, k)),
+            pl.BlockSpec((bm_, bk_), lambda i, t, k: (i, k)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bd_ // 32), lambda i, t, k: (i, t)),
+        out_shape=jax.ShapeDtypeStruct((mp, d // 32), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm_, bd_), jnp.int32)],
+        interpret=interpret,
+    )(idx_p, val_p)
+    return out[:n_rows]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the cabin_build_sparse kernel: the core-library
+scatter-max Cabin path on padded-COO rows."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cabin import CabinParams, sketch_sparse_jnp
+
+
+def cabin_build_sparse_ref(
+    indices: jnp.ndarray, values: jnp.ndarray, *, n_dims: int, d: int,
+    psi_seed: int, pi_seed: int,
+) -> jnp.ndarray:
+    params = CabinParams(n_dims=n_dims, sketch_dim=d,
+                         psi_seed=psi_seed, pi_seed=pi_seed)
+    return sketch_sparse_jnp(params, indices, values)

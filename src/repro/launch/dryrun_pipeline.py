@@ -36,6 +36,7 @@ from repro.core.cabin import CabinParams, binem
 from repro.core.cham import binhamming_from_stats, cham_matrix
 from repro.core.packing import pack_bits, popcount32, unpack_bits
 from repro.launch import roofline as rl
+from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh
 
 N_DOCS = 65536
@@ -118,7 +119,7 @@ def run_variant(variant: str, multi_pod: bool, out_dir: str,
               "mesh": mesh_name, "tag": variant, "mode": "pipeline",
               "overrides": {}}
     try:
-        with jax.sharding.set_mesh(mesh):
+        with shd.set_mesh(mesh):
             idx = jax.ShapeDtypeStruct((N_DOCS, MAX_NNZ), jnp.int32)
             val = jax.ShapeDtypeStruct((N_DOCS, MAX_NNZ), jnp.int32)
             dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

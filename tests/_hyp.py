@@ -1,0 +1,102 @@
+"""Optional-`hypothesis` shim for the property tests.
+
+The container this repo is developed in does not ship `hypothesis`
+(see requirements-dev.txt); hard imports used to abort the whole tier-1
+suite at collection.  This module re-exports the real `given` / `settings` /
+`strategies` when the package is installed, and otherwise provides a tiny
+deterministic fallback that draws a fixed number of seeded examples from the
+few strategy shapes these tests actually use (`integers`, `lists`, `text`).
+
+The fallback is NOT hypothesis: no shrinking, no database, no edge-case
+bias — just seeded random sampling so the properties still get exercised.
+Install `hypothesis` (pip install -r requirements-dev.txt) for the real
+thing.
+"""
+
+from __future__ import annotations
+
+import string
+
+try:  # pragma: no cover - exercised implicitly by which branch imports
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def sample(self, rng):  # pragma: no cover - abstract
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Lists(_Strategy):
+        def __init__(self, elems: _Strategy, min_size: int, max_size: int):
+            self.elems, self.min_size, self.max_size = elems, min_size, max_size
+
+        def sample(self, rng):
+            size = int(rng.integers(self.min_size, self.max_size + 1))
+            return [self.elems.sample(rng) for _ in range(size)]
+
+    class _Text(_Strategy):
+        _ALPHABET = string.ascii_letters + string.digits + " .,;:!?\n\t"
+
+        def __init__(self, max_size: int):
+            self.max_size = max_size
+
+        def sample(self, rng):
+            size = int(rng.integers(0, self.max_size + 1))
+            chars = rng.integers(0, len(self._ALPHABET), size=size)
+            return "".join(self._ALPHABET[c] for c in chars)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def lists(elems: _Strategy, *, min_size: int = 0,
+                  max_size: int = 16) -> _Strategy:
+            return _Lists(elems, min_size, max_size)
+
+        @staticmethod
+        def text(*, max_size: int = 32) -> _Strategy:
+            return _Text(max_size)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, deadline=None, **_kw):
+        """Record max_examples on the decorated function (order-agnostic
+        with `given`: the wrapper re-reads the attribute at call time)."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # No functools.wraps: copying __wrapped__ would make pytest
+            # introspect the original signature and demand fixtures for the
+            # strategy-filled parameters.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 10))
+                rng = np.random.default_rng(0xB1A5)
+                for _ in range(n):
+                    fn(*[s.sample(rng) for s in strats])
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

@@ -1,0 +1,189 @@
+"""Streaming all-pairs engine vs dense references, and end-to-end
+equivalence of the rewired dedup / k-mode consumers."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import allpairs
+from repro.core.cabin import CabinParams, sketch_dense
+from repro.core.cham import cham_matrix, hamming_matrix_exact
+from repro.core.kmode import kmode_precomputed
+from repro.data.dedup import (dedup_by_sketch, dedup_by_sketch_blocked,
+                              docs_to_categorical, sketch_corpus)
+from repro.data.pipeline import synthetic_documents
+
+D = 512
+_cham_jit = jax.jit(cham_matrix, static_argnums=2)
+
+
+def _sketches(n_rows=96, n=2500, density=150, seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n_rows, n), np.int32)
+    for i in range(n_rows):
+        idx = rng.choice(n, size=density, replace=False)
+        x[i, idx] = rng.integers(1, 10, size=density)
+    p = CabinParams.create(n, D, seed=1)
+    return np.asarray(sketch_dense(p, jnp.asarray(x)))
+
+
+SK = _sketches()
+REF = np.asarray(_cham_jit(jnp.asarray(SK), jnp.asarray(SK), D))
+IU = np.triu_indices(len(SK), 1)
+
+
+# ---------------------------------------------------------------------------
+# threshold candidate extraction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["matmul", "popcount", "pallas"])
+@pytest.mark.parametrize("block", [17, 64, 96])
+def test_threshold_pairs_matches_dense(mode, block):
+    thr = float(np.percentile(REF[IU], 10))
+    got = allpairs.threshold_pairs(SK, d=D, threshold=thr, block=block,
+                                   mode=mode)
+    want = {(i, j) for i, j in zip(*IU) if REF[i, j] < thr}
+    assert {tuple(p) for p in got} == want
+    assert got.dtype == np.int32 and got.shape[1] == 2
+
+
+def test_threshold_pairs_overflow_retry():
+    thr = float(np.percentile(REF[IU], 50))  # lots of candidates
+    got = allpairs.threshold_pairs(SK, d=D, threshold=thr, block=32,
+                                   capacity=4)  # forces doubling re-runs
+    want = {(i, j) for i, j in zip(*IU) if REF[i, j] < thr}
+    assert {tuple(p) for p in got} == want
+
+
+def test_threshold_pairs_asymmetric_and_hamming():
+    b = SK[:30]
+    ref_ab = np.asarray(hamming_matrix_exact(jnp.asarray(SK), jnp.asarray(b)))
+    thr = float(np.percentile(ref_ab, 15))
+    got = allpairs.threshold_pairs(SK, b, d=D, threshold=thr,
+                                   metric="hamming", block=25)
+    want = set(zip(*np.where(ref_ab < thr)))
+    assert {tuple(p) for p in got} == want
+
+
+def test_threshold_pairs_empty_result():
+    got = allpairs.threshold_pairs(SK, d=D, threshold=-1.0, block=64)
+    assert got.shape == (0, 2)
+
+
+def _off_boundary_threshold(vals: np.ndarray, q: float) -> float:
+    """A threshold near the q-th percentile that sits in a wide gap of the
+    distance distribution: the banded path's log-free comparison is exactly
+    equivalent in real arithmetic but can flip knife-edge pairs whose
+    distance EQUALS the threshold to the last float ulp."""
+    s = np.unique(np.sort(vals))
+    k = int(np.clip(np.searchsorted(s, np.percentile(vals, q)), 1, len(s) - 1))
+    for off in range(len(s) - k - 1):
+        lo, hi = s[k - 1 + off], s[k + off]
+        if hi - lo > 1e-2:
+            return float((lo + hi) / 2)
+    return float(s[-1] + 1.0)
+
+
+@pytest.mark.parametrize("block", [16, 32, 96])
+def test_threshold_pairs_banded_matches_dense(block):
+    """Weight-sorted banded fast path: same candidate set as the dense
+    reference — the band bound (cham >= 2|a_hat - b_hat|) never drops a
+    true candidate."""
+    order = np.argsort(
+        np.unpackbits(np.ascontiguousarray(SK).view(np.uint8), axis=1)
+        .sum(axis=1), kind="stable")
+    sks = SK[order]
+    refs = np.asarray(_cham_jit(jnp.asarray(sks), jnp.asarray(sks), D))
+    for q in [5, 40]:
+        thr = _off_boundary_threshold(refs[IU], q)
+        got = allpairs.threshold_pairs(sks, d=D, threshold=thr, block=block,
+                                       sorted_by_weight=True)
+        want = {(i, j) for i, j in zip(*IU) if refs[i, j] < thr}
+        assert {tuple(p) for p in got} == want
+
+
+def test_threshold_pairs_banded_rejects_unsorted():
+    with pytest.raises(ValueError, match="not sorted"):
+        # SK is in random order with overwhelming probability
+        allpairs.threshold_pairs(SK, d=D, threshold=10.0,
+                                 sorted_by_weight=True)
+
+
+# ---------------------------------------------------------------------------
+# row-wise reductions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["matmul", "popcount"])
+def test_argmin_rows_matches_dense(mode):
+    rng = np.random.default_rng(3)
+    centers = SK[rng.choice(len(SK), 7, replace=False)]
+    refc = np.asarray(_cham_jit(jnp.asarray(SK), jnp.asarray(centers), D))
+    for block in [3, 7]:
+        idxs, vals = allpairs.argmin_rows(SK, centers, d=D, block=block,
+                                          mode=mode)
+        np.testing.assert_array_equal(idxs, refc.argmin(axis=1))
+        np.testing.assert_allclose(vals, refc.min(axis=1), rtol=1e-6)
+
+
+def test_topk_rows_matches_dense():
+    idxs, vals = allpairs.topk_rows(SK, SK, 5, d=D, block=41)
+    order = np.argsort(REF, axis=1, kind="stable")[:, :5]
+    np.testing.assert_array_equal(idxs, order)
+    np.testing.assert_allclose(vals, np.take_along_axis(REF, order, axis=1),
+                               rtol=1e-6)
+    # self is always the nearest neighbour at (near-)zero distance
+    np.testing.assert_array_equal(idxs[:, 0], np.arange(len(SK)))
+    assert float(np.abs(vals[:, 0]).max()) < 1e-3
+
+
+def test_rowsum_matches_dense():
+    got = allpairs.rowsum(SK, d=D, block=29)
+    np.testing.assert_allclose(got, REF.sum(axis=1), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end consumer equivalence (the rewire contract)
+# ---------------------------------------------------------------------------
+
+
+def _corpus_sketches(n_docs=220, vocab=4096, seed=7):
+    gen = synthetic_documents(vocab, seed=seed, dup_fraction=0.3)
+    docs = [next(gen) for _ in range(n_docs)]
+    idx, val = docs_to_categorical(docs, vocab)
+    _, sk = sketch_corpus(idx, val, vocab, sketch_dim=D, seed=0)
+    return sk
+
+
+def test_dedup_streaming_equals_blocked_seed_path():
+    sk = _corpus_sketches()
+    new = dedup_by_sketch(sk, D, threshold=40.0, block=64)
+    old = dedup_by_sketch_blocked(sk, D, threshold=40.0, block=64)
+    np.testing.assert_array_equal(new.keep_mask, old.keep_mask)
+    np.testing.assert_array_equal(new.group_ids, old.group_ids)
+    assert new.n_groups == old.n_groups
+    assert new.n_removed == old.n_removed
+    assert new.n_removed > 0  # the corpus really contains duplicates
+
+
+def test_dedup_handles_no_duplicates_and_empty():
+    sk = _corpus_sketches(n_docs=40)
+    none = dedup_by_sketch(sk, D, threshold=0.0)
+    assert none.n_removed == 0 and none.n_groups == 40
+    empty = dedup_by_sketch(sk[:0], D, threshold=40.0)
+    assert empty.n_groups == 0 and empty.n_removed == 0
+
+
+def test_kmode_precomputed_engine_equals_oracle():
+    sk = _corpus_sketches(n_docs=150)
+
+    def dist_fn(a, b):
+        return np.asarray(_cham_jit(jnp.asarray(a), jnp.asarray(b), D))
+
+    for seed in range(3):
+        legacy = kmode_precomputed(dist_fn, sk.copy(), k=4, seed=seed)
+        engine = kmode_precomputed(None, sk.copy(), k=4, seed=seed,
+                                   sketch_dim=D)
+        np.testing.assert_array_equal(legacy, engine)

@@ -4,7 +4,7 @@ Theorem 2, plus estimator internals, on controlled synthetic data."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis when installed, fallback otherwise
 
 from repro.core import CabinParams, packing
 from repro.core.cabin import binem, binsketch, sketch_dense, sketch_sparse

@@ -2,7 +2,7 @@
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis when installed, fallback otherwise
 
 from repro.core import packing
 

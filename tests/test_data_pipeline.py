@@ -3,7 +3,7 @@ generator statistics, tokenizer round-trips."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis when installed, fallback otherwise
 
 from repro.data import tokenizer
 from repro.data.dedup import (dedup_by_sketch, dedup_exact,

@@ -5,7 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis when installed, fallback otherwise
 
 from repro.configs.base import (MoEConfig, ParallelConfig, reduced_for_smoke)
 from repro.configs.registry import get_config
