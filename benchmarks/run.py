@@ -17,11 +17,13 @@ import traceback
 
 # suites whose results feed the BENCH_kernels.json perf trajectory
 _TRAJECTORY_SUITES = ("kernel_packed", "kernel_cham", "kernel_sketch",
-                      "kernel_sparse_sketch", "dedup", "dedup_streaming")
+                      "kernel_sparse_sketch", "dedup", "dedup_streaming",
+                      "index")
 
 
 def main() -> None:
-    from benchmarks import bench_dedup, bench_kernels, bench_paper
+    from benchmarks import bench_dedup, bench_index, bench_kernels, \
+        bench_paper
 
     suites = [
         ("fig2_table3", bench_paper.fig2_table3_reduction_speed),
@@ -37,6 +39,7 @@ def main() -> None:
         ("kernel_sparse_sketch", bench_kernels.bench_sparse_sketch),
         ("dedup", bench_dedup.dedup_sketch_vs_exact),
         ("dedup_streaming", bench_dedup.dedup_streaming_vs_blocked),
+        ("index", bench_index.bench_index),
     ]
     only = None
     for i, arg in enumerate(sys.argv[1:]):

@@ -6,10 +6,17 @@ Public API:
     sketch_dim, theorem2_bound                                   (theory)
     pack_bits, unpack_bits, popcount_rows, packed_hamming        (packing)
     threshold_pairs, argmin_rows, topk_rows, rowsum              (allpairs)
+
+The query-shaped entry points over a PERSISTENT collection — SketchStore,
+BandedLayout, QueryEngine (repro.index) — are re-exported here lazily (PEP
+562) so `from repro.core import QueryEngine` works without importing the
+index subsystem (which itself imports repro.core) at package-init time.
 """
 
 from repro.core.allpairs import (  # noqa: F401
     argmin_rows,
+    prune_factor,
+    prune_score_host,
     rowsum,
     threshold_pairs,
     topk_rows,
@@ -36,12 +43,26 @@ from repro.core.cham import (  # noqa: F401
     jaccard_estimate,
 )
 from repro.core.packing import (  # noqa: F401
+    np_popcount_rows,
     pack_bits,
     packed_hamming,
     packed_inner,
     packed_width,
     popcount32,
     popcount_rows,
+    pow2_bucket,
     unpack_bits,
 )
 from repro.core.theory import sketch_dim, theorem2_bound  # noqa: F401
+
+# repro.index entry points, resolved lazily to break the import cycle
+# (repro.index imports repro.core at module load).
+_INDEX_EXPORTS = ("SketchStore", "BandedLayout", "QueryEngine")
+
+
+def __getattr__(name):
+    if name in _INDEX_EXPORTS:
+        from repro import index as _index
+
+        return getattr(_index, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,12 +1,19 @@
 """Streaming all-pairs engine over packed Cabin sketches.
 
 Every O(N^2) consumer in this repo (dedup candidate generation, k-mode
-assignment, medoid updates, nearest-neighbour queries) used to materialise
-full (N, M) Cham/Hamming matrices and sync them to host block by block.
-This module replaces that with device-resident tiled passes: the distance
-tile is computed, REDUCED, and discarded inside a single fused `lax`
-loop, so peak memory is O(N * block) and exactly one host transfer happens
-per query — the compact result.
+assignment, medoid updates) used to materialise full (N, M) Cham/Hamming
+matrices and sync them to host block by block.  This module replaces that
+with device-resident tiled passes: the distance tile is computed, REDUCED,
+and discarded inside a single fused `lax` loop, so peak memory is
+O(N * block) and exactly one host transfer happens per query — the compact
+result.
+
+This is a BATCH engine: it consumes whole matrices of packed sketches.  The
+query-shaped API over a persistent, incrementally updated collection lives
+in `repro.index` (SketchStore / QueryEngine, DESIGN.md section 8), which
+drives the reductions below — `topk_rows` for k-NN serving and
+`threshold_pairs` for radius queries — over its device-resident buffers and
+is re-exported from `repro.core` for discoverability.
 
 Reductions provided:
 
@@ -60,6 +67,22 @@ def _auto_mode(mode: str | None) -> str:
     if mode is not None:
         return mode
     return "pallas" if jax.default_backend() == "tpu" else "popcount"
+
+
+# Slack added to every weight-band prune test: distances are O(10..1000),
+# cross-graph float noise between the bound and the estimator's internals is
+# O(1e-3), so the margin makes the prune sound without costing selectivity.
+PRUNE_MARGIN = 0.05
+
+
+def prune_factor(metric: str) -> float:
+    """`dist(i, j) >= prune_factor * |s_i - s_j|` for the per-row prune
+    score s (see prune_score_host): 2 for cham, 1 for exact hamming."""
+    if metric == "cham":
+        return 2.0
+    if metric == "hamming":
+        return 1.0
+    raise ValueError(f"unknown metric {metric!r}")
 
 
 def _tile_inner(a_blk: jnp.ndarray, b_blk: jnp.ndarray, d: int, mode: str
@@ -158,20 +181,21 @@ def _prune_scores(x_p, n_valid, d, metric):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "m", "block", "capacity", "symmetric", "metric",
-                     "mode", "d"),
+    static_argnames=("block", "capacity", "symmetric", "metric", "mode", "d"),
 )
-def _threshold_pairs_impl(a_p, b_p, offsets, threshold, *, n, m, block,
+def _threshold_pairs_impl(a_p, b_p, offsets, threshold, n, m, *, block,
                           capacity, symmetric, metric, mode, d):
+    # n and m are TRACED valid-row counts: repro.index pads its query batches
+    # and store gathers to power-of-two shapes, so the compile cache must key
+    # on the bucketed shapes only, not on the live row counts.
     n_tiles = offsets.shape[0]
     row_iota = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
     col_iota = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
-    factor = 2.0 if metric == "cham" else 1.0
+    factor = prune_factor(metric)
     # weight-band tile prune: per-block score ranges; a tile whose blocks'
     # score intervals are further apart than threshold/factor cannot contain
-    # a candidate, so its distance tile is never computed.  The 0.05 margin
-    # absorbs float noise between this bound and the estimator's internals
-    # (distances are O(10..1000); cross-graph noise is O(1e-3)).
+    # a candidate, so its distance tile is never computed (PRUNE_MARGIN
+    # absorbs float noise between this bound and the estimator's internals).
     sa_min, sa_max = _prune_scores(a_p, n, d, metric)
     sb_min, sb_max = _prune_scores(b_p, m, d, metric)
     blk_a_min = sa_min.reshape(-1, block).min(axis=1)
@@ -188,7 +212,7 @@ def _threshold_pairs_impl(a_p, b_p, offsets, threshold, *, n, m, block,
         gap = jnp.maximum(
             jnp.maximum(blk_b_min[jb] - blk_a_max[ib],
                         blk_a_min[ib] - blk_b_max[jb]), 0.0)
-        prunable = factor * gap >= threshold + 0.05
+        prunable = factor * gap >= threshold + PRUNE_MARGIN
 
         def compute(carry):
             a_blk = jax.lax.dynamic_slice(a_p, (i0, 0), (block, a_p.shape[1]))
@@ -275,9 +299,11 @@ def _banded_pairs_impl(a_pp, threshold, *, n, block, width, capacity, metric,
     return buf_i, buf_j, count
 
 
-def _np_prune_score(weights: np.ndarray, d: int, metric: str) -> np.ndarray:
-    """Host twin of _prune_scores for band-width planning (float64; the
-    0.05 prune margin absorbs the f32/f64 gap)."""
+def prune_score_host(weights: np.ndarray, d: int, metric: str) -> np.ndarray:
+    """Host twin of _prune_scores for band planning (float64; PRUNE_MARGIN
+    absorbs the f32/f64 gap).  Shared with repro.index.bands, which uses the
+    same `dist >= prune_factor * |s_i - s_j|` bound to skip whole weight
+    bands of its store before any distance tile is computed."""
     if metric == "cham":
         w = weights.astype(np.float64)
         return np.log(np.clip(1.0 - w / d, 1e-9, 1.0)) / np.log1p(-1.0 / d)
@@ -288,7 +314,7 @@ def _band_width(scores: np.ndarray, n: int, block: int, threshold: float,
                 factor: float) -> int:
     """Max strip width so that every j >= i0 + width is prunable for row
     block i0 (columns beyond it satisfy factor*gap >= threshold + margin)."""
-    reach = (threshold + 0.05) / factor
+    reach = (threshold + PRUNE_MARGIN) / factor
     width = block
     for i0 in range(0, n, block):
         s_hi = scores[min(i0 + block, n) - 1]
@@ -311,6 +337,8 @@ def threshold_pairs(
     mode: str | None = None,
     sorted_by_weight: bool = False,
     weights: np.ndarray | None = None,
+    n_valid: int | None = None,
+    m_valid: int | None = None,
 ) -> np.ndarray:
     """All pairs (i, j) with dist(a[i], b[j]) < threshold, as a compact
     (K, 2) int32 host array.
@@ -319,6 +347,12 @@ def threshold_pairs(
     `capacity` bounds the candidate buffer on device; on overflow the pass
     transparently re-runs with doubled capacity (a recompile, so size it
     generously when the duplicate rate is known).
+
+    `n_valid` / `m_valid` declare how many leading rows of a / b are real
+    when the caller has padded the arrays to bucketed shapes (repro.index
+    pads to powers of two so its query mix reuses a handful of compiled
+    graphs); rows past the valid count never produce pairs.  The counts are
+    traced, so varying them does NOT recompile.  Asymmetric path only.
 
     `sorted_by_weight=True` (symmetric only) promises the rows are sorted by
     sketch Hamming weight; the scan then switches to banded strips whose
@@ -334,14 +368,26 @@ def threshold_pairs(
     device popcount + host sync).
     """
     symmetric = b is None
+    if symmetric and (n_valid is not None or m_valid is not None):
+        raise ValueError("n_valid/m_valid require an explicit b "
+                         "(asymmetric scan)")
     a = jnp.asarray(a)
     b_arr = a if symmetric else jnp.asarray(b)
-    n, m = a.shape[0], b_arr.shape[0]
+    n = a.shape[0] if n_valid is None else n_valid
+    m = b_arr.shape[0] if m_valid is None else m_valid
+    if not (0 <= n <= a.shape[0] and 0 <= m <= b_arr.shape[0]):
+        raise ValueError(f"n_valid/m_valid ({n}, {m}) outside the supplied "
+                         f"rows ({a.shape[0]}, {b_arr.shape[0]})")
     if n == 0 or m == 0:
         return np.zeros((0, 2), np.int32)
-    block = max(1, min(block, max(n, m)))
+    # block and capacity are STATIC jit args of the impls: derive block from
+    # the (bucketed) array shapes and round capacity to a power of two, so
+    # callers whose valid counts drift by a few rows per call (the index
+    # engine's radius path under add/remove churn) reuse compiled graphs
+    block = max(1, min(block, max(a.shape[0], b_arr.shape[0])))
     if capacity is None:
         capacity = max(4096, 8 * max(n, m))
+    capacity = packing.pow2_bucket(capacity)
     mode = _auto_mode(mode)
 
     def run_with_capacity(run, capacity):
@@ -352,7 +398,7 @@ def threshold_pairs(
             if cnt <= capacity:
                 return np.stack(
                     [np.asarray(bi)[:cnt], np.asarray(bj)[:cnt]], axis=1)
-            capacity = max(2 * capacity, cnt)
+            capacity = packing.pow2_bucket(max(2 * capacity, cnt))
 
     if symmetric and sorted_by_weight:
         if weights is None:
@@ -360,8 +406,8 @@ def threshold_pairs(
         if np.any(np.diff(weights) < 0):
             raise ValueError("sorted_by_weight=True but rows are not sorted "
                              "by sketch weight")
-        scores = _np_prune_score(weights, d, metric)
-        factor = 2.0 if metric == "cham" else 1.0
+        scores = prune_score_host(weights, d, metric)
+        factor = prune_factor(metric)
         width = _band_width(scores, n, block, threshold, factor)
         n_pad = ((n + block - 1) // block) * block
         a_pp = jnp.pad(a, ((0, n_pad + width - n), (0, 0)))
@@ -387,9 +433,9 @@ def threshold_pairs(
 
     return run_with_capacity(
         lambda cap: _threshold_pairs_impl(
-            a_p, b_p, offsets, jnp.float32(threshold), n=n, m=m, block=block,
-            capacity=cap, symmetric=symmetric, metric=metric, mode=mode,
-            d=d),
+            a_p, b_p, offsets, jnp.float32(threshold), jnp.int32(n),
+            jnp.int32(m), block=block, capacity=cap, symmetric=symmetric,
+            metric=metric, mode=mode, d=d),
         capacity)
 
 
@@ -443,8 +489,12 @@ def argmin_rows(a, b, *, d: int, metric: str = "cham", block: int = 2048,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("m", "k", "block", "metric", "mode", "d"))
-def _topk_rows_impl(a, b_p, *, m, k, block, metric, mode, d):
+    jax.jit, static_argnames=("k", "block", "metric", "mode", "d"))
+def _topk_rows_impl(a, b_p, m, *, k, block, metric, mode, d):
+    # m is a TRACED valid-row count (cf. _threshold_pairs_impl): repro.index
+    # queries a power-of-two-padded store gather whose live size changes with
+    # every add/remove — keying the compile cache on it would recompile per
+    # mutation.  Columns past m are masked to +inf and can never be returned.
     n_tiles = b_p.shape[0] // block
     n = a.shape[0]
 
@@ -468,17 +518,24 @@ def _topk_rows_impl(a, b_p, *, m, k, block, metric, mode, d):
 
 
 def topk_rows(a, b, k: int, *, d: int, metric: str = "cham",
-              block: int = 2048, mode: str | None = None):
+              block: int = 2048, mode: str | None = None,
+              m_valid: int | None = None):
     """Per-row k nearest columns of b: (indices (N, k), distances (N, k)),
-    ascending by distance, streaming over blocks of b."""
+    ascending by distance, streaming over blocks of b.  Ties are broken by
+    the LOWER column index (stable merge).  `m_valid` declares how many
+    leading rows of b are real when b is padded to a bucketed shape
+    (repro.index); it is traced, so varying it does not recompile."""
     a = jnp.asarray(a)
     b = jnp.asarray(b)
-    m = b.shape[0]
+    m = b.shape[0] if m_valid is None else m_valid
+    if not 0 <= m <= b.shape[0]:
+        raise ValueError(f"m_valid={m} outside the {b.shape[0]} supplied "
+                         "rows")
     k = min(k, m)
-    block = max(1, min(block, m))
+    block = max(1, min(block, b.shape[0]))
     b_p = _pad_rows(b, block)
-    vals, idxs = _topk_rows_impl(a, b_p, m=m, k=k, block=block, metric=metric,
-                                 mode=_auto_mode(mode), d=d)
+    vals, idxs = _topk_rows_impl(a, b_p, jnp.int32(m), k=k, block=block,
+                                 metric=metric, mode=_auto_mode(mode), d=d)
     return np.asarray(idxs), np.asarray(vals)
 
 
@@ -507,14 +564,7 @@ def _rowsum_impl(a_p, b_p, m, *, block, metric, mode, d):
         0, n_tiles, body, jnp.zeros((a_p.shape[0],), jnp.float32))
 
 
-def _pow2_rows(x: jnp.ndarray, floor: int = 8) -> jnp.ndarray:
-    """Zero-pad rows up to the next power of two (>= floor): bounds the
-    number of distinct compiled shapes to O(log n) across varying inputs."""
-    n = x.shape[0]
-    target = floor
-    while target < n:
-        target *= 2
-    return jnp.pad(x, ((0, target - n), (0, 0))) if target > n else x
+_pow2_rows = packing.pad_rows_pow2
 
 
 def rowsum(a, b=None, *, d: int, metric: str = "cham", block: int = 2048,

@@ -72,6 +72,51 @@ def packed_inner(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(popcount32(a & b), axis=-1)
 
 
+def pow2_bucket(n: int, floor: int = 8) -> int:
+    """Next power of two >= max(n, floor) — THE shape-bucketing rule.
+
+    Shared by the all-pairs engine's row padding, the index store's buffer
+    capacities, and the query engine's micro-batching: keeping one rule in
+    one place is what bounds the number of distinct compiled graphs to
+    O(log N) across every caller at once.
+    """
+    target = floor
+    while target < n:
+        target *= 2
+    return target
+
+
+def pad_rows_pow2(x: jnp.ndarray, floor: int = 8) -> jnp.ndarray:
+    """Zero-pad leading rows up to pow2_bucket(n): bounds the number of
+    distinct compiled shapes to O(log n) across varying row counts."""
+    n = x.shape[0]
+    target = pow2_bucket(n, floor)
+    if target == n:
+        return x
+    widths = ((0, target - n),) + ((0, 0),) * (x.ndim - 1)
+    return jnp.pad(x, widths)
+
+
+def padded_take(x: jnp.ndarray, rows: np.ndarray, floor: int = 8
+                ) -> jnp.ndarray:
+    """Gather `rows` of x into a pow2_bucket-padded device matrix (pad
+    slots replicate row 0 — callers mask them via traced valid counts).
+    The one gather idiom behind the index store/band views."""
+    perm = np.zeros(pow2_bucket(len(rows), floor), np.int64)
+    perm[: len(rows)] = rows
+    return jnp.take(x, jnp.asarray(perm), axis=0)
+
+
+def np_popcount_rows(words: np.ndarray) -> np.ndarray:
+    """NumPy twin of popcount_rows for host-side planning (dedup weight
+    ordering, index band layout): (N, w) int32 -> (N,) int64."""
+    if words.size == 0:
+        return np.zeros(words.shape[0], np.int64)
+    return np.unpackbits(
+        np.ascontiguousarray(words).view(np.uint8), axis=1).sum(
+            axis=1, dtype=np.int64)
+
+
 def np_pack_bits(bits: np.ndarray) -> np.ndarray:
     """NumPy twin of pack_bits for host-side pipelines (dedup, tests)."""
     *lead, d = bits.shape

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 
 import jax
 
-from repro.core import allpairs
+from repro.core import allpairs, packing
 from repro.core.cabin import CabinParams, sketch_sparse_jit
 from repro.core.cham import cham_matrix
 
@@ -137,8 +137,12 @@ def dedup_by_sketch(
     block: int = 256,
     use_kernel: bool = False,
     capacity: int | None = None,
+    metric: str = "cham",
 ) -> DedupResult:
-    """Union docs whose estimated Hamming distance < threshold.
+    """Union docs whose distance < threshold under `metric` ("cham" =
+    estimated categorical HD, the default; "hamming" = exact sketch HD —
+    used by index ingest so its threshold shares units with the serving
+    engine's distances).
 
     Streaming pass: rows are scanned in sketch-weight order so the engine's
     weight-band prune can skip tiles whose length ranges are incompatible
@@ -154,13 +158,14 @@ def dedup_by_sketch(
     if n == 0:
         return _result_from_roots(np.arange(0), 0)
     sk = np.ascontiguousarray(sketches)
-    weights = np.unpackbits(sk.view(np.uint8), axis=1).sum(axis=1)
+    weights = packing.np_popcount_rows(sk)
     order = np.argsort(weights, kind="stable").astype(np.int64)
     force_pallas = use_kernel and jax.default_backend() == "tpu"
     pairs = allpairs.threshold_pairs(
         sk[order],
         d=sketch_dim,
         threshold=threshold,
+        metric=metric,
         block=block,
         capacity=capacity,
         mode="pallas" if force_pallas else None,

@@ -16,7 +16,7 @@ from __future__ import annotations
 import queue
 import threading
 from dataclasses import dataclass
-from typing import Iterator
+from typing import Iterable, Iterator
 
 import numpy as np
 
@@ -69,6 +69,33 @@ def synthetic_documents(
         yield doc
 
 
+def document_windows(
+    docs: Iterable[np.ndarray], window: int
+) -> Iterator[list[np.ndarray]]:
+    """Group a document stream into fixed-size windows.
+
+    The unit of work for every streaming sketch consumer: the dedup stage
+    below sketches one window at a time, and repro.index.ingest feeds
+    windows into a live QueryEngine.  A finite stream yields its last,
+    possibly short, window; an infinite stream yields forever.  Accepts any
+    iterable; a re-iterable (list) is consumed once, like an iterator.
+    """
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    docs = iter(docs)
+    while True:
+        batch: list[np.ndarray] = []
+        for doc in docs:
+            batch.append(doc)
+            if len(batch) == window:
+                break
+        if not batch:
+            return
+        yield batch
+        if len(batch) < window:  # stream exhausted mid-window
+            return
+
+
 def _pack_documents(
     docs: Iterator[np.ndarray], seq_len: int
 ) -> Iterator[np.ndarray]:
@@ -103,8 +130,7 @@ class BatchPipeline:
     # -- dedup stage --------------------------------------------------------
     def _dedup_stream(self, docs: Iterator[np.ndarray]) -> Iterator[np.ndarray]:
         cfg = self.cfg
-        while True:
-            window = [next(docs) for _ in range(cfg.dedup_window)]
+        for window in document_windows(docs, cfg.dedup_window):
             idx, val = dedup_mod.docs_to_categorical(window, cfg.vocab_size)
             _, sketches = dedup_mod.sketch_corpus(
                 idx, val, cfg.vocab_size, cfg.dedup_sketch_dim, seed=cfg.seed

@@ -1,0 +1,23 @@
+"""repro.index: online sketch index + query serving (DESIGN.md section 8).
+
+Turns the batch primitives (core.cabin sketching, core.allpairs streaming
+reductions) into a serveable system: a persistent, incrementally updated
+collection of packed Cabin sketches with batched k-NN and radius queries,
+checkpointing, and opt-in sharding.
+
+Public API:
+    SketchStore        — pow2-capacity device buffers; add / remove(tomb-
+                         stone) / compact without per-call recompiles
+    BandedLayout       — weight-banded snapshot; radius-query band pruning
+    QueryEngine        — add_dense / add_sparse / topk / radius / pairwise,
+                         save / restore, shard
+    ingest_documents   — data.pipeline document stream -> engine
+
+Results are bit-identical to the batch engine on the same membership; see
+tests/test_index.py for the pinned contracts.
+"""
+
+from repro.index.bands import BandedLayout  # noqa: F401
+from repro.index.engine import QueryEngine  # noqa: F401
+from repro.index.ingest import ingest_documents  # noqa: F401
+from repro.index.store import SketchStore  # noqa: F401

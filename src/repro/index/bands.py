@@ -1,0 +1,88 @@
+"""Weight-banded layout: the radius-query pruning structure over a store.
+
+A Cabin sketch's Hamming weight bounds how close it can be to anything:
+dist(u, v) >= prune_factor(metric) * |s_u - s_v| for the per-row prune score
+s (repro.core.allpairs.prune_score_host — the density estimate under cham,
+the raw weight under exact hamming).  PR 1 exploited this bound INSIDE the
+batch engine's tile loop; the index subsystem hoists it one level up: rows
+are kept weight-sorted and partitioned into contiguous BANDS, each band
+carrying its host-side score interval, so a radius query discards whole
+bands on host — before a single distance tile, device gather, or compile is
+touched (DESIGN.md section 8.2).
+
+The prune is sound (the bound holds with PRUNE_MARGIN slack for float
+noise), so the surviving candidate set — and therefore every result the
+QueryEngine returns — is identical whether bands were pruned or not.  That
+is what lets the layout be rebuilt lazily per store version without any
+bit-identity risk.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.allpairs import PRUNE_MARGIN, prune_factor, prune_score_host
+from repro.core.packing import padded_take
+from repro.index.store import SketchStore
+
+
+class BandedLayout:
+    """Immutable weight-sorted banded snapshot of a store version.
+
+    Rows are sorted by (sketch weight, id) — a total, history-independent
+    order — then cut into bands of `band_rows` consecutive rows.  The device
+    matrix holds the sorted rows padded to a power of two; `ids` maps sorted
+    positions back to external ids.
+    """
+
+    def __init__(self, store: SketchStore, metric: str,
+                 band_rows: int = 1024):
+        self.metric = metric
+        self.d = store.d
+        self.band_rows = int(band_rows)
+        self.version = store.version
+        slots = store.alive_slots()
+        weights = store._weights[slots]
+        # stable sort over id-ordered rows => total order (weight, id):
+        # incremental and fresh builds of the same membership agree exactly.
+        order = np.argsort(weights, kind="stable")
+        self.n = len(slots)
+        self.ids = store._ids[slots][order]
+        w_sorted = weights[order]
+        self.matrix = padded_take(store.sk_buf, slots[order])
+        self.n_bands = -(-self.n // self.band_rows) if self.n else 0
+        scores = prune_score_host(w_sorted, self.d, metric)
+        self.band_lo = np.asarray(
+            [scores[b * self.band_rows] for b in range(self.n_bands)])
+        self.band_hi = np.asarray(
+            [scores[min((b + 1) * self.band_rows, self.n) - 1]
+             for b in range(self.n_bands)])
+
+    def candidate_bands(self, query_weights: np.ndarray, radius: float
+                        ) -> np.ndarray:
+        """Bool mask over bands: band b survives iff SOME query's score is
+        within reach of its [lo, hi] score interval — i.e. the weight bound
+        cannot rule out every row in it."""
+        if self.n == 0 or len(query_weights) == 0:
+            return np.zeros(self.n_bands, bool)
+        qs = prune_score_host(np.asarray(query_weights), self.d, self.metric)
+        factor = prune_factor(self.metric)
+        gap = np.maximum(
+            np.maximum(self.band_lo[None, :] - qs[:, None],
+                       qs[:, None] - self.band_hi[None, :]), 0.0)
+        return (factor * gap < radius + PRUNE_MARGIN).any(axis=0)
+
+    def select(self, band_mask: np.ndarray
+               ) -> tuple[jnp.ndarray, int, np.ndarray]:
+        """Gather the surviving bands' rows: (matrix (pow2, w), n_selected,
+        ids (n_selected,)).  Bands are contiguous runs of the sorted matrix,
+        so selection is a single padded device take."""
+        kept = np.flatnonzero(band_mask)
+        if len(kept) == 0:
+            return self.matrix[:0], 0, self.ids[:0]
+        rows = np.concatenate([
+            np.arange(b * self.band_rows,
+                      min((b + 1) * self.band_rows, self.n))
+            for b in kept])
+        return padded_take(self.matrix, rows), len(rows), self.ids[rows]

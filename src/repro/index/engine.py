@@ -1,0 +1,369 @@
+"""QueryEngine: batched online similarity serving over a SketchStore.
+
+The public boundary of the index subsystem.  Raw categorical rows — dense
+(k, n) matrices or padded-COO (indices, values) pairs — go in; external ids
+and distances come out.  Sketching happens inside (`core.cabin.sketch_dense`
+/ `sketch_sparse`, which auto-dispatch to the fused Pallas kernels on TPU),
+so callers never handle packed words, seeds, or layouts.
+
+Serving disciplines (DESIGN.md section 8.3):
+
+  * Micro-batch shape bucketing.  Every ingest and query batch is padded to
+    a power-of-two row count (and nnz width for COO) before touching a jit
+    boundary; together with the store's traced valid-row counts this keeps
+    the number of compiled graphs O(log N + log Q) across arbitrary
+    request mixes.  Padding rows are all-zero categorical vectors, whose
+    sketches are all-zero and which every reduction masks out — they can
+    never contaminate a result.
+  * Bit-identity.  `topk` delegates to core.allpairs.topk_rows over the
+    store's id-ordered alive rows and `radius` to threshold_pairs over the
+    band-pruned rows, so results are bit-identical to running the batch
+    engine on a freshly built matrix of the same vectors — across any
+    interleaving of add/remove/compact, after checkpoint restore, and under
+    both metrics.  Ties in topk resolve to the lower id, matching
+    topk_rows' stable merge.
+  * LRU result cache.  Results are memoised on (op, args, store version,
+    query-sketch bytes); any mutation bumps the version, so stale hits are
+    impossible by construction.
+
+Persistence snapshots flow through checkpoint.Checkpointer (flat-tree save
+of the store buffers + hash seeds + metadata), and `shard` opt-in places the
+store rows across the data axes of a mesh via distributed.sharding.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import allpairs, packing
+from repro.core.cabin import (CabinParams, sketch_dense_jit,
+                              sketch_sparse_jit)
+from repro.core.packing import pad_rows_pow2, pow2_bucket
+from repro.index.bands import BandedLayout
+from repro.index.store import SketchStore
+
+_METRICS = ("cham", "hamming")
+
+
+class QueryEngine:
+    """Online k-NN / radius serving over Cabin sketches.
+
+    Parameters
+    ----------
+    params : CabinParams — hash seeds + dims; all ingested and queried rows
+        must share them (they define the sketch space).
+    metric : "cham" (estimated categorical HD) or "hamming" (exact sketch
+        HD) — fixed per engine so cached results and layouts stay coherent.
+    block / mode : tile size and backend forwarded to core.allpairs.
+    band_rows : rows per weight band (radius-query pruning granularity).
+    cache_entries : LRU result-cache capacity (0 disables caching).
+    """
+
+    def __init__(self, params: CabinParams, *, metric: str = "cham",
+                 block: int = 2048, mode: str | None = None,
+                 band_rows: int = 1024, cache_entries: int = 256):
+        if metric not in _METRICS:
+            raise ValueError(f"metric must be one of {_METRICS}")
+        self.params = params
+        self.metric = metric
+        self.block = block
+        self.mode = mode
+        self.band_rows = band_rows
+        self.store = SketchStore(params.sketch_dim)
+        self._banded: BandedLayout | None = None
+        self._cache: OrderedDict[tuple, tuple] = OrderedDict()
+        self._cache_entries = cache_entries
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -- basics -------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+    @property
+    def d(self) -> int:
+        return self.params.sketch_dim
+
+    def ids(self) -> np.ndarray:
+        return self.store.ids()
+
+    def stats(self) -> dict:
+        return {
+            "n_alive": len(self.store),
+            "size": self.store.size,
+            "capacity": self.store.capacity,
+            "version": self.store.version,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "n_bands": self._banded.n_bands if self._banded else None,
+        }
+
+    # -- sketching (shape-bucketed) ----------------------------------------
+
+    def _sketch(self, queries) -> tuple[jnp.ndarray, int]:
+        """Raw categorical input -> (packed sketches (pow2-padded, w), k).
+
+        `queries` is a dense (k, n_dims) int array, or an (indices, values)
+        padded-COO pair.  Both layouts are padded to power-of-two buckets
+        (rows, and nnz width for COO) so the sketch jits are reused across
+        request sizes; zero padding is inert under psi/pi by construction.
+        """
+        if isinstance(queries, (tuple, list)):
+            idx_host, val_host = queries
+            # validate on host BEFORE the device transfer: no sync on the
+            # serving path when (as usual) the input is already numpy
+            idx_host = np.asarray(idx_host)
+            if idx_host.shape != np.shape(val_host) or idx_host.ndim != 2:
+                raise ValueError("COO input needs matching (k, m) "
+                                 "indices/values")
+            if idx_host.size and (idx_host.max() >= self.params.n_dims
+                                  or idx_host.min() < 0):
+                raise ValueError(
+                    f"COO indices out of range [0, {self.params.n_dims})")
+            indices = jnp.asarray(idx_host, jnp.int32)
+            values = jnp.asarray(val_host, jnp.int32)
+            k = indices.shape[0]
+            if k == 0:
+                return jnp.zeros((0, self.store.w), jnp.int32), 0
+            mpad = pow2_bucket(indices.shape[1])
+            wpad = ((0, pow2_bucket(k) - k), (0, mpad - indices.shape[1]))
+            sk = sketch_sparse_jit(self.params, jnp.pad(indices, wpad),
+                                   jnp.pad(values, wpad))
+            return sk, k
+        x = jnp.asarray(queries, jnp.int32)
+        if x.ndim != 2 or x.shape[1] != self.params.n_dims:
+            raise ValueError(
+                f"expected dense (k, {self.params.n_dims}) rows, "
+                f"got {x.shape}")
+        k = x.shape[0]
+        if k == 0:
+            return jnp.zeros((0, self.store.w), jnp.int32), 0
+        return sketch_dense_jit(self.params, pad_rows_pow2(x)), k
+
+    # -- ingestion ----------------------------------------------------------
+
+    def add_dense(self, x) -> np.ndarray:
+        """Ingest dense categorical rows (k, n_dims); returns ids (k,)."""
+        sk, k = self._sketch(x)
+        return self.store.add(sk, n_valid=k)
+
+    def add_sparse(self, indices, values) -> np.ndarray:
+        """Ingest padded-COO categorical rows; returns ids (k,)."""
+        sk, k = self._sketch((indices, values))
+        return self.store.add(sk, n_valid=k)
+
+    def add_packed(self, packed) -> np.ndarray:
+        """Ingest pre-sketched packed rows (k, w).  The rows MUST come from
+        this engine's CabinParams — used by streaming ingest after an
+        in-window dedup pass already paid for the sketches."""
+        packed = jnp.asarray(packed)
+        return self.store.add(pad_rows_pow2(packed),
+                              n_valid=packed.shape[0])
+
+    def remove(self, ids) -> int:
+        return self.store.remove(ids)
+
+    def compact(self) -> None:
+        self.store.compact()
+
+    # -- result cache -------------------------------------------------------
+
+    def _cached(self, key):
+        if key is not None and key in self._cache:
+            self._cache.move_to_end(key)
+            self.cache_hits += 1
+            return self._cache[key]
+        return None
+
+    def _remember(self, key, value) -> None:
+        """Store a PRIVATE copy of `value` (key=None: caching disabled) —
+        both hit and miss paths hand callers arrays they may freely
+        mutate without corrupting later hits."""
+        self.cache_misses += 1
+        if key is None:
+            return
+        if isinstance(value, tuple):
+            self._cache[key] = tuple(a.copy() for a in value)
+        else:
+            self._cache[key] = [a.copy() for a in value]
+        if len(self._cache) > self._cache_entries:
+            self._cache.popitem(last=False)
+
+    # -- queries ------------------------------------------------------------
+
+    def topk(self, queries, k: int) -> tuple[np.ndarray, np.ndarray]:
+        """k nearest stored rows per query: (ids (Q, k'), dists (Q, k')),
+        ascending by distance, k' = min(k, len(store)).  Accepts dense rows
+        or an (indices, values) COO pair; `topk_packed` skips sketching."""
+        sk, q = self._sketch(queries)
+        return self.topk_packed(sk, k, n_valid=q)
+
+    def topk_packed(self, sk, k: int, n_valid: int | None = None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        sk = jnp.asarray(sk)
+        q = sk.shape[0] if n_valid is None else n_valid
+        if not 0 <= q <= sk.shape[0]:
+            raise ValueError(
+                f"n_valid={q} outside the {sk.shape[0]} supplied rows")
+        kk = min(k, len(self.store))
+        if q == 0 or kk == 0:
+            return (np.zeros((q, 0), np.int64), np.zeros((q, 0), np.float32))
+        key = None  # caching disabled: skip the device sync for the key
+        if self._cache_entries:
+            key = ("topk", kk, self.store.version,
+                   np.asarray(sk[:q]).tobytes())
+            hit = self._cached(key)
+            if hit is not None:
+                return hit[0].copy(), hit[1].copy()
+        mat, m, ids = self.store.gather_alive()
+        pos, dist = allpairs.topk_rows(
+            pad_rows_pow2(sk), mat, kk, d=self.d, metric=self.metric,
+            block=self.block, mode=self.mode, m_valid=m)
+        out = (ids[pos[:q]], dist[:q])
+        self._remember(key, out)
+        return out
+
+    def radius(self, queries, r: float) -> list[np.ndarray]:
+        """All stored rows within distance < r of each query: a list of Q
+        id arrays (ascending).  Weight bands whose score interval is out of
+        reach are pruned on host before any tile is computed."""
+        sk, q = self._sketch(queries)
+        if q == 0:
+            return []
+        q_host = np.asarray(sk[:q])  # needed for band planning regardless
+        key = None
+        if self._cache_entries:
+            key = ("radius", float(r), self.store.version, q_host.tobytes())
+            hit = self._cached(key)
+            if hit is not None:
+                return [a.copy() for a in hit]
+        out = [np.zeros(0, np.int64) for _ in range(q)]
+        n_sel = 0
+        if len(self.store):
+            banded = self._banded_layout()
+            q_weights = packing.np_popcount_rows(q_host)
+            mask = banded.candidate_bands(q_weights, r)
+            sel, n_sel, sel_ids = banded.select(mask)
+        if n_sel:
+            pairs = allpairs.threshold_pairs(
+                pad_rows_pow2(sk), sel, d=self.d, threshold=r,
+                metric=self.metric, block=min(self.block, 256),
+                mode=self.mode, n_valid=q, m_valid=n_sel)
+            # one sort/group pass instead of a pairs-array scan per query
+            by_q = pairs[np.argsort(pairs[:, 0], kind="stable")]
+            splits = np.searchsorted(by_q[:, 0], np.arange(q + 1))
+            out = [np.sort(sel_ids[by_q[splits[qi]: splits[qi + 1], 1]])
+                   for qi in range(q)]
+        self._remember(key, out)
+        return out
+
+    def pairwise(self, queries, ids=None) -> tuple[np.ndarray, np.ndarray]:
+        """Engine-metric distance matrix (Q, N') between queries and the
+        given stored ids (default: all alive rows, id order) — the
+        re-ranking path, served by the kernels.hamming query-vs-store tiles.
+        Returns (ids (N',), dists (Q, N') f32).  Under "hamming" entries are
+        exact integers; under "cham" they agree with topk/radius distances
+        to cross-graph libm noise (~1e-7 relative), not bit-for-bit — the
+        bit-identity contract belongs to topk/radius, which always go
+        through core.allpairs."""
+        from repro.kernels.hamming import ops as hamming_ops
+
+        sk, q = self._sketch(queries)
+        mat, m, all_ids = self.store.gather_alive()
+        # keep everything pow2-bucketed (sk and mat already are; id subsets
+        # go through padded_take) so the kernel's compile cache stays
+        # O(log N) across mutations — same discipline as topk/radius
+        if ids is None:
+            sel_ids = all_ids
+            sel, n_sel = mat, m
+        else:
+            sel_ids = np.atleast_1d(np.asarray(ids, np.int64))
+            pos = np.searchsorted(all_ids, sel_ids)
+            if m == 0 or (pos >= m).any() or (all_ids[np.minimum(pos, m - 1)]
+                                              != sel_ids).any():
+                raise KeyError("pairwise: id not in store")
+            sel = packing.padded_take(mat, pos)
+            n_sel = len(pos)
+        dists = np.asarray(hamming_ops.dist_matrix(
+            sk, sel, self.d, metric=self.metric))[:q, :n_sel]
+        return sel_ids, dists
+
+    def _banded_layout(self) -> BandedLayout:
+        if self._banded is None or self._banded.version != self.store.version:
+            self._banded = BandedLayout(self.store, self.metric,
+                                        band_rows=self.band_rows)
+        return self._banded
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, directory: str, step: int = 0, keep: int = 3) -> None:
+        """Snapshot the full index (store buffers + hash params + metadata)
+        via checkpoint.Checkpointer — same atomic-publish layout as model
+        checkpoints, so index snapshots ride the existing retention/GC."""
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        ckpt = Checkpointer(directory, keep=keep, async_save=False)
+        meta = {
+            "format": "repro.index.v1",
+            "metric": self.metric,
+            "n_dims": self.params.n_dims,
+            "sketch_dim": self.params.sketch_dim,
+            "psi_seed": self.params.psi_seed,
+            "pi_seed": self.params.pi_seed,
+            **self.store.state_meta(),
+        }
+        ckpt.save(step, self.store.state_tree(), extra_meta=meta, block=True)
+
+    @classmethod
+    def restore(cls, directory: str, step: int | None = None,
+                **engine_kwargs) -> "QueryEngine":
+        """Rebuild an engine from a snapshot; queries against the restored
+        engine are bit-identical to the engine that saved it."""
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        ckpt = Checkpointer(directory, async_save=False)
+        if step is None:
+            step = ckpt.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no index snapshots in {directory}")
+        meta = ckpt.meta(step)
+        if meta.get("format") != "repro.index.v1":
+            raise ValueError(f"not an index snapshot: {directory}")
+        if "metric" in engine_kwargs:
+            raise ValueError("metric is fixed by the snapshot "
+                             f"({meta['metric']!r}); it cannot be overridden "
+                             "on restore")
+        w = packing.packed_width(int(meta["sketch_dim"]))
+        like = {
+            "sk": np.zeros((0, w), np.int32),
+            "ids": np.zeros(0, np.int64),
+            "alive": np.zeros(0, bool),
+            "weights": np.zeros(0, np.int64),
+        }
+        tree, _ = ckpt.restore(like, step=step)
+        params = CabinParams(
+            n_dims=int(meta["n_dims"]), sketch_dim=int(meta["sketch_dim"]),
+            psi_seed=int(meta["psi_seed"]), pi_seed=int(meta["pi_seed"]))
+        eng = cls(params, metric=meta["metric"], **engine_kwargs)
+        eng.store = SketchStore.from_state(tree, meta)
+        return eng
+
+    # -- placement ----------------------------------------------------------
+
+    def shard(self, mesh=None) -> None:
+        """Opt-in: place the store's row buffers across the data-parallel
+        axes of `mesh` (default: the ambient mesh).  Query math is
+        unchanged — the tiled reductions run under GSPMD with the rows
+        split across devices; integer pair statistics keep results
+        bit-identical to the unsharded engine."""
+        from repro.distributed import sharding as shd
+
+        mesh = mesh if mesh is not None else shd.current_mesh()
+        if mesh is None:
+            raise ValueError("shard() needs a mesh (none active)")
+        self.store.place(
+            lambda shape: shd.batch_sharding_for(mesh, shape))

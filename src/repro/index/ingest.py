@@ -1,0 +1,65 @@
+"""Streaming ingest: data.pipeline document streams -> a live QueryEngine.
+
+Bridges the LM data plane and the index: token-id documents are windowed
+(data.pipeline.document_windows — the same windowing the dedup filter
+uses), converted to padded-COO categorical rows (data.dedup's BoW capping),
+optionally near-dedup'd WITHIN the window against the engine's own sketch
+space, and appended.  Because the window's sketches are computed once and
+reused for both the dedup pass and the store append (`add_packed`), turning
+dedup on costs only the candidate scan, not a second sketching pass.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Iterable, Iterator
+
+import numpy as np
+
+from repro.data import dedup as dedup_mod
+from repro.data.pipeline import document_windows
+from repro.index.engine import QueryEngine
+
+
+def ingest_documents(
+    engine: QueryEngine,
+    docs: Iterable[np.ndarray] | Iterator[np.ndarray],
+    *,
+    window: int = 512,
+    max_docs: int | None = None,
+    dedup_threshold: float | None = None,
+) -> np.ndarray:
+    """Stream token-id documents into `engine`; returns one entry per
+    consumed document: its assigned id, or -1 if the in-window dedup pass
+    dropped it as a near-duplicate (dedup_threshold=None keeps everything).
+
+    The engine's CabinParams.n_dims is the vocabulary size: token counts
+    (capped, BoW-style) are the categorical values, exactly as the dedup
+    pipeline stage treats documents.
+    """
+    vocab = engine.params.n_dims
+    out: list[np.ndarray] = []
+    stream = iter(docs)
+    if max_docs is not None:
+        # cap BEFORE windowing so no document is pulled from the caller's
+        # iterator without getting an output entry
+        stream = itertools.islice(stream, max_docs)
+    for win in document_windows(stream, window):
+        idx, val = dedup_mod.docs_to_categorical(win, vocab)
+        if dedup_threshold is None:
+            out.append(engine.add_sparse(idx, val))
+        else:
+            sk, k = engine._sketch((idx, val))
+            sk_host = np.asarray(sk[:k])
+            # dedup in the ENGINE's metric so the threshold shares units
+            # with every distance the engine serves
+            result = dedup_mod.dedup_by_sketch(
+                sk_host, engine.d, dedup_threshold, metric=engine.metric)
+            ids = np.full(len(win), -1, np.int64)
+            keep = result.keep_mask
+            if keep.any():
+                ids[keep] = engine.add_packed(sk_host[keep])
+            out.append(ids)
+    if not out:
+        return np.zeros(0, np.int64)
+    return np.concatenate(out)

@@ -1,0 +1,292 @@
+"""SketchStore: a growing, device-resident collection of packed sketches.
+
+The batch engine (repro.core.allpairs) answers "given these two matrices,
+which pairs are close" — a one-shot question.  A serving system instead owns
+a COLLECTION that mutates between queries: documents arrive, stale ones are
+deleted, and every query must see the current membership without paying a
+rebuild.  SketchStore is that collection, designed around two invariants
+(DESIGN.md section 8.1):
+
+  * Power-of-two buffers.  Sketches and their Hamming weights live in device
+    buffers whose capacity is always a power of two; appends write through a
+    single jitted dynamic_update_slice whose compile key is the (bucketed)
+    buffer and batch shape.  Across any mutation history the store compiles
+    O(log N) append graphs total — `add` and `remove` never trigger per-call
+    recompiles, which is the difference between O(100us) and O(100ms) per
+    request on a warm server.
+  * Insertion-order slots.  Slot order equals id order: appends go to the
+    tail, deletes only tombstone (a host-side bitmap — the device buffer is
+    untouched), and compaction preserves relative order.  Alive rows are
+    therefore always a stable, id-sorted sequence, which is what makes query
+    results bit-identical to a fresh batch build no matter how the store
+    got to its current membership (the tier-1 property tests pin this).
+
+Host mirrors (ids, alive bitmap, weights) ride along for planning work that
+is latency-bound rather than bandwidth-bound: band layout, capacity checks,
+and id translation all happen on host without touching the device buffers.
+"""
+
+from __future__ import annotations
+
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.packing import pow2_bucket  # the shared bucketing rule
+
+
+def _append_rows_fn(sk_buf, wt_buf, rows, start):
+    """Write a (kpad, w) batch at a traced offset.  Rows past the caller's
+    valid count land in slots beyond `size` — they are never alive and the
+    next append overwrites them, so they never escape."""
+    sk_buf = jax.lax.dynamic_update_slice(sk_buf, rows, (start, 0))
+    wt_buf = jax.lax.dynamic_update_slice(
+        wt_buf, packing.popcount_rows(rows), (start,))
+    return sk_buf, wt_buf
+
+
+# donate the buffers so accelerator appends update in place (no O(capacity)
+# copy per request); CPU has no donation — skip it there to avoid the
+# per-call "donated buffers were not usable" warning
+_append_rows = jax.jit(
+    _append_rows_fn,
+    donate_argnums=(0, 1) if jax.default_backend() != "cpu" else ())
+
+
+class SketchStore:
+    """Append/tombstone/compact container for packed d-bit sketches.
+
+    Rows are addressed by EXTERNAL ids (monotone int64, assigned at `add`,
+    stable across compaction and checkpoint restore) — never by slot.
+    """
+
+    def __init__(self, d: int):
+        self.d = int(d)
+        self.w = packing.packed_width(self.d)
+        cap = pow2_bucket(0)
+        self._sk_buf = jnp.zeros((cap, self.w), jnp.int32)
+        self._wt_buf = jnp.zeros((cap,), jnp.int32)
+        self._ids = np.zeros(cap, np.int64)
+        self._alive = np.zeros(cap, bool)
+        self._weights = np.zeros(cap, np.int64)
+        self._size = 0  # slots in use (alive + tombstoned)
+        self._n_alive = 0
+        self._next_id = 0
+        self.version = 0  # bumped on every mutation; caches key on it
+        self._placement = None  # opt-in sharding callback (see `place`)
+        self._gather_cache: tuple | None = None
+
+    # -- introspection ------------------------------------------------------
+
+    def __len__(self) -> int:
+        return self._n_alive
+
+    @property
+    def capacity(self) -> int:
+        return self._sk_buf.shape[0]
+
+    @property
+    def size(self) -> int:
+        """Slots in use, including tombstones (compact() to reclaim)."""
+        return self._size
+
+    @property
+    def sk_buf(self) -> jnp.ndarray:
+        """The live packed-sketch buffer.  On accelerator backends the next
+        `add` donates it — do not hold across mutations (see
+        gather_alive)."""
+        return self._sk_buf
+
+    def alive_slots(self) -> np.ndarray:
+        """Slots of alive rows, in slot (= insertion = id) order."""
+        return np.flatnonzero(self._alive[: self._size])
+
+    def ids(self) -> np.ndarray:
+        """External ids of alive rows, ascending."""
+        return self._ids[self.alive_slots()]
+
+    def weights(self) -> np.ndarray:
+        """Host sketch Hamming weights of alive rows, in id order."""
+        return self._weights[self.alive_slots()]
+
+    def contains(self, id_: int) -> bool:
+        slot = np.searchsorted(self._ids[: self._size], id_)
+        return (slot < self._size and self._ids[slot] == id_
+                and bool(self._alive[slot]))
+
+    # -- mutation -----------------------------------------------------------
+
+    def _bump(self) -> None:
+        self.version += 1
+        self._gather_cache = None
+
+    def _place(self, arr: jnp.ndarray) -> jnp.ndarray:
+        if self._placement is None:
+            return arr
+        return jax.device_put(arr, self._placement(arr.shape))
+
+    def _grow_to(self, cap: int) -> None:
+        pad = cap - self.capacity
+        self._sk_buf = self._place(jnp.pad(self._sk_buf, ((0, pad), (0, 0))))
+        self._wt_buf = self._place(jnp.pad(self._wt_buf, ((0, pad),)))
+        self._ids = np.pad(self._ids, (0, pad))
+        self._alive = np.pad(self._alive, (0, pad))
+        self._weights = np.pad(self._weights, (0, pad))
+
+    def add(self, packed, n_valid: int | None = None) -> np.ndarray:
+        """Append packed rows; returns their assigned ids (k,) int64.
+
+        `packed` is (kp, w) int32; `n_valid` (default kp) marks how many
+        leading rows are real — the engine hands over its power-of-two
+        padded sketch batches unchanged, so no reshape happens here.
+        """
+        packed = jnp.asarray(packed)
+        if packed.ndim != 2 or packed.shape[1] != self.w:
+            raise ValueError(
+                f"expected (k, {self.w}) packed rows, got {packed.shape}")
+        k = packed.shape[0] if n_valid is None else int(n_valid)
+        if not 0 <= k <= packed.shape[0]:
+            raise ValueError(
+                f"n_valid={k} outside the {packed.shape[0]} supplied rows")
+        if k == 0:
+            return np.zeros(0, np.int64)
+        kpad = pow2_bucket(k)
+        if packed.shape[0] < kpad:
+            packed = jnp.pad(packed, ((0, kpad - packed.shape[0]), (0, 0)))
+        elif packed.shape[0] > kpad:
+            packed = packed[:kpad]
+        if self._size + kpad > self.capacity:
+            self._grow_to(pow2_bucket(self._size + kpad))
+        self._sk_buf, self._wt_buf = _append_rows(
+            self._sk_buf, self._wt_buf, packed, jnp.int32(self._size))
+        if self._placement is not None:
+            self._sk_buf = self._place(self._sk_buf)
+            self._wt_buf = self._place(self._wt_buf)
+        new_ids = np.arange(self._next_id, self._next_id + k, dtype=np.int64)
+        sl = slice(self._size, self._size + k)
+        self._ids[sl] = new_ids
+        self._alive[sl] = True
+        # host weight mirror reads back the device popcounts just written by
+        # _append_rows — k ints, cheaper than re-deriving from the packed
+        # batch on host
+        self._weights[sl] = np.asarray(self._wt_buf[sl], np.int64)
+        self._size += k
+        self._n_alive += k
+        self._next_id += k
+        self._bump()
+        return new_ids
+
+    def remove(self, ids) -> int:
+        """Tombstone rows by id (device buffers untouched).  Raises KeyError
+        on unknown or already-removed ids.  Returns the number removed."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if len(np.unique(ids)) != len(ids):
+            raise ValueError("duplicate ids in remove batch")
+        slots = np.searchsorted(self._ids[: self._size], ids)
+        for id_, slot in zip(ids.tolist(), slots.tolist()):
+            if (slot >= self._size or self._ids[slot] != id_
+                    or not self._alive[slot]):
+                raise KeyError(f"id {id_} not in store")
+        self._alive[slots] = False
+        self._n_alive -= len(ids)
+        self._bump()
+        return len(ids)
+
+    def compact(self) -> None:
+        """Drop tombstoned slots, preserving insertion order, and shrink the
+        buffers to the smallest power-of-two capacity that fits."""
+        slots = self.alive_slots()
+        n = len(slots)
+        cap = pow2_bucket(n)
+        self._sk_buf = self._place(packing.padded_take(self._sk_buf, slots))
+        self._wt_buf = self._place(packing.padded_take(self._wt_buf, slots))
+        ids = np.zeros(cap, np.int64)
+        ids[:n] = self._ids[slots]
+        weights = np.zeros(cap, np.int64)
+        weights[:n] = self._weights[slots]
+        alive = np.zeros(cap, bool)
+        alive[:n] = True
+        self._ids, self._weights, self._alive = ids, weights, alive
+        self._size = n
+        self._n_alive = n
+        self._bump()
+
+    # -- query-side views ---------------------------------------------------
+
+    def gather_alive(self) -> tuple[jnp.ndarray, int, np.ndarray]:
+        """(matrix, n_alive, ids): alive rows gathered in id order into a
+        power-of-two padded device matrix.  Rows past n_alive are padding —
+        callers mask them via the engines' traced valid counts.
+
+        The result is valid ONLY until the next mutation: the append-only
+        fast path returns the live buffer itself, which the next `add`
+        DONATES on accelerator backends (the stale matrix then raises
+        "Array has been deleted").  Finish (or copy) before mutating —
+        every in-repo consumer uses it within a single query call."""
+        if self._gather_cache is not None:
+            return self._gather_cache
+        if self._n_alive == self._size:
+            # append-only fast path: no tombstones, so the buffer ITSELF is
+            # the id-ordered pow2-padded matrix — no O(N) device gather.
+            # Rows past size hold stale append padding, but every consumer
+            # masks by the traced valid count, same as the gathered path.
+            self._gather_cache = (self._sk_buf, self._size,
+                                  self._ids[: self._size])
+            return self._gather_cache
+        slots = self.alive_slots()
+        mat = packing.padded_take(self._sk_buf, slots)
+        self._gather_cache = (mat, len(slots), self._ids[slots])
+        return self._gather_cache
+
+    # -- placement (opt-in sharding) ---------------------------------------
+
+    def place(self, sharding_for_shape) -> None:
+        """Install a shape -> jax.sharding.Sharding callback and re-place
+        the buffers under it (repro.distributed: rows across the data
+        axes).  Subsequent grows/appends/compactions keep the placement."""
+        self._placement = sharding_for_shape
+        self._sk_buf = self._place(self._sk_buf)
+        self._wt_buf = self._place(self._wt_buf)
+        self._bump()
+
+    # -- snapshot / restore -------------------------------------------------
+
+    def state_tree(self) -> dict[str, np.ndarray]:
+        """Flat tree for checkpoint.Checkpointer: exactly the live slots
+        (tombstones included — restore reproduces the store bit-for-bit,
+        including pending-compaction state)."""
+        return {
+            "sk": np.asarray(self._sk_buf[: self._size]),
+            "ids": self._ids[: self._size].copy(),
+            "alive": self._alive[: self._size].copy(),
+            "weights": self._weights[: self._size].copy(),
+        }
+
+    def state_meta(self) -> dict:
+        return {"d": self.d, "size": self._size, "next_id": self._next_id}
+
+    @classmethod
+    def from_state(cls, tree: dict[str, np.ndarray], meta: dict
+                   ) -> "SketchStore":
+        store = cls(int(meta["d"]))
+        size = int(meta["size"])
+        cap = pow2_bucket(size)
+        sk = np.zeros((cap, store.w), np.int32)
+        sk[:size] = tree["sk"]
+        store._sk_buf = jnp.asarray(sk)
+        wt = np.zeros(cap, np.int32)
+        wt[:size] = tree["weights"]
+        store._wt_buf = jnp.asarray(wt)
+        store._ids = np.zeros(cap, np.int64)
+        store._ids[:size] = tree["ids"]
+        store._alive = np.zeros(cap, bool)
+        store._alive[:size] = tree["alive"]
+        store._weights = np.zeros(cap, np.int64)
+        store._weights[:size] = tree["weights"]
+        store._size = size
+        store._n_alive = int(store._alive.sum())
+        store._next_id = int(meta["next_id"])
+        store._bump()
+        return store

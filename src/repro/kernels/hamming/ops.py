@@ -50,3 +50,29 @@ def hamming_matrix_fast(a, b, *, use_pallas: bool | None = None) -> jnp.ndarray:
         _, ham = kernel.pair_stats(a, b, op_inner=False, interpret=not _on_tpu())
         return ham
     return ref.pair_stats_ref(a, b)[1]
+
+
+def dist_matrix(q, store, d: int, *, metric: str = "cham",
+                use_pallas: bool | None = None) -> jnp.ndarray:
+    """Query-vs-store distance tile: (Q, W) x (N, W) packed -> (Q, N) f32.
+
+    The serving-shaped entry to the pair-stats kernel: a small query block
+    against a large store slab, under either distance the index subsystem
+    serves ("cham" = estimated HD of the original categorical rows,
+    "hamming" = exact HD of the packed sketches, as wa + wb - 2*inner).
+    The pairwise statistics (wq, ws, inner) are exact integers on both
+    backends, so "hamming" entries are exact and bit-stable everywhere.
+    "cham" applies the float estimator to those exact integers: values agree
+    with the streaming engine's tiles (repro.core.allpairs._tile_dist) to
+    cross-graph libm noise (~1e-7 relative — eager vs fused-loop log
+    lowering), NOT bit-for-bit; repro.index therefore serves topk/radius
+    through core.allpairs and uses this path only for re-ranking, where
+    last-ulp noise is immaterial.
+    """
+    if metric == "cham":
+        return cham_matrix_fast(q, store, d, use_pallas=use_pallas)
+    if metric == "hamming":
+        # wa + wb - 2*inner == the XOR popcount the fast path computes
+        return hamming_matrix_fast(q, store,
+                                   use_pallas=use_pallas).astype(jnp.float32)
+    raise ValueError(f"unknown metric {metric!r}")

@@ -125,3 +125,19 @@ def test_sample_dense_clusters_are_coherent():
             hd = int((x[i] != x[j]).sum())
             (same if labels[i] == labels[j] else cross).append(hd)
     assert np.mean(same) < np.mean(cross)
+
+
+def test_document_windows_shapes_and_reiterables():
+    from repro.data.pipeline import document_windows
+
+    docs = [np.full(i + 1, i, np.int32) for i in range(7)]
+    # a LIST input is consumed once, not restarted per window
+    wins = list(document_windows(docs, window=3))
+    assert [len(w) for w in wins] == [3, 3, 1]
+    np.testing.assert_array_equal(wins[2][0], docs[6])
+    # exact multiple: no trailing empty window
+    wins = list(document_windows(iter(docs[:6]), window=3))
+    assert [len(w) for w in wins] == [3, 3]
+    assert list(document_windows(iter([]), window=4)) == []
+    with pytest.raises(ValueError):
+        list(document_windows(iter(docs), window=0))

@@ -253,3 +253,51 @@ def test_mini_dryrun_both_meshes():
         print("OK")
     """, n_devices=16, timeout=900)
     assert "OK" in out
+
+
+def test_index_sharded_engine_matches_unsharded():
+    """QueryEngine.shard places the store rows across a data mesh; results
+    (ids and float bits) must match the unsharded engine exactly, including
+    for rows added AFTER sharding."""
+    out = run_with_devices("""
+        import numpy as np
+        import jax
+        from repro.core import CabinParams
+        from repro.index import QueryEngine
+
+        n, d = 400, 256
+        rng = np.random.default_rng(0)
+        x = np.zeros((48, n), np.int32)
+        for i in range(48):
+            density = int(rng.integers(10, 60))
+            idx = rng.choice(n, size=density, replace=False)
+            x[i, idx] = rng.integers(1, 8, size=density)
+        params = CabinParams.create(n, d, seed=2)
+
+        plain = QueryEngine(params)
+        plain.add_dense(x)
+
+        mesh = jax.make_mesh((4,), ("data",))
+        sharded = QueryEngine(params)
+        sharded.add_dense(x[:24])
+        sharded.shard(mesh)
+        sharded.add_dense(x[24:])
+        assert len(jax.devices()) == 4
+
+        pi, pv = plain.topk(x[:6], 5)
+        si, sv = sharded.topk(x[:6], 5)
+        np.testing.assert_array_equal(pi, si)
+        np.testing.assert_array_equal(pv, sv)
+        pr = plain.radius(x[:6], 30.0)
+        sr = sharded.radius(x[:6], 30.0)
+        for a, b in zip(pr, sr):
+            np.testing.assert_array_equal(a, b)
+        sharded.remove(np.arange(5, 15))
+        sharded.compact()
+        plain.remove(np.arange(5, 15))
+        plain.compact()
+        np.testing.assert_array_equal(plain.topk(x[:6], 5)[1],
+                                      sharded.topk(x[:6], 5)[1])
+        print("OK")
+    """, n_devices=4)
+    assert "OK" in out

@@ -1,0 +1,386 @@
+"""repro.index: the online index's bit-identity contracts vs the batch
+engine (core.allpairs), plus store/cache/checkpoint/ingest behaviour.
+
+The load-bearing property: no matter how the store reached its current
+membership (chunked adds, tombstones, compactions, snapshot round-trips),
+`topk` and `radius` return EXACTLY what core.allpairs returns on a freshly
+assembled matrix of the same vectors — same ids, same float bits.
+"""
+
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.core import (CabinParams, threshold_pairs, topk_rows)
+from repro.core.cabin import sketch_dense
+from repro.index import BandedLayout, QueryEngine, SketchStore, \
+    ingest_documents
+
+N_DIMS = 500
+D = 256
+P = CabinParams.create(N_DIMS, D, seed=3)
+
+
+def _rows(n, seed):
+    """Varied per-row density (10..80 features) so sketch weights spread —
+    the structure the weight-banded layout exists to exploit."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, N_DIMS), np.int32)
+    for i in range(n):
+        density = int(rng.integers(10, 80))
+        idx = rng.choice(N_DIMS, size=density, replace=False)
+        x[i, idx] = rng.integers(1, 8, size=density)
+    return x
+
+
+X = _rows(96, seed=0)
+SK = np.asarray(sketch_dense(P, jnp.asarray(X)))
+QUERIES = X[:5]
+
+
+def _radius_ref(q_sk, data_sk, ids, r, metric):
+    """Per-query sorted id arrays from the batch engine."""
+    pairs = threshold_pairs(jnp.asarray(q_sk), jnp.asarray(data_sk), d=D,
+                            threshold=r, metric=metric)
+    return [np.sort(ids[pairs[pairs[:, 0] == qi, 1]])
+            for qi in range(len(q_sk))]
+
+
+# ---------------------------------------------------------------------------
+# bit-identity vs the batch engine (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_engine_bit_identical_through_mutations(metric, tmp_path):
+    """One full serving journey per metric: chunked build -> topk/radius
+    parity -> remove -> parity -> compact -> parity -> more adds -> parity
+    -> snapshot/restore -> parity.  Every comparison is exact equality
+    against core.allpairs on the alive membership."""
+    eng = QueryEngine(P, metric=metric, band_rows=16)
+
+    def check():
+        alive = eng.ids()
+        data_sk = SK[alive]
+        ref_i, ref_v = topk_rows(SK[:5], data_sk, 7, d=D, metric=metric)
+        got_i, got_v = eng.topk(QUERIES, 7)
+        np.testing.assert_array_equal(got_i, alive[ref_i])
+        np.testing.assert_array_equal(got_v, ref_v)
+        r = float(np.percentile(ref_v, 70) + 0.37)
+        got_r = eng.radius(QUERIES, r)
+        want_r = _radius_ref(SK[:5], data_sk, alive, r, metric)
+        for a, b in zip(got_r, want_r):
+            np.testing.assert_array_equal(a, b)
+
+    eng.add_dense(X[:40])
+    eng.add_dense(X[40:70])
+    check()
+    eng.remove(np.arange(10, 35))
+    check()
+    eng.compact()
+    check()
+    eng.add_dense(X[70:])
+    check()
+    eng.save(str(tmp_path / metric), step=2)
+    restored = QueryEngine.restore(str(tmp_path / metric))
+    assert restored.metric == metric
+    with pytest.raises(ValueError, match="fixed by the snapshot"):
+        QueryEngine.restore(str(tmp_path / metric), metric="cham")
+    got_i, got_v = eng.topk(QUERIES, 7)
+    res_i, res_v = restored.topk(QUERIES, 7)
+    np.testing.assert_array_equal(res_i, got_i)
+    np.testing.assert_array_equal(res_v, got_v)
+    # restored engine keeps serving mutations from where it left off
+    new_ids = restored.add_dense(X[:4])
+    assert new_ids.min() > eng.ids().max()
+
+
+def test_topk_ties_resolve_to_lower_id():
+    """Duplicate vectors => equal distances; the winner must be the lower
+    id, matching topk_rows' stable merge."""
+    eng = QueryEngine(P)
+    eng.add_dense(np.concatenate([X[:8], X[:8]]))  # ids 8..15 duplicate 0..7
+    ids, vals = eng.topk(X[:8], 2)
+    np.testing.assert_array_equal(ids[:, 0], np.arange(8))
+    np.testing.assert_array_equal(ids[:, 1], np.arange(8, 16))
+    np.testing.assert_array_equal(vals[:, 0], vals[:, 1])
+
+
+def test_sparse_and_dense_ingest_agree():
+    nz = [np.flatnonzero(row) for row in X[:20]]
+    m = max(len(z) for z in nz)
+    idx = np.zeros((20, m), np.int32)
+    val = np.zeros((20, m), np.int32)
+    for i, z in enumerate(nz):
+        idx[i, : len(z)] = z
+        val[i, : len(z)] = X[i, z]
+    e1 = QueryEngine(P)
+    e1.add_sparse(idx, val)
+    e2 = QueryEngine(P)
+    e2.add_dense(X[:20])
+    g1 = e1.topk(QUERIES, 5)
+    g2 = e2.topk(QUERIES, 5)
+    np.testing.assert_array_equal(g1[0], g2[0])
+    np.testing.assert_array_equal(g1[1], g2[1])
+    # COO queries hit the same sketch space as dense queries
+    gq = e2.topk((idx[:5], val[:5]), 5)
+    np.testing.assert_array_equal(gq[0], g2[0])
+    np.testing.assert_array_equal(gq[1], g2[1])
+
+
+def test_pairwise_matches_topk_distances():
+    eng = QueryEngine(P)
+    eng.add_dense(X[:30])
+    ids, dists = eng.pairwise(QUERIES)
+    np.testing.assert_array_equal(ids, np.arange(30))
+    top_i, top_v = eng.topk(QUERIES, 3)
+    # cham: same exact integer stats, float estimator agrees to cross-graph
+    # libm noise (see kernels.hamming.ops.dist_matrix)
+    np.testing.assert_allclose(
+        np.take_along_axis(dists, top_i.astype(np.int64), axis=1), top_v,
+        rtol=1e-5, atol=1e-3)
+    sub_ids, sub = eng.pairwise(QUERIES, ids=np.asarray([3, 7]))
+    np.testing.assert_array_equal(sub, dists[:, [3, 7]])
+    with pytest.raises(KeyError):
+        eng.pairwise(QUERIES, ids=np.asarray([99]))
+    # hamming: integer metric, exact equality end to end
+    enh = QueryEngine(P, metric="hamming")
+    enh.add_dense(X[:30])
+    _, dh = enh.pairwise(QUERIES)
+    hi, hv = enh.topk(QUERIES, 3)
+    np.testing.assert_array_equal(
+        np.take_along_axis(dh, hi.astype(np.int64), axis=1), hv)
+
+
+# ---------------------------------------------------------------------------
+# property tests: incremental == fresh, snapshot round-trip (tests/_hyp)
+# ---------------------------------------------------------------------------
+
+
+def _mutate(eng, rng, chunks):
+    """Apply a random interleaving of chunked adds, removes, compactions."""
+    pos = 0
+    for c in chunks:
+        take = X[pos: pos + c]
+        if len(take) == 0:
+            break
+        eng.add_dense(take)
+        pos += len(take)
+        alive = eng.ids()
+        if len(alive) > 3 and rng.random() < 0.7:
+            k = int(rng.integers(1, max(2, len(alive) // 3)))
+            eng.remove(rng.choice(alive, size=k, replace=False))
+        if rng.random() < 0.3:
+            eng.compact()
+    return eng
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**16), st.lists(st.integers(1, 14), min_size=1,
+                                       max_size=6))
+def test_incremental_build_equals_fresh_batch(seed, chunks):
+    """An index built in random-sized chunks with interleaved deletes and
+    compactions answers bit-identically to one built fresh from the
+    surviving vectors."""
+    rng = np.random.default_rng(seed)
+    eng = _mutate(QueryEngine(P, band_rows=16), rng, chunks)
+    survivors = eng.ids()
+    if len(survivors) == 0:
+        return
+    fresh = QueryEngine(P, band_rows=16)
+    fresh.add_dense(X[survivors])  # fresh ids = positions into survivors
+    gi, gv = eng.topk(QUERIES, 5)
+    fi, fv = fresh.topk(QUERIES, 5)
+    np.testing.assert_array_equal(gi, survivors[fi])
+    np.testing.assert_array_equal(gv, fv)
+    r = float(np.percentile(gv, 60) + 0.37) if gv.size else 1.0
+    ra = eng.radius(QUERIES, r)
+    rb = fresh.radius(QUERIES, r)
+    for a, b in zip(ra, rb):
+        np.testing.assert_array_equal(a, survivors[b])
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**16))
+def test_snapshot_restore_roundtrips_exactly(seed):
+    rng = np.random.default_rng(seed)
+    chunks = [int(c) for c in rng.integers(1, 14, size=4)]
+    eng = _mutate(QueryEngine(P, band_rows=16), rng, chunks)
+    with tempfile.TemporaryDirectory() as td:
+        eng.save(td, step=7)
+        back = QueryEngine.restore(td)
+    # store state is reproduced bit-for-bit, tombstones included
+    a, b = eng.store.state_tree(), back.store.state_tree()
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    assert eng.store.state_meta() == back.store.state_meta()
+    gi, gv = eng.topk(QUERIES, 4)
+    ri, rv = back.topk(QUERIES, 4)
+    np.testing.assert_array_equal(gi, ri)
+    np.testing.assert_array_equal(gv, rv)
+
+
+# ---------------------------------------------------------------------------
+# store mechanics, cache, edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_store_capacity_doubles_and_compacts():
+    store = SketchStore(D)
+    assert store.capacity == 8
+    store.add(jnp.asarray(SK[:20]))
+    assert store.capacity == 32 and store.size == 20 and len(store) == 20
+    store.remove(np.arange(5, 19))
+    assert len(store) == 6 and store.size == 20  # tombstones keep slots
+    store.compact()
+    assert store.size == 6 and store.capacity == 8
+    np.testing.assert_array_equal(store.ids(), [0, 1, 2, 3, 4, 19])
+    mat, n, ids = store.gather_alive()
+    assert n == 6 and mat.shape[0] == 8
+    np.testing.assert_array_equal(np.asarray(mat[:6]), SK[[0, 1, 2, 3, 4, 19]])
+
+
+def test_store_errors():
+    store = SketchStore(D)
+    store.add(jnp.asarray(SK[:4]))
+    with pytest.raises(KeyError):
+        store.remove([11])
+    store.remove([2])
+    with pytest.raises(KeyError):  # double-remove
+        store.remove([2])
+    with pytest.raises(ValueError):  # duplicate batch
+        store.remove([0, 0])
+    with pytest.raises(ValueError):  # wrong packed width
+        store.add(jnp.zeros((2, 3), jnp.int32))
+    with pytest.raises(ValueError):  # over-declared valid count
+        store.add(jnp.asarray(SK[:4]), n_valid=9)
+    with pytest.raises(ValueError):  # negative valid count
+        store.add(jnp.asarray(SK[:4]), n_valid=-3)
+    with pytest.raises(ValueError):
+        threshold_pairs(SK[:4], SK[:8], d=D, threshold=1.0, n_valid=6)
+    with pytest.raises(ValueError):
+        topk_rows(SK[:4], SK[:8], 2, d=D, m_valid=9)
+    eng = QueryEngine(P)
+    with pytest.raises(ValueError):  # wrong dense width
+        eng.add_dense(np.zeros((2, 7), np.int32))
+    with pytest.raises(ValueError):  # out-of-vocab COO index
+        eng.add_sparse(np.full((1, 3), N_DIMS, np.int32),
+                       np.ones((1, 3), np.int32))
+    with pytest.raises(ValueError):
+        QueryEngine(P, metric="cosine")
+
+
+def test_empty_and_clamped_queries():
+    eng = QueryEngine(P)
+    ids, vals = eng.topk(QUERIES, 3)  # empty store
+    assert ids.shape == (5, 0) and vals.shape == (5, 0)
+    assert all(len(a) == 0 for a in eng.radius(QUERIES, 10.0))
+    eng.add_dense(X[:2])
+    ids, vals = eng.topk(QUERIES, 9)  # k clamps to n_alive
+    assert ids.shape == (5, 2)
+    ids0, _ = eng.topk(X[:0], 3)  # empty query batch
+    assert ids0.shape == (0, 0)
+    assert eng.radius(X[:0], 5.0) == []
+
+
+def test_result_cache_hits_and_invalidates():
+    eng = QueryEngine(P, cache_entries=4)
+    eng.add_dense(X[:32])
+    a = eng.topk(QUERIES, 4)
+    assert (eng.cache_hits, eng.cache_misses) == (0, 1)
+    b = eng.topk(QUERIES, 4)
+    assert eng.cache_hits == 1
+    np.testing.assert_array_equal(a[0], b[0])
+    eng.radius(QUERIES, 50.0)
+    eng.radius(QUERIES, 50.0)
+    assert eng.cache_hits == 2
+    eng.add_dense(X[32:34])  # mutation invalidates via version bump
+    c = eng.topk(QUERIES, 4)
+    assert eng.cache_misses == 3
+    alive = eng.ids()
+    ref_i, ref_v = topk_rows(SK[:5], SK[alive], 4, d=D)
+    np.testing.assert_array_equal(c[0], alive[ref_i])
+    np.testing.assert_array_equal(c[1], ref_v)
+    # callers may mutate returned (writable) arrays without corrupting the
+    # cache (the distance array is a read-only jax view — unmutable anyway)
+    c[0].fill(-7)
+    d2 = eng.topk(QUERIES, 4)
+    np.testing.assert_array_equal(d2[0], alive[ref_i])
+    np.testing.assert_array_equal(d2[1], ref_v)
+    hits = eng.radius(QUERIES, 50.0)
+    for h in hits:
+        h.fill(-1)
+    for h, ref in zip(eng.radius(QUERIES, 50.0),
+                      _radius_ref(SK[:5], SK[alive], alive, 50.0, "cham")):
+        np.testing.assert_array_equal(h, ref)
+
+
+def test_banded_layout_prunes_but_never_drops():
+    """With tiny bands, many get pruned for a small radius, yet the result
+    equals the unpruned batch reference."""
+    eng = QueryEngine(P, band_rows=8)
+    eng.add_dense(X)
+    layout = eng._banded_layout()
+    assert isinstance(layout, BandedLayout) and layout.n_bands == 12
+    # a single narrow query with a tight radius reaches only a few bands
+    import repro.core.packing as packing
+    q = X[2:3]
+    r = 10.0
+    weights = np.asarray(packing.popcount_rows(jnp.asarray(SK[2:3])))
+    mask = layout.candidate_bands(weights, r)
+    assert 0 < mask.sum() < layout.n_bands  # pruning actually happened
+    got = eng.radius(q, r)
+    want = _radius_ref(SK[2:3], SK, np.arange(96, dtype=np.int64), r, "cham")
+    np.testing.assert_array_equal(got[0], want[0])
+    # wide query mix still agrees with the unpruned batch reference
+    got5 = eng.radius(QUERIES, 25.0)
+    want5 = _radius_ref(SK[:5], SK, np.arange(96, dtype=np.int64), 25.0,
+                        "cham")
+    for a, b in zip(got5, want5):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_dedup_by_sketch_metric_param():
+    """Ingest dedups in the ENGINE's metric: hamming thresholds group
+    exactly the sketch-identical rows at threshold < 1."""
+    from repro.data.dedup import dedup_by_sketch
+
+    sk = np.concatenate([SK[:10], SK[:10]])
+    res = dedup_by_sketch(sk, D, threshold=0.5, metric="hamming")
+    assert res.n_removed == 10
+    np.testing.assert_array_equal(res.group_ids[:10], res.group_ids[10:])
+
+
+def test_ingest_documents_stream():
+    from repro.data.dedup import docs_to_categorical
+    from repro.data.pipeline import synthetic_documents
+
+    vocab = 2048
+    params = CabinParams.create(vocab, D, seed=5)
+    eng = QueryEngine(params)
+    gen = synthetic_documents(vocab, seed=5, dup_fraction=0.3)
+    docs = [next(gen) for _ in range(90)]
+    got = ingest_documents(eng, docs, window=32, dedup_threshold=40.0)
+    assert got.shape == (90,)
+    dropped = int((got == -1).sum())
+    assert dropped > 0  # the stream really contains near-duplicates
+    assert len(eng) == 90 - dropped
+    np.testing.assert_array_equal(np.sort(got[got >= 0]), eng.ids())
+    # no-dedup ingest keeps everything; max_docs consumes EXACTLY that many
+    # docs from the caller's iterator (nothing pulled and dropped)
+    eng2 = QueryEngine(params)
+    it = iter(docs)
+    got2 = ingest_documents(eng2, it, window=32, max_docs=50)
+    assert got2.shape == (50,) and len(eng2) == 50
+    leftover = list(it)
+    assert len(leftover) == 40
+    np.testing.assert_array_equal(leftover[0], docs[50])
+    # ingested docs are queryable: each doc's nearest neighbour is itself
+    idx_q, val_q = docs_to_categorical(docs[:6], vocab)
+    ids, vals = eng2.topk((idx_q, val_q), 1)
+    np.testing.assert_array_equal(ids[:, 0], got2[:6])
