@@ -45,7 +45,8 @@ def _build(idx: np.ndarray, val: np.ndarray) -> QueryEngine:
 
 
 def bench_index(n_small: int = 4096, n_large: int = 65536, k: int = 10,
-                n_queries: int = 64, chunk: int = 4096) -> dict:
+                n_queries: int = 64, chunk: int = 4096,
+                ratio_bar: float | None = 0.25) -> dict:
     summary: dict = {}
     idx_l, val_l = _sparse_rows(n_large)
     q_idx, q_val = idx_l[:n_queries], val_l[:n_queries]
@@ -92,6 +93,9 @@ def bench_index(n_small: int = 4096, n_large: int = 65536, k: int = 10,
     emit("index.incr_add_chunk", t_incr * 1e6 / chunk,
          f"chunk={chunk};ratio={ratio:.3f}")
     # the acceptance bar: appending a chunk costs a small fraction of a
-    # rebuild (it re-sketches only the chunk, not the corpus)
-    assert ratio <= 0.25, f"incremental add not amortized: {ratio:.3f}"
+    # rebuild (it re-sketches only the chunk, not the corpus).  --smoke runs
+    # pass ratio_bar=None: at wiring-check sizes per-call dispatch overhead
+    # dominates the chunk adds and the ratio is not a perf claim.
+    if ratio_bar is not None:
+        assert ratio <= ratio_bar, f"incremental add not amortized: {ratio:.3f}"
     return summary

@@ -1,11 +1,14 @@
 """Benchmark driver: one function per paper table/figure + kernel/system
 benches.  Prints ``name,us_per_call,derived`` CSV; writes a JSON summary to
-experiments/bench_summary.json and the kernel/dedup perf-trajectory record
-to BENCH_kernels.json (repo root, committed — one snapshot per PR); appends
-the roofline table when dry-run records exist.
+experiments/bench_summary.json and appends the kernel/dedup/index suites to
+the perf trajectory in BENCH_kernels.json (repo root, committed — one
+timestamped entry per run, so regressions across PRs stay visible in the
+file itself, not just in its git history).
 
 ``--suites a,b,c`` filters by substring (e.g. ``--suites kernel,dedup``
-re-records just the trajectory file)."""
+re-records just those suites).  ``--smoke`` runs the trajectory suites at
+tiny sizes as a wiring check — failures still abort loudly, but nothing is
+written to BENCH_kernels.json (smoke numbers are not perf claims)."""
 
 from __future__ import annotations
 
@@ -19,6 +22,53 @@ import traceback
 _TRAJECTORY_SUITES = ("kernel_packed", "kernel_cham", "kernel_sketch",
                       "kernel_sparse_sketch", "dedup", "dedup_streaming",
                       "index")
+
+# tiny-size overrides for --smoke: exercise every trajectory suite's wiring
+# (sketch -> kernels -> engine -> index) in seconds on a bare CPU runner
+_SMOKE_KWARGS = {
+    "kernel_packed": dict(n_rows=64, d=256),
+    "kernel_cham": dict(scale=0.004, n_rows=48, d=256),
+    "kernel_sketch": dict(scale=0.01, n_rows=64, d=256),
+    "kernel_sparse_sketch": dict(n_rows=64, n_dims=1 << 16, nnz=50, d=256),
+    "dedup": dict(n_docs=64),
+    "dedup_streaming": dict(n_docs=256),
+    "index": dict(n_small=256, n_large=2048, n_queries=8, chunk=256,
+                  ratio_bar=None),
+}
+
+
+def _record_trajectory(trajectory: dict) -> None:
+    """Merge this run's suites into the committed record and append a
+    timestamped entry to its `trajectory` list (older single-snapshot files
+    are upgraded in place; their snapshot seeds the history)."""
+    import jax
+
+    backend = jax.default_backend()
+    record = {"backend": backend, "suites": {}, "trajectory": []}
+    if os.path.exists("BENCH_kernels.json"):
+        try:
+            with open("BENCH_kernels.json") as f:
+                old = json.load(f)
+            record["suites"] = old.get("suites", {})
+            record["trajectory"] = old.get("trajectory", [])
+            if not record["trajectory"] and record["suites"]:
+                # upgrade a legacy single-snapshot file: its numbers become
+                # the first trajectory entry instead of being overwritten
+                record["trajectory"].append({
+                    "ts": None,
+                    "backend": old.get("backend", backend),
+                    "suites": dict(record["suites"]),  # pre-update copy
+                })
+        except (json.JSONDecodeError, OSError):
+            pass
+    record["suites"].update(trajectory)
+    record["trajectory"].append({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime()),
+        "backend": backend,
+        "suites": trajectory,
+    })
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(record, f, indent=1, default=str)
 
 
 def main() -> None:
@@ -42,11 +92,15 @@ def main() -> None:
         ("index", bench_index.bench_index),
     ]
     only = None
+    smoke = "--smoke" in sys.argv[1:]
     for i, arg in enumerate(sys.argv[1:]):
         if arg == "--suites":
             if 2 + i >= len(sys.argv):
-                raise SystemExit("usage: run.py [--suites substr[,substr...]]")
+                raise SystemExit(
+                    "usage: run.py [--smoke] [--suites substr[,substr...]]")
             only = sys.argv[2 + i].split(",")
+    if smoke:
+        suites = [(n, f) for n, f in suites if n in _SMOKE_KWARGS]
     if only:
         suites = [(n, f) for n, f in suites
                   if any(sel in n for sel in only)]
@@ -58,7 +112,7 @@ def main() -> None:
     for name, fn in suites:
         t0 = time.perf_counter()
         try:
-            summary[name] = fn()
+            summary[name] = fn(**_SMOKE_KWARGS[name]) if smoke else fn()
         except Exception as e:  # keep the suite running; report at the end
             failures.append((name, repr(e)))
             traceback.print_exc()
@@ -67,7 +121,7 @@ def main() -> None:
 
     # roofline summary from dry-run records, if present
     dr_dir = os.path.join("experiments", "dryrun")
-    if os.path.isdir(dr_dir):
+    if not smoke and os.path.isdir(dr_dir):
         from repro.launch.roofline import load_records
 
         recs = [r for r in load_records(dr_dir) if r.get("status") == "ok"]
@@ -80,29 +134,33 @@ def main() -> None:
                   f"n={roof.get('collective_s', 0):.3g}s")
         summary["dryrun_cells_ok"] = len(recs)
 
-    os.makedirs("experiments", exist_ok=True)
-    with open(os.path.join("experiments", "bench_summary.json"), "w") as f:
-        json.dump(summary, f, indent=1, default=str)
+    # trajectory entries hold ONLY suites measured by THIS run — extracted
+    # before the summary merge below, so a filtered or partially-failed run
+    # can never stamp another run's numbers with a fresh timestamp
     trajectory = {k: v for k, v in summary.items() if k in _TRAJECTORY_SUITES}
-    if trajectory:
-        import jax
-
-        # merge into the committed record so filtered / partially-failed
-        # runs refresh their suites without discarding the others
-        record = {"backend": jax.default_backend(), "suites": {}}
-        if os.path.exists("BENCH_kernels.json"):
-            try:
-                with open("BENCH_kernels.json") as f:
-                    record["suites"] = json.load(f).get("suites", {})
-            except (json.JSONDecodeError, OSError):
-                pass
-        record["suites"].update(trajectory)
-        with open("BENCH_kernels.json", "w") as f:
-            json.dump(record, f, indent=1, default=str)
+    os.makedirs("experiments", exist_ok=True)
+    out_name = "bench_summary_smoke.json" if smoke else "bench_summary.json"
+    out_path = os.path.join("experiments", out_name)
+    if not smoke and os.path.exists(out_path):
+        # merge: a --suites-filtered run refreshes its suites without
+        # discarding the others' results (same discipline as the
+        # BENCH_kernels.json trajectory record)
+        try:
+            with open(out_path) as f:
+                merged = json.load(f)
+            merged.update(summary)
+            summary = merged
+        except (json.JSONDecodeError, OSError):
+            pass
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=1, default=str)
+    if trajectory and not smoke:
+        _record_trajectory(trajectory)
     if failures:
         print("FAILURES:", failures)
         raise SystemExit(1)
-    print("# all benchmark suites passed")
+    print("# all benchmark suites passed"
+          + (" (smoke sizes)" if smoke else ""))
 
 
 if __name__ == "__main__":

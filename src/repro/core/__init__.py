@@ -5,7 +5,7 @@ Public API:
     cham, cham_matrix, binhamming, inner/cosine/jaccard_estimate (cham)
     sketch_dim, theorem2_bound                                   (theory)
     pack_bits, unpack_bits, popcount_rows, packed_hamming        (packing)
-    threshold_pairs, argmin_rows, topk_rows, rowsum              (allpairs)
+    threshold_pairs, argmin_rows, topk_rows(_banded), rowsum     (allpairs)
 
 The query-shaped entry points over a PERSISTENT collection — SketchStore,
 BandedLayout, QueryEngine (repro.index) — are re-exported here lazily (PEP
@@ -20,6 +20,7 @@ from repro.core.allpairs import (  # noqa: F401
     rowsum,
     threshold_pairs,
     topk_rows,
+    topk_rows_banded,
 )
 
 from repro.core.cabin import (  # noqa: F401

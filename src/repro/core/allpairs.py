@@ -125,6 +125,9 @@ def _pad_rows(x: jnp.ndarray, block: int) -> jnp.ndarray:
     return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
 
 
+_pow2_rows = packing.pad_rows_pow2
+
+
 # ---------------------------------------------------------------------------
 # threshold candidate extraction (dedup)
 # ---------------------------------------------------------------------------
@@ -445,15 +448,19 @@ def threshold_pairs(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("m", "block", "metric", "mode", "d"))
-def _argmin_rows_impl(a, b_p, *, m, block, metric, mode, d):
+    jax.jit, static_argnames=("block", "metric", "mode", "d"))
+def _argmin_rows_impl(a_p, b_p, m, *, block, metric, mode, d):
+    # m is a TRACED valid-row count (cf. _rowsum_impl): the k-mode medoid
+    # loop calls this with a different member/centre count per cluster per
+    # iteration, so the jit cache must key on the (power-of-two bucketed)
+    # shapes only — a static m recompiled per cluster size.
     n_tiles = b_p.shape[0] // block
 
     def body(t, carry):
         best, besti = carry
         j0 = t * block
         b_blk = jax.lax.dynamic_slice(b_p, (j0, 0), (block, b_p.shape[1]))
-        dist = _tile_dist(a, b_blk, d, metric, mode)  # (n, block)
+        dist = _tile_dist(a_p, b_blk, d, metric, mode)  # (n, block)
         col = j0 + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
         dist = jnp.where(col < m, dist, jnp.inf)
         tmin = jnp.min(dist, axis=1)
@@ -463,8 +470,8 @@ def _argmin_rows_impl(a, b_p, *, m, block, metric, mode, d):
         upd = tmin < best
         return jnp.where(upd, tmin, best), jnp.where(upd, targ, besti)
 
-    best = jnp.full((a.shape[0],), jnp.inf, jnp.float32)
-    besti = jnp.zeros((a.shape[0],), jnp.int32)
+    best = jnp.full((a_p.shape[0],), jnp.inf, jnp.float32)
+    besti = jnp.zeros((a_p.shape[0],), jnp.int32)
     return jax.lax.fori_loop(0, n_tiles, body, (best, besti))
 
 
@@ -472,15 +479,19 @@ def argmin_rows(a, b, *, d: int, metric: str = "cham", block: int = 2048,
                 mode: str | None = None):
     """Per-row nearest column: returns (indices (N,), distances (N,)) on
     host, streaming over blocks of b.  Tie-break = first minimum, identical
-    to np.argmin over the dense matrix."""
+    to np.argmin over the dense matrix.  Both row counts are bucketed to
+    powers of two and the valid column count is traced, so repeated calls
+    with drifting sizes (the k-mode loops) reuse O(log N) compiled graphs."""
     a = jnp.asarray(a)
     b = jnp.asarray(b)
-    m = b.shape[0]
-    block = max(1, min(block, m))
-    b_p = _pad_rows(b, block)
-    best, besti = _argmin_rows_impl(a, b_p, m=m, block=block, metric=metric,
-                                    mode=_auto_mode(mode), d=d)
-    return np.asarray(besti), np.asarray(best)
+    n, m = a.shape[0], b.shape[0]
+    a_p = _pow2_rows(a)
+    b_p2 = _pow2_rows(b)
+    block = max(1, min(block, b_p2.shape[0]))
+    b_p = _pad_rows(b_p2, block)
+    best, besti = _argmin_rows_impl(a_p, b_p, jnp.int32(m), block=block,
+                                    metric=metric, mode=_auto_mode(mode), d=d)
+    return np.asarray(besti)[:n], np.asarray(best)[:n]
 
 
 # ---------------------------------------------------------------------------
@@ -497,20 +508,28 @@ def _topk_rows_impl(a, b_p, m, *, k, block, metric, mode, d):
     # mutation.  Columns past m are masked to +inf and can never be returned.
     n_tiles = b_p.shape[0] // block
     n = a.shape[0]
+    kt = min(k, block)  # per-tile survivors: a tile holds `block` candidates
 
     def body(t, carry):
-        vals, idxs = carry  # (n, k) running smallest, ascending
+        vals, idxs = carry  # (n, k) running smallest, (value, index)-sorted
         j0 = t * block
         b_blk = jax.lax.dynamic_slice(b_p, (j0, 0), (block, b_p.shape[1]))
         dist = _tile_dist(a, b_blk, d, metric, mode)  # (n, block)
         col = j0 + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
         dist = jnp.where(col < m, dist, jnp.inf)
-        cand_v = jnp.concatenate([vals, dist], axis=1)
-        cand_i = jnp.concatenate(
-            [idxs, jnp.broadcast_to(col, (n, block))], axis=1)
-        order = jnp.argsort(cand_v, axis=1)[:, :k]  # stable: earlier j wins ties
-        return (jnp.take_along_axis(cand_v, order, axis=1),
-                jnp.take_along_axis(cand_i, order, axis=1))
+        # O(k) merge, no (k + block) argsort: top_k of the negated tile
+        # keeps its kt smallest (ties -> lower position = lower column), and
+        # a second top_k over [carry | survivors] — carry FIRST, so on equal
+        # values the earlier (lower-index) entry wins, exactly the stable-
+        # argsort tie-break this merge replaced.  Negation is a sign-bit
+        # flip, so round-tripping through -x is bit-exact.
+        tile_neg, tpos = jax.lax.top_k(-dist, kt)
+        tile_i = jnp.take_along_axis(
+            jnp.broadcast_to(col, (n, block)), tpos, axis=1)
+        cand_v = jnp.concatenate([vals, -tile_neg], axis=1)
+        cand_i = jnp.concatenate([idxs, tile_i], axis=1)
+        best_neg, bpos = jax.lax.top_k(-cand_v, k)
+        return -best_neg, jnp.take_along_axis(cand_i, bpos, axis=1)
 
     vals = jnp.full((n, k), jnp.inf, jnp.float32)
     idxs = jnp.full((n, k), -1, jnp.int32)
@@ -524,7 +543,12 @@ def topk_rows(a, b, k: int, *, d: int, metric: str = "cham",
     ascending by distance, streaming over blocks of b.  Ties are broken by
     the LOWER column index (stable merge).  `m_valid` declares how many
     leading rows of b are real when b is padded to a bucketed shape
-    (repro.index); it is traced, so varying it does not recompile."""
+    (repro.index); it is traced, so varying it does not recompile.
+
+    mode "pallas" routes through the fused repro.kernels.topk_select kernel
+    (distance tile + running k-best merge in one VMEM pass — losing columns
+    never materialise an f32 row in HBM); the jnp tile loop above is the
+    reference the kernel is pinned against."""
     a = jnp.asarray(a)
     b = jnp.asarray(b)
     m = b.shape[0] if m_valid is None else m_valid
@@ -532,11 +556,130 @@ def topk_rows(a, b, k: int, *, d: int, metric: str = "cham",
         raise ValueError(f"m_valid={m} outside the {b.shape[0]} supplied "
                          "rows")
     k = min(k, m)
+    if k == 0:
+        return (np.zeros((a.shape[0], 0), np.int32),
+                np.zeros((a.shape[0], 0), np.float32))
+    mode = _auto_mode(mode)
+    if mode == "pallas":
+        from repro.kernels.topk_select import ops as _topk_ops
+
+        vals, idxs = _topk_ops.topk_select(a, b, k, d=d, metric=metric,
+                                           m_valid=m, bn=block,
+                                           use_pallas=True)
+        return np.asarray(idxs), np.asarray(vals)
     block = max(1, min(block, b.shape[0]))
     b_p = _pad_rows(b, block)
     vals, idxs = _topk_rows_impl(a, b_p, jnp.int32(m), k=k, block=block,
-                                 metric=metric, mode=_auto_mode(mode), d=d)
+                                 metric=metric, mode=mode, d=d)
     return np.asarray(idxs), np.asarray(vals)
+
+
+def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
+                     band_lo: np.ndarray, band_hi: np.ndarray,
+                     band_rows: int, n_valid: int, metric: str = "cham",
+                     block: int = 2048, mode: str | None = None,
+                     order_by: np.ndarray | None = None,
+                     q_valid: int | None = None):
+    """Progressive band-expansion top-k over weight-banded rows.
+
+    `b` holds `n_valid` rows sorted by ascending prune score and cut into
+    contiguous bands of `band_rows` rows whose host score intervals are
+    `[band_lo[i], band_hi[i]]` (repro.index.BandedLayout layout).  Bands are
+    visited in ascending prune-score distance from the query batch; after
+    each round the running k-th best distance is compared against the weight
+    bound of every unvisited band, and the scan STOPS with an exactness
+    certificate once
+
+        prune_factor(metric) * gap(q, band) >= kth(q) + PRUNE_MARGIN
+
+    holds for every query and unvisited band: any unseen row is then
+    provably strictly farther than the current k-th neighbour (the strict
+    margin also settles knife-edge ties), so the answer equals the full
+    scan's.  Visited chunks double in row count, and each chunk is gathered
+    to a power-of-two shape, so one query compiles O(log N) graphs and
+    touches O(answer neighbourhood) rows instead of O(N).
+
+    `order_by` assigns each row the tie-break key the results must honour
+    (repro.index passes external ids; default: row position).  Within each
+    chunk columns are laid out in ascending key order, so the tile merge's
+    lower-column tie-break IS the key tie-break, and the host-side merge
+    across chunks is an exact (value, key)-lexicographic k-best.
+
+    Returns (positions (Q, k) int64 into b's rows, distances (Q, k) f32) —
+    bit-identical to `topk_rows` over the same rows arranged in key order.
+    """
+    a = jnp.asarray(a)
+    q = a.shape[0] if q_valid is None else q_valid
+    k = min(k, n_valid)
+    if q == 0 or k == 0:
+        return np.zeros((q, 0), np.int64), np.zeros((q, 0), np.float32)
+    q_scores = np.asarray(q_scores, np.float64)
+    factor = prune_factor(metric)
+    n_bands = len(band_lo)
+    # per-(query, band) weight-bound gaps; visit priority = nearest first
+    gap = np.maximum(np.maximum(band_lo[None, :] - q_scores[:, None],
+                                q_scores[:, None] - band_hi[None, :]), 0.0)
+    band_gap = gap.min(axis=0)
+    visit = np.argsort(band_gap, kind="stable")
+
+    best_v = np.full((q, k), np.inf, np.float32)
+    best_key = np.full((q, k), np.iinfo(np.int64).max, np.int64)
+    best_pos = np.full((q, k), -1, np.int64)
+
+    def band_range(bb: int) -> np.ndarray:
+        return np.arange(bb * band_rows, min((bb + 1) * band_rows, n_valid))
+
+    ptr = 0
+    visited_rows = 0
+    while ptr < n_bands:
+        take = [visit[ptr]]
+        ptr += 1
+        if visited_rows == 0:
+            # round 1: every band the weight bound cannot separate from some
+            # query (gap == 0) — the bands the answers almost surely live in
+            while ptr < n_bands and band_gap[visit[ptr]] <= 0.0:
+                take.append(visit[ptr])
+                ptr += 1
+        else:
+            target = max(visited_rows, band_rows)  # geometric expansion
+            cnt = len(band_range(take[0]))
+            while ptr < n_bands and cnt < target:
+                take.append(visit[ptr])
+                cnt += len(band_range(visit[ptr]))
+                ptr += 1
+        rows = np.concatenate([band_range(bb) for bb in take])
+        visited_rows += len(rows)
+        keys = rows if order_by is None else np.asarray(order_by)[rows]
+        rows = rows[np.argsort(keys, kind="stable")]  # columns in key order
+        sub = packing.padded_take(b, rows)
+        kk = min(k, len(rows))
+        pos_c, val_c = topk_rows(a, sub, kk, d=d, metric=metric, block=block,
+                                 mode=mode, m_valid=len(rows))
+        gpos = rows[pos_c[:q]]
+        gkey = gpos if order_by is None else np.asarray(order_by)[gpos]
+        if kk < k:  # pad the chunk's candidate list to k columns
+            padw = ((0, 0), (0, k - kk))
+            val_c = np.pad(val_c[:q], padw, constant_values=np.inf)
+            gpos = np.pad(gpos, padw, constant_values=-1)
+            gkey = np.pad(gkey, padw,
+                          constant_values=np.iinfo(np.int64).max)
+        else:
+            val_c = val_c[:q]
+        # exact (value, key)-lexicographic merge of the two k-best lists
+        cv = np.concatenate([best_v, val_c], axis=1)
+        ck = np.concatenate([best_key, gkey], axis=1)
+        cp = np.concatenate([best_pos, gpos], axis=1)
+        order = np.lexsort((ck, cv), axis=-1)[:, :k]
+        best_v = np.take_along_axis(cv, order, axis=1)
+        best_key = np.take_along_axis(ck, order, axis=1)
+        best_pos = np.take_along_axis(cp, order, axis=1)
+        if ptr >= n_bands:
+            break
+        kth = best_v[:, k - 1]
+        if np.all(factor * gap[:, visit[ptr:]]
+                  >= kth[:, None] + PRUNE_MARGIN):
+            break
+    return best_pos, best_v
 
 
 # ---------------------------------------------------------------------------
@@ -562,9 +705,6 @@ def _rowsum_impl(a_p, b_p, m, *, block, metric, mode, d):
 
     return jax.lax.fori_loop(
         0, n_tiles, body, jnp.zeros((a_p.shape[0],), jnp.float32))
-
-
-_pow2_rows = packing.pad_rows_pow2
 
 
 def rowsum(a, b=None, *, d: int, metric: str = "cham", block: int = 2048,

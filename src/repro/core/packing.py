@@ -72,6 +72,17 @@ def packed_inner(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(popcount32(a & b), axis=-1)
 
 
+def pad_to_multiple(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    """Zero-pad `axis` up to the next multiple of `mult` — the grid-shape
+    alignment rule shared by the Pallas kernel wrappers."""
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
 def pow2_bucket(n: int, floor: int = 8) -> int:
     """Next power of two >= max(n, floor) — THE shape-bucketing rule.
 

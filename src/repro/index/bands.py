@@ -1,4 +1,4 @@
-"""Weight-banded layout: the radius-query pruning structure over a store.
+"""Weight-banded layout: the query-pruning structure over a store.
 
 A Cabin sketch's Hamming weight bounds how close it can be to anything:
 dist(u, v) >= prune_factor(metric) * |s_u - s_v| for the per-row prune score
@@ -8,7 +8,8 @@ batch engine's tile loop; the index subsystem hoists it one level up: rows
 are kept weight-sorted and partitioned into contiguous BANDS, each band
 carrying its host-side score interval, so a radius query discards whole
 bands on host — before a single distance tile, device gather, or compile is
-touched (DESIGN.md section 8.2).
+touched — and a k-NN query expands outward through the bands nearest the
+query, stopping at the exactness certificate (DESIGN.md sections 8.2/8.4).
 
 The prune is sound (the bound holds with PRUNE_MARGIN slack for float
 noise), so the surviving candidate set — and therefore every result the
@@ -22,6 +23,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import allpairs
 from repro.core.allpairs import PRUNE_MARGIN, prune_factor, prune_score_host
 from repro.core.packing import padded_take
 from repro.index.store import SketchStore
@@ -72,6 +74,32 @@ class BandedLayout:
             np.maximum(self.band_lo[None, :] - qs[:, None],
                        qs[:, None] - self.band_hi[None, :]), 0.0)
         return (factor * gap < radius + PRUNE_MARGIN).any(axis=0)
+
+    def topk(self, queries_padded: jnp.ndarray, query_weights: np.ndarray,
+             k: int, *, q_valid: int, block: int = 2048,
+             mode: str | None = None) -> tuple[np.ndarray, np.ndarray]:
+        """Progressive band-expansion k-NN: (ids (Q, k), dists (Q, k)),
+        ascending by (distance, id) — exactly what core.allpairs.topk_rows
+        returns over the id-ordered membership.
+
+        Bands are visited in ascending prune-score distance from the query
+        batch, the running k-th best distance is tracked, and the scan stops
+        with the certificate `prune_factor * gap >= kth + PRUNE_MARGIN` for
+        every (query, unvisited band) pair — see allpairs.topk_rows_banded
+        for the exactness argument.  `queries_padded` is the pow2-padded
+        packed query batch (first `q_valid` rows real); `query_weights` its
+        host sketch weights, used for band planning only."""
+        if self.n == 0 or k == 0 or q_valid == 0:
+            return (np.zeros((q_valid, 0), np.int64),
+                    np.zeros((q_valid, 0), np.float32))
+        qs = prune_score_host(np.asarray(query_weights)[:q_valid], self.d,
+                              self.metric)
+        pos, vals = allpairs.topk_rows_banded(
+            queries_padded, self.matrix, k, d=self.d, metric=self.metric,
+            q_scores=qs, band_lo=self.band_lo, band_hi=self.band_hi,
+            band_rows=self.band_rows, n_valid=self.n, order_by=self.ids,
+            block=block, mode=mode, q_valid=q_valid)
+        return self.ids[pos], vals
 
     def select(self, band_mask: np.ndarray
                ) -> tuple[jnp.ndarray, int, np.ndarray]:

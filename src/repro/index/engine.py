@@ -15,13 +15,13 @@ Serving disciplines (DESIGN.md section 8.3):
     request mixes.  Padding rows are all-zero categorical vectors, whose
     sketches are all-zero and which every reduction masks out — they can
     never contaminate a result.
-  * Bit-identity.  `topk` delegates to core.allpairs.topk_rows over the
-    store's id-ordered alive rows and `radius` to threshold_pairs over the
-    band-pruned rows, so results are bit-identical to running the batch
-    engine on a freshly built matrix of the same vectors — across any
-    interleaving of add/remove/compact, after checkpoint restore, and under
-    both metrics.  Ties in topk resolve to the lower id, matching
-    topk_rows' stable merge.
+  * Bit-identity.  `topk` serves through BandedLayout's progressive band
+    expansion (allpairs.topk_rows_banded — nearest bands first, stop at the
+    exactness certificate) and `radius` through threshold_pairs over the
+    band-pruned rows; both are bit-identical to running the batch engine on
+    a freshly built matrix of the same vectors — across any interleaving of
+    add/remove/compact, after checkpoint restore, and under both metrics.
+    Ties in topk resolve to the lower id, matching topk_rows' stable merge.
   * LRU result cache.  Results are memoised on (op, args, store version,
     query-sketch bytes); any mutation bumps the version, so stale hits are
     impossible by construction.
@@ -204,6 +204,13 @@ class QueryEngine:
 
     def topk_packed(self, sk, k: int, n_valid: int | None = None
                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Served via progressive band expansion (BandedLayout.topk): bands
+        are visited nearest-first and the scan stops at the exactness
+        certificate, so a query touches O(answer neighbourhood) rows, not
+        O(N) — while returning bit-identical results to topk_rows over the
+        alive membership.  The LRU is consulted on the query-sketch bytes
+        BEFORE the layout or any device gather is touched: a cache hit costs
+        O(1) host work regardless of store size."""
         sk = jnp.asarray(sk)
         q = sk.shape[0] if n_valid is None else n_valid
         if not 0 <= q <= sk.shape[0]:
@@ -212,26 +219,36 @@ class QueryEngine:
         kk = min(k, len(self.store))
         if q == 0 or kk == 0:
             return (np.zeros((q, 0), np.int64), np.zeros((q, 0), np.float32))
+        q_host = np.asarray(sk[:q])  # needed for band planning regardless
         key = None  # caching disabled: skip the device sync for the key
         if self._cache_entries:
-            key = ("topk", kk, self.store.version,
-                   np.asarray(sk[:q]).tobytes())
+            key = ("topk", kk, self.store.version, q_host.tobytes())
             hit = self._cached(key)
             if hit is not None:
                 return hit[0].copy(), hit[1].copy()
-        mat, m, ids = self.store.gather_alive()
-        pos, dist = allpairs.topk_rows(
-            pad_rows_pow2(sk), mat, kk, d=self.d, metric=self.metric,
-            block=self.block, mode=self.mode, m_valid=m)
-        out = (ids[pos[:q]], dist[:q])
+        banded = self._banded_layout()
+        q_weights = packing.np_popcount_rows(q_host)
+        out = banded.topk(pad_rows_pow2(sk), q_weights, kk, q_valid=q,
+                          block=self.block, mode=self.mode)
         self._remember(key, out)
         return out
 
     def radius(self, queries, r: float) -> list[np.ndarray]:
         """All stored rows within distance < r of each query: a list of Q
         id arrays (ascending).  Weight bands whose score interval is out of
-        reach are pruned on host before any tile is computed."""
+        reach are pruned on host before any tile is computed.  Accepts
+        dense rows or an (indices, values) COO pair; `radius_packed` skips
+        sketching."""
         sk, q = self._sketch(queries)
+        return self.radius_packed(sk, r, n_valid=q)
+
+    def radius_packed(self, sk, r: float, n_valid: int | None = None
+                      ) -> list[np.ndarray]:
+        sk = jnp.asarray(sk)
+        q = sk.shape[0] if n_valid is None else n_valid
+        if not 0 <= q <= sk.shape[0]:
+            raise ValueError(
+                f"n_valid={q} outside the {sk.shape[0]} supplied rows")
         if q == 0:
             return []
         q_host = np.asarray(sk[:q])  # needed for band planning regardless

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.packing import pad_to_multiple as _pad_to
+
 
 def _popcount_u32(v):
     v = v.astype(jnp.uint32)
@@ -59,16 +61,6 @@ def _pair_stats_kernel(a_ref, b_ref, inner_ref, ham_ref, *, op_inner, op_ham):
         inner_ref[...] += jnp.sum(_popcount_u32(a3 & b3), axis=-1, dtype=jnp.int32)
     if op_ham:
         ham_ref[...] += jnp.sum(_popcount_u32(a3 ^ b3), axis=-1, dtype=jnp.int32)
-
-
-def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
 
 
 @functools.partial(

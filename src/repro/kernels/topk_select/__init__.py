@@ -1,0 +1,3 @@
+from repro.kernels.topk_select.kernel import topk_select as topk_select_kernel  # noqa: F401
+from repro.kernels.topk_select.ops import topk_select  # noqa: F401
+from repro.kernels.topk_select.ref import topk_select_ref  # noqa: F401

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: fused distance + running top-k select on packed rows.
+
+The serving hot path (QueryEngine.topk -> core.allpairs.topk_rows) streams
+store tiles past a query block and keeps the k best columns per query.  Run
+as separate passes — a pair-stats kernel producing an f32 distance tile in
+HBM, then a host/XLA select — every losing column (all but ~k of N) pays an
+HBM round-trip for a value that is immediately discarded.  This kernel fuses
+the two: the SWAR-popcount distance tile and the running k-best merge happen
+in one VMEM pass, so the only HBM writes are the (Q, k) results.
+
+VMEM carry layout: the (BQ, k) values and indices OUTPUT tiles double as the
+carry — their index_map pins them to (i, 0) for every column step j, so with
+the column grid innermost they stay resident in VMEM across the whole sweep
+(same revisiting discipline as the hamming kernel's accumulator) and are
+flushed to HBM once per query tile.  Both live as full (value, index)-sorted
+rows; k is kept at its logical size (the store is sub-lane-width — Mosaic
+pads the trailing dim internally), so carry VMEM is 8·BQ·k bytes on top of
+the (BQ, W) + (BN, W) int32 input tiles.
+
+Merge: per tile, k compare-exchange rounds against the tile minimum.  Each
+round extracts the tile's lexicographic (distance, column) minimum — ties
+resolve to the LOWER column via an iota-masked second min — knocks it out of
+the tile, and inserts it into the sorted carry with a vectorised
+compare-exchange shift (count strictly-smaller carry entries, shift the tail
+right by one, place).  Equal-distance insertions land AFTER existing carry
+entries, whose columns are always lower (earlier tiles), so the carry is the
+exact (distance, column)-lexicographic k-best — bit-identical to
+core.allpairs._topk_rows_impl's stable merge, which tests pin.
+
+Grid: (Q/BQ, N/BN) with the column dimension innermost; `m` (the traced
+valid-column count) rides in as a (1, 1) tile broadcast to every program so
+varying the live store size never recompiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.cham import binhamming_from_stats
+from repro.core.packing import pad_to_multiple, popcount32
+
+
+def _tile_distances(qt, bt, metric: str, d: int) -> jnp.ndarray:
+    """(BQ, W) x (BN, W) packed -> (BQ, BN) f32, same formulas (and same
+    elementwise ops) as core.allpairs._tile_dist on the popcount backend."""
+    wa = jnp.sum(popcount32(qt), axis=-1)
+    wb = jnp.sum(popcount32(bt), axis=-1)
+    inner = jnp.sum(popcount32(qt[:, None, :] & bt[None, :, :]), axis=-1)
+    if metric == "cham":
+        return 2.0 * binhamming_from_stats(wa[:, None], wb[None, :], inner, d)
+    if metric == "hamming":
+        return (wa[:, None] + wb[None, :] - 2 * inner).astype(jnp.float32)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def _topk_select_kernel(q_ref, b_ref, m_ref, vals_ref, idxs_ref, *,
+                        k, bn, metric, d):
+    """One (BQ, BN) column step of the running (BQ, k) select."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, jnp.inf)
+        idxs_ref[...] = jnp.full_like(idxs_ref, -1)
+
+    dist = _tile_distances(q_ref[...], b_ref[...], metric, d)
+    col = j * bn + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    dist = jnp.where(col < m_ref[0, 0], dist, jnp.inf)
+
+    vals = vals_ref[...]  # (BQ, k) ascending by (value, index)
+    idxs = idxs_ref[...]
+    kiota = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
+    big = jnp.int32(2**31 - 1)
+    for _ in range(k):
+        # lexicographic (value, column) tile minimum
+        tmin = jnp.min(dist, axis=1)
+        tidx = jnp.min(jnp.where(dist == tmin[:, None], col, big), axis=1)
+        dist = jnp.where(col == tidx[:, None], jnp.inf, dist)
+        # compare-exchange insertion: strictly-smaller carry entries stay,
+        # the tail shifts right one slot, the extracted pair drops in.  An
+        # insertion past the end (pos == k) leaves the carry untouched —
+        # masked +inf extractions can never evict the (+inf, -1) fillers,
+        # whose index -1 ranks them below every real column.
+        smaller = (vals < tmin[:, None]) | (
+            (vals == tmin[:, None]) & (idxs < tidx[:, None]))
+        pos = jnp.sum(smaller.astype(jnp.int32), axis=1)
+        shift_v = jnp.concatenate([vals[:, :1], vals[:, :-1]], axis=1)
+        shift_i = jnp.concatenate([idxs[:, :1], idxs[:, :-1]], axis=1)
+        keep = kiota < pos[:, None]
+        here = kiota == pos[:, None]
+        vals = jnp.where(keep, vals, jnp.where(here, tmin[:, None], shift_v))
+        idxs = jnp.where(keep, idxs, jnp.where(here, tidx[:, None], shift_i))
+    vals_ref[...] = vals
+    idxs_ref[...] = idxs
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "metric", "d", "bq", "bn", "interpret"))
+def topk_select(
+    q: jnp.ndarray,
+    b: jnp.ndarray,
+    m,
+    k: int,
+    *,
+    metric: str = "cham",
+    d: int,
+    bq: int = 128,
+    bn: int = 1024,
+    interpret: bool = False,
+):
+    """Fused k-nearest-columns: q (Q, W) x b (N, W) packed int32 ->
+    (values (Q, k) f32, indices (Q, k) int32), ascending by (value, index).
+
+    `m` is the TRACED count of valid leading rows of b (columns past it are
+    masked to +inf); `k` must satisfy 1 <= k <= m for every result slot to
+    be a real column (the ops wrapper validates).
+    """
+    assert q.ndim == 2 and b.ndim == 2 and q.shape[1] == b.shape[1]
+    nq, w = q.shape
+    bq_, bn_ = min(bq, nq), min(bn, b.shape[0])
+    q_p = pad_to_multiple(q, bq_, 0)
+    b_p = pad_to_multiple(b, bn_, 0)
+    grid = (q_p.shape[0] // bq_, b_p.shape[0] // bn_)
+    m_arr = jnp.asarray(m, jnp.int32).reshape(1, 1)
+
+    vals, idxs = pl.pallas_call(
+        functools.partial(_topk_select_kernel, k=k, bn=bn_, metric=metric,
+                          d=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq_, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn_, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq_, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq_, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_p.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((q_p.shape[0], k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_p, b_p, m_arr)
+    return vals[:nq], idxs[:nq]

@@ -1,0 +1,48 @@
+"""Jit'd public wrapper around the fused topk_select kernel.
+
+Mirrors repro.kernels.hamming.ops: `use_pallas=None` auto-selects the
+compiled kernel on real TPU and the jnp reference elsewhere (the interpreter
+is for correctness tests, not production CPU use).  core.allpairs.topk_rows
+routes its "pallas" mode here, so on TPU the serving top-k never writes a
+distance tile to HBM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_select import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def topk_select(q, b, k: int, *, d: int, metric: str = "cham",
+                m_valid: int | None = None, bq: int = 128, bn: int = 1024,
+                use_pallas: bool | None = None,
+                interpret: bool | None = None):
+    """k nearest columns of b per row of q: (values (Q, k), indices (Q, k)),
+    ascending by (distance, column) — bit-identical tie-break to
+    core.allpairs.topk_rows.  `m_valid` masks padded trailing rows of b and
+    is traced (varying it does not recompile); k is clamped to it so every
+    result slot names a real column."""
+    q = jnp.asarray(q)
+    b = jnp.asarray(b)
+    m = b.shape[0] if m_valid is None else m_valid
+    if not 0 <= m <= b.shape[0]:
+        raise ValueError(f"m_valid={m} outside the {b.shape[0]} supplied "
+                         "rows")
+    k = min(k, m)
+    if k == 0 or q.shape[0] == 0:
+        return (jnp.zeros((q.shape[0], 0), jnp.float32),
+                jnp.zeros((q.shape[0], 0), jnp.int32))
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return kernel.topk_select(
+            q, b, m, k, metric=metric, d=d, bq=bq, bn=bn,
+            interpret=bool(interpret if interpret is not None
+                           else not _on_tpu()))
+    return ref.topk_select_ref(q, b, k, d=d, metric=metric, m_valid=m)

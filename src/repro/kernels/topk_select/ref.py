@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused topk_select kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cham import binhamming_from_stats
+from repro.core.packing import popcount32
+
+
+def topk_select_ref(q: jnp.ndarray, b: jnp.ndarray, k: int, *, d: int,
+                    metric: str = "cham", m_valid: int | None = None):
+    """(values (Q, k) f32, indices (Q, k) int32), ascending by (value,
+    column) — the dense-matrix + stable-argsort twin of the kernel's
+    running compare-exchange merge.  Requires k <= m_valid (the kernel's
+    contract) for every slot to name a real column."""
+    wa = jnp.sum(popcount32(q), axis=-1)
+    wb = jnp.sum(popcount32(b), axis=-1)
+    inner = jnp.sum(popcount32(q[:, None, :] & b[None, :, :]), axis=-1)
+    if metric == "cham":
+        dist = 2.0 * binhamming_from_stats(wa[:, None], wb[None, :], inner, d)
+    elif metric == "hamming":
+        dist = (wa[:, None] + wb[None, :] - 2 * inner).astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    if m_valid is not None:
+        col = jnp.arange(b.shape[0], dtype=jnp.int32)[None, :]
+        dist = jnp.where(col < m_valid, dist, jnp.inf)
+    order = jnp.argsort(dist, axis=1)[:, :k]  # stable: ties -> lower column
+    vals = jnp.take_along_axis(dist, order, axis=1)
+    return vals, order.astype(jnp.int32)

@@ -139,6 +139,78 @@ def test_topk_rows_matches_dense():
     assert float(np.abs(vals[:, 0]).max()) < 1e-3
 
 
+def test_topk_rows_tie_break_across_tiles():
+    """Duplicate rows scattered across tile boundaries => equal distances
+    straddling the k cut; the O(k) lax.top_k merge must keep the LOWER
+    column, exactly like the stable argsort it replaced."""
+    b = np.concatenate([SK[:20], SK[:20], SK[:20]])  # 3 copies, cols i, i+20, i+40
+    refd = np.asarray(_cham_jit(jnp.asarray(SK[:10]), jnp.asarray(b), D))
+    order = np.argsort(refd, axis=1, kind="stable")[:, :5]
+    for block in [7, 16, 60]:  # copies split across tiles every which way
+        idxs, vals = allpairs.topk_rows(SK[:10], b, 5, d=D, block=block)
+        np.testing.assert_array_equal(idxs, order)
+        np.testing.assert_array_equal(
+            vals, np.take_along_axis(refd, order, axis=1))
+
+
+def test_argmin_rows_bucketed_no_recompile():
+    """m is traced and b is pow2-bucketed: the k-mode medoid loop's drifting
+    cluster sizes must reuse one compiled graph per bucket."""
+    centers = SK[:13]
+    before = allpairs._argmin_rows_impl._cache_size()
+    for m in (5, 6, 7, 8):
+        idxs, vals = allpairs.argmin_rows(SK[:10], centers[:m], d=D)
+        ref = np.asarray(_cham_jit(jnp.asarray(SK[:10]),
+                                   jnp.asarray(centers[:m]), D))
+        np.testing.assert_array_equal(idxs, ref.argmin(axis=1))
+        np.testing.assert_allclose(vals, ref.min(axis=1), rtol=1e-6)
+    # all four sizes bucket to 8 rows -> exactly one new compile
+    assert allpairs._argmin_rows_impl._cache_size() == before + 1
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_topk_rows_banded_matches_full_scan(metric):
+    """Progressive band expansion returns exactly the full scan's answer —
+    positions, values, and (value, key) tie-break — for both the default
+    positional keys and a shuffled external-id keying."""
+    from repro.core.packing import np_popcount_rows
+
+    weights = np_popcount_rows(SK)
+    order = np.argsort(weights, kind="stable")
+    sks = SK[order]
+    w_sorted = weights[order]
+    n = len(sks)
+    band_rows = 8
+    n_bands = -(-n // band_rows)
+    scores = allpairs.prune_score_host(w_sorted, D, metric)
+    band_lo = np.asarray([scores[b * band_rows] for b in range(n_bands)])
+    band_hi = np.asarray(
+        [scores[min((b + 1) * band_rows, n) - 1] for b in range(n_bands)])
+    q = SK[:7]
+    q_scores = allpairs.prune_score_host(np_popcount_rows(q), D, metric)
+
+    pos, vals = allpairs.topk_rows_banded(
+        q, jnp.asarray(sks), 5, d=D, metric=metric, q_scores=q_scores,
+        band_lo=band_lo, band_hi=band_hi, band_rows=band_rows, n_valid=n,
+        block=32)
+    ref_i, ref_v = allpairs.topk_rows(q, sks, 5, d=D, metric=metric)
+    np.testing.assert_array_equal(pos, ref_i)
+    np.testing.assert_array_equal(vals, ref_v)
+
+    # external-id keying: results must match the full scan over the rows
+    # REARRANGED in key order (ties -> lower key), mapped back to positions
+    ids = np.random.default_rng(5).permutation(n).astype(np.int64)
+    key_order = np.argsort(ids, kind="stable")
+    ref_ki, ref_kv = allpairs.topk_rows(q, sks[key_order], 5, d=D,
+                                        metric=metric)
+    pos2, vals2 = allpairs.topk_rows_banded(
+        q, jnp.asarray(sks), 5, d=D, metric=metric, q_scores=q_scores,
+        band_lo=band_lo, band_hi=band_hi, band_rows=band_rows, n_valid=n,
+        order_by=ids, block=32)
+    np.testing.assert_array_equal(pos2, key_order[ref_ki])
+    np.testing.assert_array_equal(vals2, ref_kv)
+
+
 def test_rowsum_matches_dense():
     got = allpairs.rowsum(SK, d=D, block=29)
     np.testing.assert_allclose(got, REF.sum(axis=1), rtol=1e-5)

@@ -320,6 +320,59 @@ def test_result_cache_hits_and_invalidates():
         np.testing.assert_array_equal(h, ref)
 
 
+def test_topk_cache_hit_skips_gather_and_layout(monkeypatch):
+    """An LRU hit must be O(1): no store gather, no banded layout, no
+    device work — only the key bytes and the cached copy."""
+    eng = QueryEngine(P, cache_entries=4)
+    eng.add_dense(X[:40])
+    a = eng.topk(QUERIES, 3)  # miss: builds the layout, runs the scan
+
+    def _boom(what):
+        def fn(*args, **kwargs):
+            raise AssertionError(f"{what} touched on a cache hit")
+        return fn
+
+    monkeypatch.setattr(eng.store, "gather_alive", _boom("gather_alive"))
+    monkeypatch.setattr(eng, "_banded_layout", _boom("_banded_layout"))
+    b = eng.topk(QUERIES, 3)
+    assert eng.cache_hits == 1
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_banded_topk_certificate_prunes_but_never_drops(metric, monkeypatch):
+    """A narrow query's progressive expansion stops at the certificate
+    after touching a fraction of the store, yet returns exactly the full
+    scan's answer; a diverse batch degrades gracefully to a full visit."""
+    from repro.core import allpairs as ap
+    from repro.core.packing import np_popcount_rows
+
+    eng = QueryEngine(P, metric=metric, band_rows=8, cache_entries=0)
+    eng.add_dense(X)
+    visited = []
+    orig = ap.topk_rows
+
+    def counting(a, b, k, **kw):
+        visited.append(kw.get("m_valid", np.shape(b)[0]))
+        return orig(a, b, k, **kw)
+
+    monkeypatch.setattr(ap, "topk_rows", counting)
+    weights = np_popcount_rows(SK)
+    qi = int(np.argmin(weights))  # narrowest sketch: strongest certificate
+    got_i, got_v = eng.topk(X[qi: qi + 1], 3)
+    assert 0 < sum(visited) < len(X)  # the certificate actually fired
+    monkeypatch.setattr(ap, "topk_rows", orig)
+    ref_i, ref_v = topk_rows(SK[qi: qi + 1], SK, 3, d=D, metric=metric)
+    np.testing.assert_array_equal(got_i, ref_i)
+    np.testing.assert_array_equal(got_v, ref_v)
+    # the full query mix (diverse weights) still answers exactly
+    got5 = eng.topk(QUERIES, 7)
+    ref5 = topk_rows(SK[:5], SK, 7, d=D, metric=metric)
+    np.testing.assert_array_equal(got5[0], ref5[0])
+    np.testing.assert_array_equal(got5[1], ref5[1])
+
+
 def test_banded_layout_prunes_but_never_drops():
     """With tiny bands, many get pruned for a small radius, yet the result
     equals the unpruned batch reference."""

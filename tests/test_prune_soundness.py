@@ -1,0 +1,116 @@
+"""Prune soundness at the knife edge.
+
+The weight-band prune (radius) and the band-expansion certificate (top-k)
+both rest on one inequality: dist >= prune_factor * |s_i - s_j| up to
+PRUNE_MARGIN of float noise.  These property tests attack the margin with
+adversarial weight distributions — every row AT a band boundary, duplicated
+weights straddling the cut, near-saturated sketches where the cham
+estimator clamps — and radii/k choices that park distances within a float
+ulp of the prune threshold.  The property is always the same: the banded
+answer equals the brute-force batch answer, bit for bit, under both
+metrics.  A dropped true neighbour here means the margin (or a certificate
+inequality) went unsound.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.core import CabinParams, threshold_pairs, topk_rows
+from repro.core.packing import np_pack_bits
+from repro.index import QueryEngine
+
+D = 256
+P = CabinParams.create(500, D, seed=11)  # seeds only; rows enter pre-packed
+
+
+def _packed_rows_with_weights(weights, rng):
+    """One packed row per requested Hamming weight (exact, random support)."""
+    bits = np.zeros((len(weights), D), np.uint8)
+    for i, w in enumerate(weights):
+        bits[i, rng.choice(D, size=int(w), replace=False)] = 1
+    return np_pack_bits(bits)
+
+
+def _adversarial_weights(seed: int, n: int) -> np.ndarray:
+    """Weight multisets chosen to break band cuts: heavy ties, clustered
+    runs straddling boundaries, and near-saturation (cham's log clamp)."""
+    rng = np.random.default_rng(seed)
+    family = seed % 4
+    if family == 0:  # all rows at ONE weight: every band interval is a point
+        w = np.full(n, int(rng.integers(4, D - 4)))
+    elif family == 1:  # two tight clusters: the cut lands inside a tie run
+        a, b = sorted(rng.integers(2, D - 2, size=2))
+        w = np.where(rng.random(n) < 0.5, a, b)
+    elif family == 2:  # arithmetic run: adjacent weights in every band
+        lo = int(rng.integers(1, D // 2))
+        w = lo + np.arange(n) % (D - lo - 1)
+    else:  # near-saturation: density_estimate clamps, scores go nonlinear
+        w = D - 1 - rng.integers(0, 6, size=n)
+    return np.sort(w.astype(np.int64))
+
+
+def _brute_radius(q_sk, data_sk, r, metric):
+    pairs = threshold_pairs(jnp.asarray(q_sk), jnp.asarray(data_sk), d=D,
+                            threshold=r, metric=metric)
+    return [np.sort(pairs[pairs[:, 0] == qi, 1]) for qi in range(len(q_sk))]
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**16))
+def test_banded_queries_never_drop_neighbours_at_the_knife_edge(seed):
+    rng = np.random.default_rng(seed)
+    n = 48
+    sk = _packed_rows_with_weights(_adversarial_weights(seed, n), rng)
+    q_sk = sk[rng.choice(n, size=3, replace=False)]
+    for metric in ("cham", "hamming"):
+        eng = QueryEngine(P, metric=metric, band_rows=4, cache_entries=0)
+        ids = eng.add_packed(sk)
+        assert np.array_equal(ids, np.arange(n))
+
+        # knife-edge radii: exact distance values (strict < excludes the
+        # pair), one ulp above (includes it), and a mid-percentile value
+        dists = np.asarray(topk_rows(q_sk, sk, n, d=D, metric=metric)[1])
+        finite = np.unique(dists[np.isfinite(dists) & (dists > 0)])
+        radii = []
+        if len(finite):
+            edge = float(finite[rng.integers(0, len(finite))])
+            radii += [edge, float(np.nextafter(np.float32(edge),
+                                               np.float32(np.inf)))]
+            radii.append(float(np.percentile(finite, 60)))
+        for r in radii:
+            got = eng.radius_packed(jnp.asarray(q_sk), r,
+                                    n_valid=len(q_sk))
+            want = _brute_radius(q_sk, sk, r, metric)
+            for a, b in zip(got, want):
+                np.testing.assert_array_equal(a, b)
+
+        # top-k across the tie boundary: k chosen so the cut can land inside
+        # an equal-distance run of same-weight rows
+        for k in (1, int(rng.integers(2, 8)), n):
+            gi, gv = eng.topk_packed(jnp.asarray(q_sk), k,
+                                     n_valid=len(q_sk))
+            ri, rv = topk_rows(q_sk, sk, k, d=D, metric=metric)
+            np.testing.assert_array_equal(gi, ri)
+            np.testing.assert_array_equal(gv, rv)
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_duplicate_rows_at_band_cuts_keep_lowest_ids(metric):
+    """Every row duplicated 4x with band_rows=4: each band is one tie run,
+    every cut splits equal distances.  Ties must resolve to ascending ids —
+    the batch engine's stable order — through the banded path."""
+    rng = np.random.default_rng(0)
+    base = _packed_rows_with_weights([30, 30, 90, 90, 200, 200], rng)
+    sk = np.repeat(base, 4, axis=0)  # ids 4i..4i+3 share a sketch
+    eng = QueryEngine(P, metric=metric, band_rows=4, cache_entries=0)
+    eng.add_packed(sk)
+    gi, gv = eng.topk_packed(jnp.asarray(base), 4, n_valid=len(base))
+    for j in range(6):
+        np.testing.assert_array_equal(gi[j], 4 * j + np.arange(4))
+        assert gv[j, 0] == gv[j, 3]  # genuinely tied, not just near
+    ri, rv = topk_rows(base, sk, 4, d=D, metric=metric)
+    np.testing.assert_array_equal(gi, ri)
+    np.testing.assert_array_equal(gv, rv)

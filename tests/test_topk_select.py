@@ -1,0 +1,132 @@
+"""Fused topk_select kernel (interpret mode) vs oracles.
+
+Contracts pinned here:
+  * the kernel's running compare-exchange merge equals the dense-matrix +
+    stable-argsort reference — same columns, same (distance, column)
+    tie-break — across ragged shapes, both metrics, with and without
+    m_valid masking;
+  * "hamming" distances are exact integers and match bit-for-bit on every
+    path; "cham" indices match and values agree to cross-graph libm noise
+    (the same ~1e-7-relative caveat kernels.hamming.ops.dist_matrix
+    documents — the bit-identity contract belongs to core.allpairs, whose
+    jnp path the serving layer uses off-TPU);
+  * core.allpairs.topk_rows mode="pallas" (the TPU serving route) agrees
+    with its jnp tile loop.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import allpairs
+from repro.kernels.topk_select.kernel import topk_select as topk_select_kernel
+from repro.kernels.topk_select.ops import topk_select
+from repro.kernels.topk_select.ref import topk_select_ref
+
+RNG = np.random.default_rng(4321)
+D = 256
+
+
+def _rows(n, w):
+    return jnp.asarray(
+        RNG.integers(-(2**31), 2**31, size=(n, w)).astype(np.int32))
+
+
+def _check(metric, kv, ki, rv, ri):
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    if metric == "hamming":  # exact integer distances: bit-identical
+        np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+    else:  # cham: same exact integer stats, cross-graph libm noise
+        np.testing.assert_allclose(np.asarray(kv), np.asarray(rv),
+                                   rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+@pytest.mark.parametrize(
+    "q,n,w,k,bq,bn",
+    [
+        (1, 1, 1, 1, 8, 8),
+        (9, 37, 8, 5, 4, 8),       # ragged: padding on every axis
+        (16, 64, 8, 3, 8, 16),     # exact tiling
+        (33, 70, 9, 7, 16, 32),
+        (5, 12, 4, 12, 8, 4),      # k == n: every column is a winner
+    ],
+)
+def test_topk_select_shapes(metric, q, n, w, k, bq, bn):
+    a = _rows(q, w)
+    b = _rows(n, w)
+    kv, ki = topk_select_kernel(a, b, n, k, metric=metric, d=D, bq=bq, bn=bn,
+                                interpret=True)
+    rv, ri = topk_select_ref(a, b, k, d=D, metric=metric)
+    _check(metric, kv, ki, rv, ri)
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_topk_select_tie_break_lower_column(metric):
+    """Duplicate store rows => equal distances straddling the k boundary on
+    every tile edge; the winner must always be the LOWER column."""
+    base = _rows(6, 8)
+    b = jnp.concatenate([base, base, base], axis=0)  # 3 copies of each
+    a = _rows(4, 8)
+    kv, ki = topk_select_kernel(a, b, b.shape[0], 7, metric=metric, d=D,
+                                bq=4, bn=4, interpret=True)
+    rv, ri = topk_select_ref(a, b, 7, d=D, metric=metric)
+    _check(metric, kv, ki, rv, ri)
+    # self-query on the duplicated store: first two hits are copies at the
+    # same distance, ordered by column
+    kv2, ki2 = topk_select_kernel(base, b, b.shape[0], 2, metric=metric, d=D,
+                                  bq=4, bn=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ki2[:, 0]), np.arange(6))
+    np.testing.assert_array_equal(np.asarray(ki2[:, 1]), np.arange(6, 12))
+    np.testing.assert_array_equal(np.asarray(kv2[:, 0]),
+                                  np.asarray(kv2[:, 1]))
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_topk_select_m_valid_masks_padding(metric):
+    """Columns past the traced valid count can never be returned, whatever
+    garbage the padding rows hold."""
+    a = _rows(6, 8)
+    b = _rows(40, 8)
+    for m in (17, 32, 40):
+        kv, ki = topk_select_kernel(a, b, m, 9, metric=metric, d=D,
+                                    bq=8, bn=16, interpret=True)
+        rv, ri = topk_select_ref(a, b, 9, d=D, metric=metric, m_valid=m)
+        _check(metric, kv, ki, rv, ri)
+        assert int(np.asarray(ki).max()) < m
+
+
+def test_topk_select_ops_dispatch_and_errors():
+    a = _rows(5, 8)
+    b = _rows(21, 8)
+    kv, ki = topk_select(a, b, 4, d=D, use_pallas=True, interpret=True)
+    rv, ri = topk_select(a, b, 4, d=D, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(rv),
+                               rtol=1e-5, atol=1e-3)
+    # k clamps to m_valid; empty edges return (Q, 0)
+    kv0, ki0 = topk_select(a, b, 3, d=D, m_valid=0)
+    assert kv0.shape == (5, 0) and ki0.shape == (5, 0)
+    kv1, ki1 = topk_select(a[:0], b, 3, d=D)
+    assert kv1.shape == (0, 0)
+    with pytest.raises(ValueError, match="m_valid"):
+        topk_select(a, b, 3, d=D, m_valid=22)
+    with pytest.raises(ValueError, match="metric"):
+        topk_select(a, b, 3, d=D, metric="cosine", use_pallas=False)
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_topk_rows_pallas_mode_matches_jnp(metric):
+    """The serving dispatch: allpairs.topk_rows mode="pallas" (fused kernel)
+    vs its jnp tile loop — identical columns under both metrics."""
+    a = _rows(9, 8)
+    b = _rows(50, 8)
+    pi, pv = allpairs.topk_rows(a, b, 6, d=D, metric=metric, mode="pallas",
+                                block=16, m_valid=44)
+    ji, jv = allpairs.topk_rows(a, b, 6, d=D, metric=metric,
+                                block=16, m_valid=44)
+    np.testing.assert_array_equal(pi, ji)
+    if metric == "hamming":
+        np.testing.assert_array_equal(pv, jv)
+    else:
+        np.testing.assert_allclose(pv, jv, rtol=1e-5, atol=1e-3)
