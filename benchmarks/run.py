@@ -21,7 +21,7 @@ import traceback
 # suites whose results feed the BENCH_kernels.json perf trajectory
 _TRAJECTORY_SUITES = ("kernel_packed", "kernel_cham", "kernel_sketch",
                       "kernel_sparse_sketch", "dedup", "dedup_streaming",
-                      "index")
+                      "index", "index_mixed")
 
 # tiny-size overrides for --smoke: exercise every trajectory suite's wiring
 # (sketch -> kernels -> engine -> index) in seconds on a bare CPU runner
@@ -34,6 +34,8 @@ _SMOKE_KWARGS = {
     "dedup_streaming": dict(n_docs=256),
     "index": dict(n_small=256, n_large=2048, n_queries=8, chunk=256,
                   ratio_bar=None),
+    "index_mixed": dict(n_small=256, n_large=1024, q_batch=4, rounds=3,
+                        churn=16, speedup_bar=None),
 }
 
 
@@ -90,6 +92,7 @@ def main() -> None:
         ("dedup", bench_dedup.dedup_sketch_vs_exact),
         ("dedup_streaming", bench_dedup.dedup_streaming_vs_blocked),
         ("index", bench_index.bench_index),
+        ("index_mixed", bench_index.bench_mixed_traffic),
     ]
     only = None
     smoke = "--smoke" in sys.argv[1:]

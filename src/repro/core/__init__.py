@@ -58,7 +58,8 @@ from repro.core.theory import sketch_dim, theorem2_bound  # noqa: F401
 
 # repro.index entry points, resolved lazily to break the import cycle
 # (repro.index imports repro.core at module load).
-_INDEX_EXPORTS = ("SketchStore", "BandedLayout", "QueryEngine")
+_INDEX_EXPORTS = ("SketchStore", "BandedLayout", "TieredLayout",
+                  "QueryEngine")
 
 
 def __getattr__(name):

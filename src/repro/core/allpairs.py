@@ -302,6 +302,30 @@ def _banded_pairs_impl(a_pp, threshold, *, n, block, width, capacity, metric,
     return buf_i, buf_j, count
 
 
+# pad sentinel for k-best candidate lists: a (inf, KBEST_KEY_PAD) entry
+# sorts after every real (value, key) candidate in kbest_lex_merge
+KBEST_KEY_PAD = np.iinfo(np.int64).max
+
+
+def kbest_lex_merge(k: int, values: np.ndarray, keys: np.ndarray,
+                    *extras: np.ndarray) -> tuple[np.ndarray, ...]:
+    """Exact (value, key)-lexicographic k-best over per-row candidate
+    lists: `values`/`keys`/`extras` are (Q, C >= k) concatenated candidate
+    columns; returns each reduced to its k best columns, ascending by
+    (value, key).  THE one merge rule behind every multi-list top-k in the
+    repo — topk_rows_banded's cross-chunk merge and the index's cross-tier
+    merge share it, which is what makes their bit-identity with a single
+    `topk_rows` scan structural rather than by convention.  Pad candidate
+    lists short of k with (np.inf, KBEST_KEY_PAD) entries; they sort after
+    any real candidate and survive only if fewer than k real ones exist."""
+    order = np.lexsort((keys, values), axis=-1)[:, :k]
+
+    def take(a: np.ndarray) -> np.ndarray:
+        return np.take_along_axis(a, order, axis=1)
+
+    return (take(values), take(keys)) + tuple(take(a) for a in extras)
+
+
 def prune_score_host(weights: np.ndarray, d: int, metric: str) -> np.ndarray:
     """Host twin of _prune_scores for band planning (float64; PRUNE_MARGIN
     absorbs the f32/f64 gap).  Shared with repro.index.bands, which uses the
@@ -538,12 +562,22 @@ def _topk_rows_impl(a, b_p, m, *, k, block, metric, mode, d):
 
 def topk_rows(a, b, k: int, *, d: int, metric: str = "cham",
               block: int = 2048, mode: str | None = None,
-              m_valid: int | None = None):
+              m_valid: int | None = None, pad_k: bool = False):
     """Per-row k nearest columns of b: (indices (N, k), distances (N, k)),
     ascending by distance, streaming over blocks of b.  Ties are broken by
     the LOWER column index (stable merge).  `m_valid` declares how many
     leading rows of b are real when b is padded to a bucketed shape
     (repro.index); it is traced, so varying it does not recompile.
+
+    `pad_k=True` keeps the requested k even when it exceeds the valid row
+    count: the surplus tail columns come back as (+inf, -1) padding.  This
+    is the small-tier serving mode — k is a STATIC jit argument, so a
+    caller whose collection drifts through sizes below k (the index
+    engine's delta tier) must NOT let k track the size, or every mutation
+    recompiles; with pad_k the compile key stays fixed and the caller
+    strips the pads in its own merge.  Forces the jnp tile loop (the
+    fused kernel assumes k <= m, and a collection this small never wants
+    a kernel launch anyway).
 
     mode "pallas" routes through the fused repro.kernels.topk_select kernel
     (distance tile + running k-best merge in one VMEM pass — losing columns
@@ -555,7 +589,12 @@ def topk_rows(a, b, k: int, *, d: int, metric: str = "cham",
     if not 0 <= m <= b.shape[0]:
         raise ValueError(f"m_valid={m} outside the {b.shape[0]} supplied "
                          "rows")
-    k = min(k, m)
+    if pad_k:
+        if k < 0:
+            raise ValueError(f"k must be >= 0, got {k}")
+        mode = "popcount" if _auto_mode(mode) == "pallas" else mode
+    else:
+        k = min(k, m)
     if k == 0:
         return (np.zeros((a.shape[0], 0), np.int32),
                 np.zeros((a.shape[0], 0), np.float32))
@@ -579,7 +618,8 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
                      band_rows: int, n_valid: int, metric: str = "cham",
                      block: int = 2048, mode: str | None = None,
                      order_by: np.ndarray | None = None,
-                     q_valid: int | None = None):
+                     q_valid: int | None = None,
+                     alive: np.ndarray | None = None):
     """Progressive band-expansion top-k over weight-banded rows.
 
     `b` holds `n_valid` rows sorted by ascending prune score and cut into
@@ -605,12 +645,22 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
     lower-column tie-break IS the key tie-break, and the host-side merge
     across chunks is an exact (value, key)-lexicographic k-best.
 
+    `alive` optionally masks rows out (bool over the n_valid sorted rows —
+    the tiered layout's tombstones): dead rows are dropped on host before
+    each chunk gather, so they cost no device work and can never be
+    returned.  The band score intervals are computed over the UNMASKED
+    rows, which makes them conservative supersets for the alive subset —
+    the certificate under-prunes but stays sound, and the result equals
+    `topk_rows` over just the alive rows in key order.
+
     Returns (positions (Q, k) int64 into b's rows, distances (Q, k) f32) —
     bit-identical to `topk_rows` over the same rows arranged in key order.
     """
     a = jnp.asarray(a)
     q = a.shape[0] if q_valid is None else q_valid
-    k = min(k, n_valid)
+    n_live = n_valid if alive is None else int(
+        np.count_nonzero(alive[:n_valid]))
+    k = min(k, n_live)
     if q == 0 or k == 0:
         return np.zeros((q, 0), np.int64), np.zeros((q, 0), np.float32)
     q_scores = np.asarray(q_scores, np.float64)
@@ -623,7 +673,7 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
     visit = np.argsort(band_gap, kind="stable")
 
     best_v = np.full((q, k), np.inf, np.float32)
-    best_key = np.full((q, k), np.iinfo(np.int64).max, np.int64)
+    best_key = np.full((q, k), KBEST_KEY_PAD, np.int64)
     best_pos = np.full((q, k), -1, np.int64)
 
     def band_range(bb: int) -> np.ndarray:
@@ -648,31 +698,30 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
                 cnt += len(band_range(visit[ptr]))
                 ptr += 1
         rows = np.concatenate([band_range(bb) for bb in take])
+        if alive is not None:
+            rows = rows[alive[rows]]  # tombstoned rows never reach a tile
         visited_rows += len(rows)
-        keys = rows if order_by is None else np.asarray(order_by)[rows]
-        rows = rows[np.argsort(keys, kind="stable")]  # columns in key order
-        sub = packing.padded_take(b, rows)
-        kk = min(k, len(rows))
-        pos_c, val_c = topk_rows(a, sub, kk, d=d, metric=metric, block=block,
-                                 mode=mode, m_valid=len(rows))
-        gpos = rows[pos_c[:q]]
-        gkey = gpos if order_by is None else np.asarray(order_by)[gpos]
-        if kk < k:  # pad the chunk's candidate list to k columns
-            padw = ((0, 0), (0, k - kk))
-            val_c = np.pad(val_c[:q], padw, constant_values=np.inf)
-            gpos = np.pad(gpos, padw, constant_values=-1)
-            gkey = np.pad(gkey, padw,
-                          constant_values=np.iinfo(np.int64).max)
-        else:
-            val_c = val_c[:q]
-        # exact (value, key)-lexicographic merge of the two k-best lists
-        cv = np.concatenate([best_v, val_c], axis=1)
-        ck = np.concatenate([best_key, gkey], axis=1)
-        cp = np.concatenate([best_pos, gpos], axis=1)
-        order = np.lexsort((ck, cv), axis=-1)[:, :k]
-        best_v = np.take_along_axis(cv, order, axis=1)
-        best_key = np.take_along_axis(ck, order, axis=1)
-        best_pos = np.take_along_axis(cp, order, axis=1)
+        if len(rows):
+            keys = rows if order_by is None else np.asarray(order_by)[rows]
+            rows = rows[np.argsort(keys, kind="stable")]  # cols in key order
+            sub = packing.padded_take(b, rows)
+            kk = min(k, len(rows))
+            pos_c, val_c = topk_rows(a, sub, kk, d=d, metric=metric,
+                                     block=block, mode=mode,
+                                     m_valid=len(rows))
+            gpos = rows[pos_c[:q]]
+            gkey = gpos if order_by is None else np.asarray(order_by)[gpos]
+            if kk < k:  # pad the chunk's candidate list to k columns
+                padw = ((0, 0), (0, k - kk))
+                val_c = np.pad(val_c[:q], padw, constant_values=np.inf)
+                gpos = np.pad(gpos, padw, constant_values=-1)
+                gkey = np.pad(gkey, padw, constant_values=KBEST_KEY_PAD)
+            else:
+                val_c = val_c[:q]
+            best_v, best_key, best_pos = kbest_lex_merge(
+                k, np.concatenate([best_v, val_c], axis=1),
+                np.concatenate([best_key, gkey], axis=1),
+                np.concatenate([best_pos, gpos], axis=1))
         if ptr >= n_bands:
             break
         kth = best_v[:, k - 1]

@@ -9,6 +9,8 @@ Public API:
     SketchStore        — pow2-capacity device buffers; add / remove(tomb-
                          stone) / compact without per-call recompiles
     BandedLayout       — weight-banded snapshot; radius-query band pruning
+    TieredLayout       — LSM-style base + delta tiers; O(delta) sync after
+                         mutations instead of per-version rebuilds
     QueryEngine        — add_dense / add_sparse / topk / radius / pairwise,
                          save / restore, shard
     ingest_documents   — data.pipeline document stream -> engine
@@ -17,7 +19,7 @@ Results are bit-identical to the batch engine on the same membership; see
 tests/test_index.py for the pinned contracts.
 """
 
-from repro.index.bands import BandedLayout  # noqa: F401
+from repro.index.bands import BandedLayout, TieredLayout  # noqa: F401
 from repro.index.engine import QueryEngine  # noqa: F401
 from repro.index.ingest import ingest_documents  # noqa: F401
 from repro.index.store import SketchStore  # noqa: F401

@@ -1,4 +1,4 @@
-"""Weight-banded layout: the query-pruning structure over a store.
+"""Weight-banded layouts: the query-pruning structures over a store.
 
 A Cabin sketch's Hamming weight bounds how close it can be to anything:
 dist(u, v) >= prune_factor(metric) * |s_u - s_v| for the per-row prune score
@@ -11,11 +11,24 @@ bands on host — before a single distance tile, device gather, or compile is
 touched — and a k-NN query expands outward through the bands nearest the
 query, stopping at the exactness certificate (DESIGN.md sections 8.2/8.4).
 
-The prune is sound (the bound holds with PRUNE_MARGIN slack for float
-noise), so the surviving candidate set — and therefore every result the
-QueryEngine returns — is identical whether bands were pruned or not.  That
-is what lets the layout be rebuilt lazily per store version without any
-bit-identity risk.
+Two layers live here (DESIGN.md section 8.5):
+
+  * `BandedLayout` — an immutable weight-sorted banded snapshot of a slot
+    set, plus a refreshable ALIVE mask so tombstones thread through without
+    invalidating the sort or the device matrix.
+  * `TieredLayout` — the LSM-style incremental layout the engine serves
+    from: a big sorted base tier that survives mutations, a small unsorted
+    delta tier holding fresh adds (scanned brute-force — the sketches are
+    tiny, so a few thousand delta rows cost less than one band gather), and
+    a size-ratio merge policy folding delta back into base.  `sync` absorbs
+    a mutation in O(delta) instead of the O(N log N) host sort + O(N)
+    device gather a fresh build pays.
+
+Every prune in both layers is sound (the weight bound holds with
+PRUNE_MARGIN slack for float noise), and the cross-tier merge is the same
+(value, id)-lexicographic k-best used inside `topk_rows_banded`, so results
+are bit-identical to a fresh batch build of the same membership — tiering
+is a pure serving optimisation with zero bit-identity risk.
 """
 
 from __future__ import annotations
@@ -24,18 +37,27 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import allpairs
-from repro.core.allpairs import PRUNE_MARGIN, prune_factor, prune_score_host
+from repro.core.allpairs import (KBEST_KEY_PAD, PRUNE_MARGIN,
+                                 kbest_lex_merge, prune_factor,
+                                 prune_score_host)
 from repro.core.packing import padded_take
 from repro.index.store import SketchStore
 
 
 class BandedLayout:
-    """Immutable weight-sorted banded snapshot of a store version.
+    """Immutable weight-sorted banded snapshot of a slot set.
 
     Rows are sorted by (sketch weight, id) — a total, history-independent
     order — then cut into bands of `band_rows` consecutive rows.  The device
     matrix holds the sorted rows padded to a power of two; `ids` maps sorted
-    positions back to external ids.
+    positions back to external ids and `slots` back to store slots.
+
+    The snapshot itself never mutates; later tombstones are threaded
+    through `refresh_alive`, which re-reads the store's host bitmap at the
+    snapshot's slots (O(n) host work, no device traffic).  Band score
+    intervals are computed over the snapshot's rows and therefore stay
+    conservative supersets for any alive subset — masked queries prune a
+    little less but never wrongly.
     """
 
     def __init__(self, store: SketchStore, metric: str,
@@ -45,14 +67,17 @@ class BandedLayout:
         self.band_rows = int(band_rows)
         self.version = store.version
         slots = store.alive_slots()
-        weights = store._weights[slots]
+        weights = store.weights_at(slots)
         # stable sort over id-ordered rows => total order (weight, id):
         # incremental and fresh builds of the same membership agree exactly.
         order = np.argsort(weights, kind="stable")
         self.n = len(slots)
-        self.ids = store._ids[slots][order]
+        self.slots = slots[order]
+        self.ids = store.ids_at(slots)[order]
         w_sorted = weights[order]
-        self.matrix = padded_take(store.sk_buf, slots[order])
+        self.matrix = padded_take(store.sk_buf, self.slots)
+        self.alive = np.ones(self.n, bool)
+        self._n_alive = self.n
         self.n_bands = -(-self.n // self.band_rows) if self.n else 0
         scores = prune_score_host(w_sorted, self.d, metric)
         self.band_lo = np.asarray(
@@ -60,6 +85,21 @@ class BandedLayout:
         self.band_hi = np.asarray(
             [scores[min((b + 1) * self.band_rows, self.n) - 1]
              for b in range(self.n_bands)])
+
+    @property
+    def n_alive(self) -> int:
+        return self._n_alive
+
+    def refresh_alive(self, store: SketchStore) -> None:
+        """Re-read the store's tombstone bitmap at this snapshot's slots —
+        how removes reach a layout without any rebuild or device work."""
+        if self.n:
+            self.alive = store.alive_at(self.slots)
+            self._n_alive = int(np.count_nonzero(self.alive))
+
+    def _mask(self) -> np.ndarray | None:
+        # None keeps the fully-alive hot path identical to the pre-mask one
+        return None if self._n_alive == self.n else self.alive
 
     def candidate_bands(self, query_weights: np.ndarray, radius: float
                         ) -> np.ndarray:
@@ -78,9 +118,10 @@ class BandedLayout:
     def topk(self, queries_padded: jnp.ndarray, query_weights: np.ndarray,
              k: int, *, q_valid: int, block: int = 2048,
              mode: str | None = None) -> tuple[np.ndarray, np.ndarray]:
-        """Progressive band-expansion k-NN: (ids (Q, k), dists (Q, k)),
-        ascending by (distance, id) — exactly what core.allpairs.topk_rows
-        returns over the id-ordered membership.
+        """Progressive band-expansion k-NN: (ids (Q, k'), dists (Q, k')),
+        k' = min(k, n_alive), ascending by (distance, id) — exactly what
+        core.allpairs.topk_rows returns over the alive membership in id
+        order.
 
         Bands are visited in ascending prune-score distance from the query
         batch, the running k-th best distance is tracked, and the scan stops
@@ -89,7 +130,7 @@ class BandedLayout:
         for the exactness argument.  `queries_padded` is the pow2-padded
         packed query batch (first `q_valid` rows real); `query_weights` its
         host sketch weights, used for band planning only."""
-        if self.n == 0 or k == 0 or q_valid == 0:
+        if self._n_alive == 0 or k <= 0 or q_valid == 0:
             return (np.zeros((q_valid, 0), np.int64),
                     np.zeros((q_valid, 0), np.float32))
         qs = prune_score_host(np.asarray(query_weights)[:q_valid], self.d,
@@ -98,14 +139,14 @@ class BandedLayout:
             queries_padded, self.matrix, k, d=self.d, metric=self.metric,
             q_scores=qs, band_lo=self.band_lo, band_hi=self.band_hi,
             band_rows=self.band_rows, n_valid=self.n, order_by=self.ids,
-            block=block, mode=mode, q_valid=q_valid)
+            block=block, mode=mode, q_valid=q_valid, alive=self._mask())
         return self.ids[pos], vals
 
     def select(self, band_mask: np.ndarray
                ) -> tuple[jnp.ndarray, int, np.ndarray]:
-        """Gather the surviving bands' rows: (matrix (pow2, w), n_selected,
-        ids (n_selected,)).  Bands are contiguous runs of the sorted matrix,
-        so selection is a single padded device take."""
+        """Gather the surviving bands' alive rows: (matrix (pow2, w),
+        n_selected, ids (n_selected,)).  Bands are contiguous runs of the
+        sorted matrix, so selection is a single padded device take."""
         kept = np.flatnonzero(band_mask)
         if len(kept) == 0:
             return self.matrix[:0], 0, self.ids[:0]
@@ -113,4 +154,211 @@ class BandedLayout:
             np.arange(b * self.band_rows,
                       min((b + 1) * self.band_rows, self.n))
             for b in kept])
+        mask = self._mask()
+        if mask is not None:
+            rows = rows[mask[rows]]
+        if len(rows) == 0:
+            return self.matrix[:0], 0, self.ids[:0]
         return padded_take(self.matrix, rows), len(rows), self.ids[rows]
+
+
+class TieredLayout:
+    """LSM-style incremental layout: sorted base tier + unsorted delta tier.
+
+    The engine's serving structure (DESIGN.md section 8.5).  The base tier
+    is a `BandedLayout` over the membership at the last merge; fresh adds
+    accumulate as a DELTA of store slots served brute-force by the plain
+    batch reductions; removes flip per-tier alive masks.  `sync` advances
+    the layout across any version range of the same slot epoch in O(delta)
+    — compaction (an epoch bump) or the size-ratio merge policy fold the
+    tiers back into one sorted base.
+
+    Exactness: the base tier returns the exact (value, id)-lex k-best over
+    its alive rows (the banded certificate), the delta tier's rows are laid
+    out in ascending id order so `topk_rows`' lower-column tie-break IS the
+    id tie-break, and the two k-best lists merge by (value, id) — the same
+    lexicographic merge `topk_rows_banded` uses across chunks.  Tier
+    membership partitions the alive set, so the merged answer is
+    bit-identical to a fresh batch build (tests/test_index.py pins this
+    across tier boundaries, merges, and cache hits).
+    """
+
+    def __init__(self, store: SketchStore, metric: str,
+                 band_rows: int = 1024, merge_ratio: float | None = 0.125):
+        self.metric = metric
+        self.d = store.d
+        self.band_rows = int(band_rows)
+        self.merge_ratio = merge_ratio
+        self.n_merges = -1  # the initial build below is not a merge
+        self._rebuild(store)
+
+    # -- construction / synchronisation ------------------------------------
+
+    def _rebuild(self, store: SketchStore) -> None:
+        """Fold everything into one freshly sorted base tier (the O(N log N)
+        path `sync` exists to avoid paying per mutation)."""
+        self.base = BandedLayout(store, self.metric,
+                                 band_rows=self.band_rows)
+        self._store = store
+        self.delta_slots = np.zeros(0, np.int64)
+        self.delta_n = 0
+        self.delta_ids = np.zeros(0, np.int64)
+        self._delta_cache: jnp.ndarray | None = None
+        st = store.stamp()
+        self.version, self.epoch, self.seen_size = (
+            st.version, st.epoch, st.size)
+        self.seen_removed = store.removed_count
+        self.n_merges += 1
+
+    def _refresh_delta(self, store: SketchStore,
+                       mask: np.ndarray | None = None) -> None:
+        """Drop tombstoned delta slots (they never resurrect; `mask` is
+        the alive bitmap the sync already read, when it read one) and
+        invalidate the gathered view only if the slot set changed —
+        O(delta) host filter, NO device work: the gather is deferred to
+        the next query, so a burst of mutations between two queries pays
+        for one gather, not one per mutation."""
+        changed = False
+        if mask is not None and not mask.all():
+            self.delta_slots = self.delta_slots[mask]
+            changed = True
+        new_n = len(self.delta_slots)
+        if changed or new_n != self.delta_n:  # shrank, or grew via adds
+            self._delta_cache = None
+        self.delta_n = new_n
+        self.delta_ids = store.ids_at(self.delta_slots)
+
+    @property
+    def delta_matrix(self) -> jnp.ndarray | None:
+        """The delta tier's pow2-padded device matrix, gathered lazily at
+        first use after a sync.  jnp.take copies, so the view survives
+        later donated appends to the store buffer (unlike gather_alive's
+        append-only fast path)."""
+        if self._delta_cache is None and self.delta_n:
+            self._delta_cache = padded_take(self._store.sk_buf,
+                                            self.delta_slots)
+        return self._delta_cache
+
+    def sync(self, store: SketchStore) -> "TieredLayout":
+        """Advance to the store's current (version, epoch) — THE entry the
+        engine calls before serving.  Version unchanged: free.  Adds within
+        the epoch: extend the delta tier (O(delta)).  Removes: refresh the
+        per-tier alive masks (O(n) host bitmap reads).  Epoch change
+        (compaction) or the merge policy tripping: full rebuild."""
+        st = store.stamp()
+        self._store = store
+        if (st.version, st.epoch) == (self.version, self.epoch):
+            return self
+        if st.epoch != self.epoch or self.merge_ratio == 0:
+            # epoch bump (compaction renumbered slots), or merge_ratio=0:
+            # the pre-tiered rebuild-per-version baseline, which rebuilt
+            # on EVERY mutation — removes included
+            self._rebuild(store)
+            return self
+        added = st.size > self.seen_size
+        if added:
+            self.delta_slots = np.concatenate(
+                [self.delta_slots, store.tail_slots(self.seen_size)])
+            self.seen_size = st.size
+        removed = store.removed_count != self.seen_removed
+        delta_mask = None
+        if removed:
+            # only a version range that actually contains removes pays the
+            # O(n) host bitmap re-read — append-heavy traffic skips it
+            self.base.refresh_alive(store)
+            self.seen_removed = store.removed_count
+            delta_mask = store.alive_at(self.delta_slots)
+            live_delta = int(np.count_nonzero(delta_mask))
+        else:
+            live_delta = len(self.delta_slots)  # filtered at the last sync
+        dead_base = self.base.n - self.base.n_alive
+        # merge policy: fold when the delta outgrows its share of the base
+        # (brute-force delta scans stop being cheap), or when tombstones
+        # outnumber alive base rows (the sorted matrix is mostly dead
+        # weight).  None never auto-folds (the caller manages folding via
+        # compact()).
+        if (self.merge_ratio is not None
+                and (live_delta > self.merge_ratio * max(self.base.n_alive, 1)
+                     or dead_base > max(self.base.n_alive, 1))):
+            self._rebuild(store)
+            return self
+        if added or removed:
+            self._refresh_delta(store, delta_mask)
+        self.version = st.version
+        return self
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def n_alive(self) -> int:
+        return self.base.n_alive + self.delta_n
+
+    # -- serving ------------------------------------------------------------
+
+    def topk(self, queries_padded: jnp.ndarray, query_weights: np.ndarray,
+             k: int, *, q_valid: int, block: int = 2048,
+             mode: str | None = None) -> tuple[np.ndarray, np.ndarray]:
+        """Cross-tier k-NN: (ids (Q, k'), dists (Q, k')), k' = min(k,
+        n_alive), ascending by (distance, id) — bit-identical to
+        core.allpairs.topk_rows over the full alive membership in id
+        order."""
+        kk = min(k, self.n_alive)
+        if kk <= 0 or q_valid == 0:
+            return (np.zeros((q_valid, 0), np.int64),
+                    np.zeros((q_valid, 0), np.float32))
+        parts: list[tuple[np.ndarray, np.ndarray]] = []
+        if self.base.n_alive:
+            parts.append(self.base.topk(
+                queries_padded, query_weights, kk, q_valid=q_valid,
+                block=block, mode=mode))
+        if self.delta_n:
+            # pad_k keeps k == kk even while the delta holds fewer rows:
+            # k is a static jit arg, so letting it track the delta size
+            # would recompile on every add (tail pads merge away below)
+            pos, vals = allpairs.topk_rows(
+                queries_padded, self.delta_matrix, kk, d=self.d,
+                metric=self.metric, block=block, mode=mode,
+                m_valid=self.delta_n, pad_k=True)
+            pos, vals = pos[:q_valid], vals[:q_valid]
+            ids = np.full(pos.shape, KBEST_KEY_PAD, np.int64)
+            real = pos >= 0
+            ids[real] = self.delta_ids[pos[real]]
+            parts.append((ids, vals))
+        if len(parts) == 1:
+            return parts[0]  # a lone tier is already the exact k'-best
+
+        def pad_cols(ids: np.ndarray, vals: np.ndarray):
+            have = ids.shape[1]
+            if have == kk:
+                return ids, vals
+            padw = ((0, 0), (0, kk - have))
+            return (np.pad(ids, padw, constant_values=KBEST_KEY_PAD),
+                    np.pad(vals, padw, constant_values=np.inf))
+
+        padded = [pad_cols(i, v) for i, v in parts]
+        # exact (value, id)-lexicographic merge of the per-tier k-best
+        # lists — allpairs.kbest_lex_merge, THE same rule as
+        # topk_rows_banded's chunk merge.  Tier memberships are disjoint,
+        # so kk real candidates always exist and no pad survives the cut.
+        vals, ids = kbest_lex_merge(
+            kk, np.concatenate([v for _, v in padded], axis=1),
+            np.concatenate([i for i, _ in padded], axis=1))
+        return ids, vals
+
+    def radius_tiers(self, query_weights: np.ndarray, radius: float
+                     ) -> list[tuple[jnp.ndarray, int, np.ndarray]]:
+        """Per-tier (matrix, n_selected, ids) selections for a radius
+        query: the base tier after the band prune, the delta tier whole
+        (it is small by the merge policy — brute-force is the prune).
+        Tier memberships partition the alive set, so the per-tier
+        `threshold_pairs` hits union to exactly the batch engine's answer
+        on the full membership."""
+        out = []
+        if self.base.n_alive:
+            mask = self.base.candidate_bands(query_weights, radius)
+            sel, n_sel, sel_ids = self.base.select(mask)
+            if n_sel:
+                out.append((sel, n_sel, sel_ids))
+        if self.delta_n:
+            out.append((self.delta_matrix, self.delta_n, self.delta_ids))
+        return out

@@ -15,13 +15,20 @@ Serving disciplines (DESIGN.md section 8.3):
     request mixes.  Padding rows are all-zero categorical vectors, whose
     sketches are all-zero and which every reduction masks out — they can
     never contaminate a result.
-  * Bit-identity.  `topk` serves through BandedLayout's progressive band
+  * Tiered serving.  Queries serve through a TieredLayout (DESIGN.md 8.5):
+    a big weight-sorted base tier that SURVIVES mutations, a small delta
+    tier of fresh adds scanned brute-force, and per-tier alive masks for
+    removes.  `_layout()` syncs the layout across the version RANGE since
+    it was built — a mutation costs the next query O(delta), not the
+    O(N log N) rebuild the old version-equality invalidation paid.
+  * Bit-identity.  `topk` serves through the base tier's progressive band
     expansion (allpairs.topk_rows_banded — nearest bands first, stop at the
-    exactness certificate) and `radius` through threshold_pairs over the
-    band-pruned rows; both are bit-identical to running the batch engine on
-    a freshly built matrix of the same vectors — across any interleaving of
-    add/remove/compact, after checkpoint restore, and under both metrics.
-    Ties in topk resolve to the lower id, matching topk_rows' stable merge.
+    exactness certificate) merged with the delta tier by (value, id), and
+    `radius` through threshold_pairs per tier; both are bit-identical to
+    running the batch engine on a freshly built matrix of the same vectors
+    — across any interleaving of add/remove/compact, after checkpoint
+    restore, and under both metrics.  Ties in topk resolve to the lower
+    id, matching topk_rows' stable merge.
   * LRU result cache.  Results are memoised on (op, args, store version,
     query-sketch bytes); any mutation bumps the version, so stale hits are
     impossible by construction.
@@ -42,7 +49,7 @@ from repro.core import allpairs, packing
 from repro.core.cabin import (CabinParams, sketch_dense_jit,
                               sketch_sparse_jit)
 from repro.core.packing import pad_rows_pow2, pow2_bucket
-from repro.index.bands import BandedLayout
+from repro.index.bands import BandedLayout, TieredLayout
 from repro.index.store import SketchStore
 
 _METRICS = ("cham", "hamming")
@@ -60,11 +67,19 @@ class QueryEngine:
     block / mode : tile size and backend forwarded to core.allpairs.
     band_rows : rows per weight band (radius-query pruning granularity).
     cache_entries : LRU result-cache capacity (0 disables caching).
+    merge_ratio : tiered-layout merge policy (DESIGN.md 8.5).  Fresh adds
+        accumulate in a small unsorted delta tier and fold into the sorted
+        base tier once the live delta exceeds `merge_ratio * base_alive`
+        rows; until then a mutation costs the next query O(delta) instead
+        of a full O(N log N) layout rebuild.  0 merges on every mutation
+        (the pre-tiered rebuild-per-version behaviour — the bench baseline);
+        None never auto-merges (fold only on `compact()`).
     """
 
     def __init__(self, params: CabinParams, *, metric: str = "cham",
                  block: int = 2048, mode: str | None = None,
-                 band_rows: int = 1024, cache_entries: int = 256):
+                 band_rows: int = 1024, cache_entries: int = 256,
+                 merge_ratio: float | None = 0.125):
         if metric not in _METRICS:
             raise ValueError(f"metric must be one of {_METRICS}")
         self.params = params
@@ -72,8 +87,9 @@ class QueryEngine:
         self.block = block
         self.mode = mode
         self.band_rows = band_rows
+        self.merge_ratio = merge_ratio
         self.store = SketchStore(params.sketch_dim)
-        self._banded: BandedLayout | None = None
+        self._tiered: TieredLayout | None = None
         self._cache: OrderedDict[tuple, tuple] = OrderedDict()
         self._cache_entries = cache_entries
         self.cache_hits = 0
@@ -92,6 +108,7 @@ class QueryEngine:
         return self.store.ids()
 
     def stats(self) -> dict:
+        t = self._tiered
         return {
             "n_alive": len(self.store),
             "size": self.store.size,
@@ -99,7 +116,11 @@ class QueryEngine:
             "version": self.store.version,
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
-            "n_bands": self._banded.n_bands if self._banded else None,
+            "n_bands": t.base.n_bands if t else None,
+            "base_rows": t.base.n if t else None,
+            "base_alive": t.base.n_alive if t else None,
+            "delta_rows": t.delta_n if t else None,
+            "tier_merges": t.n_merges if t else None,
         }
 
     # -- sketching (shape-bucketed) ----------------------------------------
@@ -198,19 +219,26 @@ class QueryEngine:
     def topk(self, queries, k: int) -> tuple[np.ndarray, np.ndarray]:
         """k nearest stored rows per query: (ids (Q, k'), dists (Q, k')),
         ascending by distance, k' = min(k, len(store)).  Accepts dense rows
-        or an (indices, values) COO pair; `topk_packed` skips sketching."""
+        or an (indices, values) COO pair; `topk_packed` skips sketching.
+        Raises ValueError for k < 0 (k = 0 is a valid empty query)."""
+        if k < 0:
+            raise ValueError(f"topk: k must be >= 0, got {k}")
         sk, q = self._sketch(queries)
         return self.topk_packed(sk, k, n_valid=q)
 
     def topk_packed(self, sk, k: int, n_valid: int | None = None
                     ) -> tuple[np.ndarray, np.ndarray]:
-        """Served via progressive band expansion (BandedLayout.topk): bands
-        are visited nearest-first and the scan stops at the exactness
-        certificate, so a query touches O(answer neighbourhood) rows, not
-        O(N) — while returning bit-identical results to topk_rows over the
-        alive membership.  The LRU is consulted on the query-sketch bytes
-        BEFORE the layout or any device gather is touched: a cache hit costs
-        O(1) host work regardless of store size."""
+        """Served through the tiered layout (TieredLayout.topk): the base
+        tier's progressive band expansion visits bands nearest-first and
+        stops at the exactness certificate, the delta tier of fresh adds is
+        scanned brute-force, and the two merge by (value, id) — so a query
+        touches O(answer neighbourhood + delta) rows, not O(N), while
+        returning bit-identical results to topk_rows over the alive
+        membership.  The LRU is consulted on the query-sketch bytes BEFORE
+        the layout or any device gather is touched: a cache hit costs O(1)
+        host work regardless of store size."""
+        if k < 0:
+            raise ValueError(f"topk: k must be >= 0, got {k}")
         sk = jnp.asarray(sk)
         q = sk.shape[0] if n_valid is None else n_valid
         if not 0 <= q <= sk.shape[0]:
@@ -226,9 +254,9 @@ class QueryEngine:
             hit = self._cached(key)
             if hit is not None:
                 return hit[0].copy(), hit[1].copy()
-        banded = self._banded_layout()
+        layout = self._layout()
         q_weights = packing.np_popcount_rows(q_host)
-        out = banded.topk(pad_rows_pow2(sk), q_weights, kk, q_valid=q,
+        out = layout.topk(pad_rows_pow2(sk), q_weights, kk, q_valid=q,
                           block=self.block, mode=self.mode)
         self._remember(key, out)
         return out
@@ -236,14 +264,20 @@ class QueryEngine:
     def radius(self, queries, r: float) -> list[np.ndarray]:
         """All stored rows within distance < r of each query: a list of Q
         id arrays (ascending).  Weight bands whose score interval is out of
-        reach are pruned on host before any tile is computed.  Accepts
-        dense rows or an (indices, values) COO pair; `radius_packed` skips
-        sketching."""
+        reach are pruned on host before any tile is computed; the delta
+        tier of fresh adds is scanned brute-force.  Accepts dense rows or
+        an (indices, values) COO pair; `radius_packed` skips sketching.
+
+        Distances are nonnegative and the test is strict (`dist < r`), so
+        r <= 0 returns an empty id array for every query — an explicit
+        contract, not an error (negative radii short-circuit before any
+        layout or device work)."""
         sk, q = self._sketch(queries)
         return self.radius_packed(sk, r, n_valid=q)
 
     def radius_packed(self, sk, r: float, n_valid: int | None = None
                       ) -> list[np.ndarray]:
+        """Pre-sketched twin of `radius` (same r <= 0 -> empty contract)."""
         sk = jnp.asarray(sk)
         q = sk.shape[0] if n_valid is None else n_valid
         if not 0 <= q <= sk.shape[0]:
@@ -251,6 +285,8 @@ class QueryEngine:
                 f"n_valid={q} outside the {sk.shape[0]} supplied rows")
         if q == 0:
             return []
+        if r <= 0:  # dist >= 0 and the test is strict: provably no hits
+            return [np.zeros(0, np.int64) for _ in range(q)]
         q_host = np.asarray(sk[:q])  # needed for band planning regardless
         key = None
         if self._cache_entries:
@@ -258,23 +294,26 @@ class QueryEngine:
             hit = self._cached(key)
             if hit is not None:
                 return [a.copy() for a in hit]
-        out = [np.zeros(0, np.int64) for _ in range(q)]
-        n_sel = 0
+        hits: list[list[np.ndarray]] = [[] for _ in range(q)]
         if len(self.store):
-            banded = self._banded_layout()
+            layout = self._layout()
             q_weights = packing.np_popcount_rows(q_host)
-            mask = banded.candidate_bands(q_weights, r)
-            sel, n_sel, sel_ids = banded.select(mask)
-        if n_sel:
-            pairs = allpairs.threshold_pairs(
-                pad_rows_pow2(sk), sel, d=self.d, threshold=r,
-                metric=self.metric, block=min(self.block, 256),
-                mode=self.mode, n_valid=q, m_valid=n_sel)
-            # one sort/group pass instead of a pairs-array scan per query
-            by_q = pairs[np.argsort(pairs[:, 0], kind="stable")]
-            splits = np.searchsorted(by_q[:, 0], np.arange(q + 1))
-            out = [np.sort(sel_ids[by_q[splits[qi]: splits[qi + 1], 1]])
-                   for qi in range(q)]
+            # tier memberships partition the alive set: per-tier hits union
+            # to exactly the batch engine's answer on the full membership
+            for sel, n_sel, sel_ids in layout.radius_tiers(q_weights, r):
+                pairs = allpairs.threshold_pairs(
+                    pad_rows_pow2(sk), sel, d=self.d, threshold=r,
+                    metric=self.metric, block=min(self.block, 256),
+                    mode=self.mode, n_valid=q, m_valid=n_sel)
+                # one sort/group pass instead of a pairs scan per query
+                by_q = pairs[np.argsort(pairs[:, 0], kind="stable")]
+                splits = np.searchsorted(by_q[:, 0], np.arange(q + 1))
+                for qi in range(q):
+                    seg = sel_ids[by_q[splits[qi]: splits[qi + 1], 1]]
+                    if seg.size:
+                        hits[qi].append(seg)
+        out = [np.sort(np.concatenate(h)) if h else np.zeros(0, np.int64)
+               for h in hits]
         self._remember(key, out)
         return out
 
@@ -290,7 +329,14 @@ class QueryEngine:
         from repro.kernels.hamming import ops as hamming_ops
 
         sk, q = self._sketch(queries)
-        mat, m, all_ids = self.store.gather_alive()
+        view = self.store.gather_alive()
+        # cheap stale-view guard BEFORE anything dereferences the matrix
+        # (the id-subset padded_take below, then the kernel call): a view
+        # predating a mutation (re-entrant callback, another thread) fails
+        # here with a clear message instead of jax's opaque "Array has
+        # been deleted" after a donated append
+        self.store.check_fresh(view)
+        mat, m, all_ids = view
         # keep everything pow2-bucketed (sk and mat already are; id subsets
         # go through padded_take) so the kernel's compile cache stays
         # O(log N) across mutations — same discipline as topk/radius
@@ -299,6 +345,10 @@ class QueryEngine:
             sel, n_sel = mat, m
         else:
             sel_ids = np.atleast_1d(np.asarray(ids, np.int64))
+            if len(np.unique(sel_ids)) != len(sel_ids):
+                # consistent with SketchStore.remove: duplicate ids are a
+                # caller bug, not a request for duplicated columns
+                raise ValueError("pairwise: duplicate ids in batch")
             pos = np.searchsorted(all_ids, sel_ids)
             if m == 0 or (pos >= m).any() or (all_ids[np.minimum(pos, m - 1)]
                                               != sel_ids).any():
@@ -309,11 +359,26 @@ class QueryEngine:
             sk, sel, self.d, metric=self.metric))[:q, :n_sel]
         return sel_ids, dists
 
+    def sync_layout(self) -> TieredLayout:
+        """Sync the serving layout to the store's current version and
+        return it — the maintenance the next query would otherwise pay
+        inline.  Validity is a version RANGE, not version equality: within
+        a slot epoch the sync absorbs adds into the delta tier and removes
+        into the alive masks in O(delta); only compaction (epoch bump) or
+        the merge policy pays a rebuild.  Calling this after an ingest
+        burst keeps tail latency flat; queries call it implicitly."""
+        if self._tiered is None:
+            self._tiered = TieredLayout(self.store, self.metric,
+                                        band_rows=self.band_rows,
+                                        merge_ratio=self.merge_ratio)
+        return self._tiered.sync(self.store)
+
+    _layout = sync_layout  # internal alias used by the query paths
+
     def _banded_layout(self) -> BandedLayout:
-        if self._banded is None or self._banded.version != self.store.version:
-            self._banded = BandedLayout(self.store, self.metric,
-                                        band_rows=self.band_rows)
-        return self._banded
+        """The synced layout's BASE tier (introspection + tests; serving
+        goes through `_layout`, which also covers the delta tier)."""
+        return self._layout().base
 
     # -- persistence --------------------------------------------------------
 

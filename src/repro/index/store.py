@@ -28,6 +28,7 @@ and id translation all happen on host without touching the device buffers.
 
 from __future__ import annotations
 
+from typing import NamedTuple
 
 import numpy as np
 import jax
@@ -35,6 +36,50 @@ import jax.numpy as jnp
 
 from repro.core import packing
 from repro.core.packing import pow2_bucket  # the shared bucketing rule
+
+
+class VersionStamp(NamedTuple):
+    """A store snapshot identity for layout synchronisation.
+
+    `version` counts every mutation; `epoch` counts only the mutations that
+    invalidate SLOT identity (compaction — slots shuffle); `size` is the
+    append watermark.  Within one epoch, the rows added between two stamps
+    are exactly the slots [old.size, new.size) (`tail_slots`), which is what
+    lets the tiered layout absorb adds as an O(delta) delta tier instead of
+    rebuilding on every version bump.
+    """
+
+    version: int
+    epoch: int
+    size: int
+
+
+class AliveView(tuple):
+    """The (matrix, n_alive, ids) triple from `gather_alive`, stamped with
+    the store version it was taken at.
+
+    Unpacks like the plain 3-tuple it always was; the extra `.version`
+    attribute lets consumers (`SketchStore.check_fresh`) reject a view held
+    across a mutation with a clear error instead of the accelerator
+    backends' late "Array has been deleted" (the append fast path returns
+    the live buffer, which the next `add` donates)."""
+
+    def __new__(cls, matrix, n_alive, ids, version: int):
+        self = tuple.__new__(cls, (matrix, n_alive, ids))
+        self.version = version
+        return self
+
+    @property
+    def matrix(self):
+        return self[0]
+
+    @property
+    def n_alive(self) -> int:
+        return self[1]
+
+    @property
+    def ids(self) -> np.ndarray:
+        return self[2]
 
 
 def _append_rows_fn(sk_buf, wt_buf, rows, start):
@@ -75,6 +120,8 @@ class SketchStore:
         self._n_alive = 0
         self._next_id = 0
         self.version = 0  # bumped on every mutation; caches key on it
+        self._epoch = 0  # bumped only when slot identity changes (compact)
+        self._n_removed_total = 0  # monotone; lets layouts skip mask work
         self._placement = None  # opt-in sharding callback (see `place`)
         self._gather_cache: tuple | None = None
 
@@ -91,6 +138,49 @@ class SketchStore:
     def size(self) -> int:
         """Slots in use, including tombstones (compact() to reclaim)."""
         return self._size
+
+    @property
+    def epoch(self) -> int:
+        """Slot-identity generation: stable across add/remove (slots only
+        append or tombstone), bumped by `compact` (slots shuffle).  Layouts
+        that cache slot positions are valid exactly while it holds."""
+        return self._epoch
+
+    def stamp(self) -> VersionStamp:
+        """(version, epoch, size) — the identity a layout snapshot records
+        so a later `tail_slots`/alive-mask sync can replay just the delta."""
+        return VersionStamp(self.version, self._epoch, self._size)
+
+    @property
+    def removed_count(self) -> int:
+        """Monotone count of rows ever tombstoned.  A layout that recorded
+        it at its last sync can tell "this version range contains no
+        removes" without touching the bitmap — the common mutation mix
+        (append-heavy) then pays zero alive-mask work per sync."""
+        return self._n_removed_total
+
+    def tail_slots(self, since_size: int) -> np.ndarray:
+        """Slots appended since a stamp taken at `since_size` — the
+        per-version row range a delta tier is built from.  Only valid
+        within the stamp's epoch (compaction renumbers slots; compare
+        `epoch` first)."""
+        if not 0 <= since_size <= self._size:
+            raise ValueError(
+                f"since_size={since_size} outside the store's slot range "
+                f"[0, {self._size}] (stale stamp from another epoch?)")
+        return np.arange(since_size, self._size, dtype=np.int64)
+
+    def alive_at(self, slots: np.ndarray) -> np.ndarray:
+        """Alive bitmap at the given slots (host, no device sync)."""
+        return self._alive[slots]
+
+    def ids_at(self, slots: np.ndarray) -> np.ndarray:
+        """External ids at the given slots (host, no device sync)."""
+        return self._ids[slots]
+
+    def weights_at(self, slots: np.ndarray) -> np.ndarray:
+        """Host sketch Hamming weights at the given slots."""
+        return self._weights[slots]
 
     @property
     def sk_buf(self) -> jnp.ndarray:
@@ -191,6 +281,7 @@ class SketchStore:
                 raise KeyError(f"id {id_} not in store")
         self._alive[slots] = False
         self._n_alive -= len(ids)
+        self._n_removed_total += len(ids)
         self._bump()
         return len(ids)
 
@@ -211,11 +302,12 @@ class SketchStore:
         self._ids, self._weights, self._alive = ids, weights, alive
         self._size = n
         self._n_alive = n
+        self._epoch += 1  # slots renumbered: layouts must rebuild, not sync
         self._bump()
 
     # -- query-side views ---------------------------------------------------
 
-    def gather_alive(self) -> tuple[jnp.ndarray, int, np.ndarray]:
+    def gather_alive(self) -> AliveView:
         """(matrix, n_alive, ids): alive rows gathered in id order into a
         power-of-two padded device matrix.  Rows past n_alive are padding —
         callers mask them via the engines' traced valid counts.
@@ -224,7 +316,9 @@ class SketchStore:
         fast path returns the live buffer itself, which the next `add`
         DONATES on accelerator backends (the stale matrix then raises
         "Array has been deleted").  Finish (or copy) before mutating —
-        every in-repo consumer uses it within a single query call."""
+        every in-repo consumer uses it within a single query call.  The
+        returned view is stamped with the store version; pass it to
+        `check_fresh` before use if a mutation could have intervened."""
         if self._gather_cache is not None:
             return self._gather_cache
         if self._n_alive == self._size:
@@ -232,13 +326,27 @@ class SketchStore:
             # the id-ordered pow2-padded matrix — no O(N) device gather.
             # Rows past size hold stale append padding, but every consumer
             # masks by the traced valid count, same as the gathered path.
-            self._gather_cache = (self._sk_buf, self._size,
-                                  self._ids[: self._size])
+            self._gather_cache = AliveView(
+                self._sk_buf, self._size, self._ids[: self._size],
+                self.version)
             return self._gather_cache
         slots = self.alive_slots()
         mat = packing.padded_take(self._sk_buf, slots)
-        self._gather_cache = (mat, len(slots), self._ids[slots])
+        self._gather_cache = AliveView(mat, len(slots), self._ids[slots],
+                                       self.version)
         return self._gather_cache
+
+    def check_fresh(self, view: AliveView) -> None:
+        """Raise if `view` predates the store's current version — the cheap
+        consumer-side guard against the stale-view footgun above.  Views
+        without a stamp (plain tuples) are rejected too."""
+        version = getattr(view, "version", None)
+        if version != self.version:
+            raise RuntimeError(
+                "stale gather: this view was taken at store version "
+                f"{version}, but the store is now at {self.version} — the "
+                "matrix may reference a donated buffer.  Re-call "
+                "gather_alive() after any add/remove/compact.")
 
     # -- placement (opt-in sharding) ---------------------------------------
 

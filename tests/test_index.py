@@ -18,7 +18,7 @@ from tests._hyp import given, settings, st
 from repro.core import (CabinParams, threshold_pairs, topk_rows)
 from repro.core.cabin import sketch_dense
 from repro.index import BandedLayout, QueryEngine, SketchStore, \
-    ingest_documents
+    TieredLayout, ingest_documents
 
 N_DIMS = 500
 D = 256
@@ -334,6 +334,7 @@ def test_topk_cache_hit_skips_gather_and_layout(monkeypatch):
 
     monkeypatch.setattr(eng.store, "gather_alive", _boom("gather_alive"))
     monkeypatch.setattr(eng, "_banded_layout", _boom("_banded_layout"))
+    monkeypatch.setattr(eng, "_layout", _boom("_layout"))
     b = eng.topk(QUERIES, 3)
     assert eng.cache_hits == 1
     np.testing.assert_array_equal(a[0], b[0])
@@ -396,6 +397,198 @@ def test_banded_layout_prunes_but_never_drops():
                         "cham")
     for a, b in zip(got5, want5):
         np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# tiered layout: O(delta) serving after mutations (DESIGN.md 8.5)
+# ---------------------------------------------------------------------------
+
+
+def _check_exact(eng, jmap=None):
+    """topk + radius of `eng` vs the batch engine on the alive membership.
+    `jmap` maps external id -> row of X/SK (default: identity)."""
+    alive = eng.ids()
+    rows = alive if jmap is None else np.asarray([jmap[i] for i in alive])
+    data_sk = SK[rows]
+    ref_i, ref_v = topk_rows(SK[:3], data_sk, 5, d=D, metric=eng.metric)
+    got_i, got_v = eng.topk(X[:3], 5)
+    np.testing.assert_array_equal(got_i, alive[ref_i])
+    np.testing.assert_array_equal(got_v, ref_v)
+    r = float(np.percentile(ref_v, 60) + 0.37) if ref_v.size else 1.0
+    got_r = eng.radius(X[:3], r)
+    want_r = _radius_ref(SK[:3], data_sk, alive, r, eng.metric)
+    for a, b in zip(got_r, want_r):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_tiered_layout_serves_delta_without_rebuild():
+    """The load-bearing tentpole property: after the base tier is built,
+    adds land in the delta tier and removes in the alive masks — the base
+    BandedLayout object SURVIVES the mutation (no O(N log N) rebuild), yet
+    every answer stays bit-identical to a fresh batch build."""
+    eng = QueryEngine(P, band_rows=16, merge_ratio=0.5, cache_entries=0)
+    jmap = {}
+
+    def add(rows):
+        for i, j in zip(eng.add_dense(X[rows]), rows):
+            jmap[int(i)] = int(j)
+
+    add(np.arange(64))
+    eng.topk(QUERIES, 5)  # first query builds the base tier
+    lay = eng._tiered
+    assert isinstance(lay, TieredLayout) and lay.n_merges == 0
+    base0 = lay.base
+    assert base0.n == 64 and lay.delta_n == 0
+
+    add(np.arange(64, 80))  # 16 live delta <= 0.5 * 64: no merge
+    _check_exact(eng, jmap)
+    assert eng._tiered.base is base0, "add must not rebuild the base tier"
+    assert eng._tiered.delta_n == 16 and eng._tiered.n_merges == 0
+
+    # removes thread through per-tier alive masks — still no rebuild
+    eng.remove([64, 3])  # one delta row, one base row
+    _check_exact(eng, jmap)
+    assert eng._tiered.base is base0
+    assert eng._tiered.delta_n == 15 and eng._tiered.base.n_alive == 63
+    assert eng.stats()["delta_rows"] == 15
+
+    # an unmutated re-query syncs for free: same layout, same base
+    _check_exact(eng, jmap)
+    assert eng._tiered.base is base0
+
+    # the size-ratio policy folds the tiers once delta outgrows its share
+    add(np.arange(40))
+    _check_exact(eng, jmap)
+    assert eng._tiered.base is not base0
+    assert eng._tiered.delta_n == 0 and eng._tiered.n_merges == 1
+
+    # compact() bumps the slot epoch: the next query rebuilds and serves on
+    eng.remove(eng.ids()[:5])
+    eng.compact()
+    _check_exact(eng, jmap)
+    assert eng._tiered.delta_n == 0
+
+
+def test_merge_ratio_zero_rebuilds_per_mutation():
+    """merge_ratio=0 is the pre-tiered behaviour (the bench baseline):
+    every mutation folds immediately, so the delta tier never persists."""
+    eng = QueryEngine(P, band_rows=16, merge_ratio=0.0, cache_entries=0)
+    eng.add_dense(X[:32])
+    eng.topk(QUERIES, 4)
+    base0 = eng._tiered.base
+    eng.add_dense(X[32:40])
+    _check_exact(eng)
+    assert eng._tiered.base is not base0 and eng._tiered.delta_n == 0
+    # remove-only mutations rebuild too — the old path had no alive masks
+    base1 = eng._tiered.base
+    eng.remove([5])
+    _check_exact(eng)
+    assert eng._tiered.base is not base1
+    assert eng._tiered.base.n_alive == eng._tiered.base.n == 39
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**16), st.integers(0, 2))
+def test_mutate_query_interleaving_bit_identity(seed, ratio_idx):
+    """Random add/remove/compact between EVERY query: topk and radius stay
+    bit-identical to the batch engine across tier boundaries, merges, and
+    cache hits, under both metrics and all three merge policies."""
+    ratio = (0.0, 0.5, None)[ratio_idx]
+    metric = ("cham", "hamming")[seed % 2]
+    rng = np.random.default_rng(seed)
+    eng = QueryEngine(P, metric=metric, band_rows=16, merge_ratio=ratio,
+                      cache_entries=8)
+    jmap: dict[int, int] = {}
+    pos = 0
+    saw_delta = False
+    for _ in range(5):
+        op = rng.random()
+        if op < 0.55 or len(eng) < 4:
+            c = int(rng.integers(1, 14))
+            rows = np.arange(pos, pos + c) % len(X)
+            pos += c
+            for i, j in zip(eng.add_dense(X[rows]), rows):
+                jmap[int(i)] = int(j)
+        elif op < 0.85:
+            alive = eng.ids()
+            kk = int(rng.integers(1, max(2, len(alive) // 2)))
+            eng.remove(rng.choice(alive, size=kk, replace=False))
+        else:
+            eng.compact()
+        _check_exact(eng, jmap)
+        _check_exact(eng, jmap)  # immediate re-ask: cache-hit path agrees
+        saw_delta = saw_delta or bool(eng._tiered and eng._tiered.delta_n)
+    if ratio is None and pos > 0:
+        # with auto-merge off, at least one query must have been served
+        # across a live tier boundary (first add builds base, later adds
+        # can only leave via compact)
+        assert saw_delta or eng._tiered is None or eng._tiered.n_merges > 0
+
+
+# ---------------------------------------------------------------------------
+# API-boundary regressions: k < 0, r <= 0, duplicate ids, stale gathers
+# ---------------------------------------------------------------------------
+
+
+def test_topk_negative_k_raises():
+    eng = QueryEngine(P)
+    eng.add_dense(X[:8])
+    with pytest.raises(ValueError, match="k must be >= 0"):
+        eng.topk(QUERIES, -1)
+    with pytest.raises(ValueError, match="k must be >= 0"):
+        eng.topk_packed(jnp.asarray(SK[:2]), -3)
+    ids, vals = eng.topk(QUERIES, 0)  # k = 0 stays a valid empty query
+    assert ids.shape == (5, 0) and vals.shape == (5, 0)
+
+
+def test_radius_nonpositive_r_returns_empty():
+    """dist >= 0 and the test is strict, so r <= 0 is a documented
+    empty-results contract (not an error) — including on an empty store."""
+    eng = QueryEngine(P)
+    assert all(len(a) == 0 for a in eng.radius(QUERIES, -3.0))
+    eng.add_dense(X[:16])
+    for r in (-3.0, 0.0):
+        out = eng.radius(QUERIES, r)
+        assert len(out) == 5 and all(len(a) == 0 for a in out)
+    out = eng.radius_packed(jnp.asarray(SK[:2]), -1.0)
+    assert len(out) == 2 and all(len(a) == 0 for a in out)
+
+
+def test_pairwise_duplicate_ids_raise():
+    """Consistent with SketchStore.remove: duplicate ids are a caller bug,
+    not a request for duplicated distance columns."""
+    eng = QueryEngine(P)
+    eng.add_dense(X[:8])
+    with pytest.raises(ValueError, match="duplicate ids"):
+        eng.pairwise(QUERIES, ids=np.asarray([3, 3]))
+    sub_ids, sub = eng.pairwise(QUERIES, ids=np.asarray([3, 5]))
+    np.testing.assert_array_equal(sub_ids, [3, 5])
+
+
+def test_gather_alive_stale_view_is_rejected(monkeypatch):
+    """A view held across a mutation must fail the cheap version check with
+    a clear message — not surface as jax's 'Array has been deleted' after
+    a donated append."""
+    store = SketchStore(D)
+    store.add(jnp.asarray(SK[:8]))
+    view = store.gather_alive()
+    store.check_fresh(view)  # fresh: fine
+    assert view.n_alive == 8 and view.version == store.version
+    store.add(jnp.asarray(SK[8:12]))
+    with pytest.raises(RuntimeError, match="stale gather"):
+        store.check_fresh(view)
+    # engine consumer: pairwise guards its gather before the device compute
+    eng = QueryEngine(P)
+    eng.add_dense(X[:8])
+    stale = eng.store.gather_alive()
+    eng.add_dense(X[8:16])
+    monkeypatch.setattr(eng.store, "gather_alive", lambda: stale)
+    with pytest.raises(RuntimeError, match="stale gather"):
+        eng.pairwise(QUERIES)
+    with pytest.raises(RuntimeError, match="stale gather"):
+        # the id-subset branch gathers from the view too: the guard must
+        # fire before that dereference, not just before the kernel call
+        eng.pairwise(QUERIES, ids=np.asarray([1, 2]))
 
 
 def test_dedup_by_sketch_metric_param():
