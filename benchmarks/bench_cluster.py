@@ -1,0 +1,146 @@
+"""Clustering benchmarks: what the device k-mode engine buys (DESIGN.md §9).
+
+Two questions, measured on the same synthetic sparse categorical rows the
+index benches use (vocab 32768, ~64 nnz/row):
+
+  * parity-pair throughput at N = n_small — the full-batch device engine
+    (`kmode_packed`) vs the legacy host-oracle path (`kmode_precomputed`
+    with a dense NumPy/BLAS dist_fn): same algorithm, same rng sequence.
+    The ratio is recorded, not asserted: at small N on CPU the oracle's
+    BLAS GEMMs are genuinely competitive with the streamed tiles — the
+    engine's case at this scale is memory shape (no dense (m, m) host
+    matrices), not wall clock.
+
+  * scale at N = n_large — the regime the subsystem exists for.  The host
+    oracle pays O(N^2/k) dense host matrices per medoid pass; the device
+    engine runs the documented mini-batch mode (`batch_rows` slices with
+    per-batch centre refresh, DESIGN.md 9.2), whose medoid work is
+    O(N * batch_rows / k) streamed on device.  Throughput is normalised to
+    labels/s = N * iterations / wall, with the oracle timed over
+    `oracle_iters` full iterations (one is ~a minute at 64k — that cost IS
+    the finding).  `labels_per_s` ratio asserted >= `speedup_bar`.
+
+--smoke passes speedup_bar=None: at wiring-check sizes both paths are
+dispatch-dominated and the ratio is not a perf claim.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import CabinParams
+from repro.core import packing
+from repro.core.kmode import kmode_packed, kmode_precomputed
+
+VOCAB = 32768
+D = 512
+NNZ = 64
+
+
+def _sketches(n: int, seed: int = 0) -> np.ndarray:
+    import jax.numpy as jnp
+
+    from repro.core.cabin import sketch_sparse
+
+    rng = np.random.default_rng(seed)
+    indices = rng.integers(1, VOCAB, size=(n, NNZ)).astype(np.int32)
+    values = rng.integers(1, 16, size=(n, NNZ)).astype(np.int32)
+    nnz = rng.integers(16, NNZ + 1, size=n)
+    values[np.arange(NNZ)[None, :] >= nnz[:, None]] = 0
+    params = CabinParams.create(VOCAB, D, seed=0)
+    return np.asarray(sketch_sparse(params, jnp.asarray(indices),
+                                    jnp.asarray(values)))
+
+
+def _host_cham_dist_fn(d: int, chunk: int = 1024):
+    """The legacy host oracle: dense Cham distance matrices computed with
+    NumPy/BLAS on unpacked bits — the strongest honest host baseline (a
+    popcount loop would only flatter the device engine)."""
+    log_d = np.log1p(-1.0 / d)
+
+    def unpack(x: np.ndarray) -> np.ndarray:
+        return np.unpackbits(
+            np.ascontiguousarray(x).view(np.uint8), axis=1).astype(np.float32)
+
+    def est(w: np.ndarray) -> np.ndarray:
+        return np.log(np.clip(1.0 - w / d, 1e-9, 1.0)) / log_d
+
+    def dist(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        wa = packing.np_popcount_rows(a).astype(np.float64)
+        wb = packing.np_popcount_rows(b).astype(np.float64)
+        bb = unpack(b)
+        b_hat = est(wb)[None, :]
+        out = np.empty((len(a), len(b)), np.float32)
+        for lo in range(0, len(a), chunk):
+            hi = min(lo + chunk, len(a))
+            inner = unpack(a[lo:hi]) @ bb.T
+            u_hat = est(wa[lo:hi, None] + wb[None, :] - inner)
+            out[lo:hi] = 2.0 * np.maximum(
+                2.0 * u_hat - est(wa[lo:hi])[:, None] - b_hat, 0.0)
+        return out
+
+    return dist
+
+
+def bench_cluster(n_small: int = 4096, n_large: int = 65536, k: int = 16,
+                  n_iter: int = 2, oracle_iters: int = 1,
+                  batch_rows: int = 4096,
+                  speedup_bar: float | None = 10.0) -> dict:
+    summary: dict = {"k": k, "n_small": n_small, "n_large": n_large}
+    sk = _sketches(n_large)
+    oracle = _host_cham_dist_fn(D)
+
+    # --- parity pair at n_small: full-batch device vs host oracle ---------
+    kmode_packed(sk[:n_small], k, d=D, n_iter=1, seed=0)  # warm the graphs
+    t0 = time.perf_counter()
+    res_small = kmode_packed(sk[:n_small], k, d=D, n_iter=n_iter, seed=0)
+    t_dev = time.perf_counter() - t0
+    assert len(np.unique(res_small.labels)) > 1  # a real clustering came out
+    t0 = time.perf_counter()
+    kmode_precomputed(oracle, sk[:n_small], k, n_iter=n_iter, seed=0)
+    t_host = time.perf_counter() - t0
+    dev_s = n_small * n_iter / t_dev
+    host_s = n_small * n_iter / t_host
+    summary[f"labels_per_s_device_n{n_small}"] = dev_s
+    summary[f"labels_per_s_host_n{n_small}"] = host_s
+    summary[f"full_batch_ratio_n{n_small}"] = dev_s / host_s
+    emit(f"cluster.device_full_n{n_small}", t_dev * 1e6 / n_small,
+         f"{dev_s:.0f} labels/s")
+    emit(f"cluster.host_oracle_n{n_small}", t_host * 1e6 / n_small,
+         f"{host_s:.0f} labels/s;ratio={dev_s / host_s:.2f}")
+
+    # --- scale at n_large: device mini-batch vs host full-batch -----------
+    # (mini-batch IS the serving configuration at this scale — DESIGN.md
+    # 9.2; its per-sweep medoid work is N*batch/k streamed pairs instead of
+    # the oracle's N^2/k dense host pairs)
+    kmode_packed(sk, k, d=D, n_iter=1, seed=0, batch_rows=batch_rows)  # warm
+    t0 = time.perf_counter()
+    res_large = kmode_packed(sk, k, d=D, n_iter=n_iter, seed=0,
+                             batch_rows=batch_rows)
+    t_dev_l = time.perf_counter() - t0
+    assert len(np.unique(res_large.labels)) > 1
+    t0 = time.perf_counter()
+    kmode_precomputed(oracle, sk, k, n_iter=oracle_iters, seed=0)
+    t_host_l = time.perf_counter() - t0
+    dev_ls = n_large * n_iter / t_dev_l
+    host_ls = n_large * oracle_iters / t_host_l
+    speedup = dev_ls / host_ls
+    summary[f"labels_per_s_device_n{n_large}"] = dev_ls
+    summary[f"labels_per_s_host_n{n_large}"] = host_ls
+    summary["batch_rows"] = batch_rows
+    summary["device_over_host"] = speedup
+    emit(f"cluster.device_minibatch_n{n_large}", t_dev_l * 1e6 / n_large,
+         f"{dev_ls:.0f} labels/s;batch={batch_rows}")
+    emit(f"cluster.host_oracle_n{n_large}", t_host_l * 1e6 / n_large,
+         f"{host_ls:.0f} labels/s")
+    emit("cluster.device_over_host", 0.0, f"x{speedup:.1f}")
+    # the acceptance bar: clustering a 64k collection through the device
+    # subsystem must beat the legacy dense-host-matrix path outright
+    if speedup_bar is not None:
+        assert speedup >= speedup_bar, (
+            f"device clustering only {speedup:.2f}x the host oracle at "
+            f"N={n_large} (bar {speedup_bar}x)")
+    return summary

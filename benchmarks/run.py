@@ -21,7 +21,7 @@ import traceback
 # suites whose results feed the BENCH_kernels.json perf trajectory
 _TRAJECTORY_SUITES = ("kernel_packed", "kernel_cham", "kernel_sketch",
                       "kernel_sparse_sketch", "dedup", "dedup_streaming",
-                      "index", "index_mixed")
+                      "index", "index_mixed", "cluster")
 
 # tiny-size overrides for --smoke: exercise every trajectory suite's wiring
 # (sketch -> kernels -> engine -> index) in seconds on a bare CPU runner
@@ -36,6 +36,8 @@ _SMOKE_KWARGS = {
                   ratio_bar=None),
     "index_mixed": dict(n_small=256, n_large=1024, q_batch=4, rounds=3,
                         churn=16, speedup_bar=None),
+    "cluster": dict(n_small=256, n_large=1024, k=4, n_iter=2,
+                    oracle_iters=1, batch_rows=256, speedup_bar=None),
 }
 
 
@@ -74,8 +76,8 @@ def _record_trajectory(trajectory: dict) -> None:
 
 
 def main() -> None:
-    from benchmarks import bench_dedup, bench_index, bench_kernels, \
-        bench_paper
+    from benchmarks import bench_cluster, bench_dedup, bench_index, \
+        bench_kernels, bench_paper
 
     suites = [
         ("fig2_table3", bench_paper.fig2_table3_reduction_speed),
@@ -93,6 +95,7 @@ def main() -> None:
         ("dedup_streaming", bench_dedup.dedup_streaming_vs_blocked),
         ("index", bench_index.bench_index),
         ("index_mixed", bench_index.bench_mixed_traffic),
+        ("cluster", bench_cluster.bench_cluster),
     ]
     only = None
     smoke = "--smoke" in sys.argv[1:]

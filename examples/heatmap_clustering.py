@@ -1,10 +1,12 @@
 """Heatmap + clustering on sketches (paper Figures 6-12 at demo scale).
 
-The clustering and neighbour queries run on the streaming all-pairs engine
-(repro.core.allpairs): k-mode assignment is a device-resident row-argmin
-over the packed sketches and the k-NN demo streams top-k per row — neither
-materialises an (N, N) matrix on host.  Only the heatmap MAE check builds
-the full matrix, because the heatmap IS the matrix.
+Clustering runs on the device k-mode engine (repro.core.kmode.kmode_packed,
+DESIGN.md section 9): assignment is a device-resident row-argmin over the
+packed sketches, medoid updates are streaming row-sums, and the mini-batch
+mode shows the large-N configuration.  The online half attaches a
+ClusterIndex to a live QueryEngine: rows are labelled as they are ingested
+and the centres refit on demand.  Only the heatmap MAE check builds the
+full matrix, because the heatmap IS the matrix.
 
     PYTHONPATH=src python examples/heatmap_clustering.py
 """
@@ -18,7 +20,7 @@ from repro.core import CabinParams
 from repro.core.allpairs import topk_rows
 from repro.core.cabin import sketch_dense
 from repro.core.cham import cham_matrix
-from repro.core.kmode import kmode, kmode_precomputed
+from repro.core.kmode import kmode, kmode_packed
 from repro.core.metrics import ari, nmi, purity
 from repro.data.synthetic import TABLE1, sample_dense, scaled_spec
 
@@ -49,15 +51,38 @@ def main() -> None:
           f"exact {t_exact:.2f}s vs sketch {t_est:.4f}s "
           f"-> {t_exact / t_est:.0f}x")
 
-    # --- clustering: streaming k-medoids on PACKED sketches ---
+    # --- clustering: the device k-mode engine on PACKED sketches ---
     truth, _ = kmode(x, k, seed=0, n_categories=spec.n_categories)
     sk_np = np.asarray(sk)
     t0 = time.perf_counter()
-    pred = kmode_precomputed(None, sk_np, k=k, seed=0, sketch_dim=d)
+    res = kmode_packed(sk_np, k, d=d, seed=0)
     t_cluster = time.perf_counter() - t0
-    print(f"k-mode on packed sketches (streaming engine, {t_cluster:.2f}s) "
-          f"vs full data: purity={purity(truth, pred):.3f}"
-          f" NMI={nmi(truth, pred):.3f} ARI={ari(truth, pred):.3f}")
+    print(f"k-mode on packed sketches (device engine, {t_cluster:.2f}s) "
+          f"vs full data: purity={purity(truth, res.labels):.3f}"
+          f" NMI={nmi(truth, res.labels):.3f}"
+          f" ARI={ari(truth, res.labels):.3f}")
+    t0 = time.perf_counter()
+    mb = kmode_packed(sk_np, k, d=d, seed=0, batch_rows=128)
+    t_mb = time.perf_counter() - t0
+    print(f"mini-batch mode (batch_rows=128, {t_mb:.2f}s — the large-N "
+          f"config): NMI vs full-batch={nmi(res.labels, mb.labels):.3f}")
+
+    # --- online: centres maintained over a live index ---
+    from repro.index import QueryEngine
+
+    eng = QueryEngine(params)
+    clusters = eng.cluster(k, seed=0)
+    eng.add_dense(x[:300])           # bootstrap fit on first ingest
+    eng.add_dense(x[300:])           # fresh rows labelled on arrival
+    ids, labels = clusters.labels()
+    print(f"online ClusterIndex: {len(ids)} rows labelled through ingest "
+          f"(NMI vs ground truth={nmi(truth[ids], labels):.3f}), "
+          f"counts={clusters.counts.tolist()}")
+    labels_refit = clusters.refit()
+    print(f"after refit: NMI vs ground truth="
+          f"{nmi(truth[ids], labels_refit):.3f} "
+          f"(incremental labels were assigned against the bootstrap-time "
+          f"centres; refit re-elects them from the full membership)")
 
     # --- neighbour queries: streaming top-k, no (N, N) matrix ---
     t0 = time.perf_counter()

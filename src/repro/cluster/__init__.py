@@ -1,0 +1,18 @@
+"""repro.cluster: online clustering over the live index (DESIGN.md §9).
+
+The paper's third headline workload (clustering) promoted from a one-shot
+batch fit to a subsystem that serves a MUTATING collection: `ClusterIndex`
+maintains k-medoid centres and per-row labels over a `repro.index`
+QueryEngine/SketchStore, assigning fresh rows as they arrive (through the
+engine's own `topk_packed` k=1 serving path), tracking per-cluster
+counts/weights through add/remove/compact, refitting on demand with the
+device k-mode engine (`core.kmode.kmode_packed`), and surviving
+save/restore through `checkpoint.Checkpointer` alongside the store.
+
+Public API:
+    ClusterIndex — attach to a QueryEngine (or `engine.cluster(k)`);
+                   labels()/label_of()/assign(), counts/weights,
+                   refit(n_iter), save/restore
+"""
+
+from repro.cluster.online import ClusterIndex  # noqa: F401

@@ -1,0 +1,408 @@
+"""ClusterIndex: k-medoid centres and per-row labels over a live index.
+
+`core.kmode.kmode_packed` answers the one-shot question "cluster this
+matrix"; a serving system owns a COLLECTION that mutates between questions.
+ClusterIndex is the bridge (DESIGN.md section 9.3): it subscribes to the
+engine's `SketchStore` mutation events, so rows added through ANY path
+(engine.add_dense / add_sparse / add_packed, streaming ingest) are assigned
+to their nearest centre the moment they land, removes decrement the cluster
+bookkeeping, and compaction is a no-op (labels are keyed by external id,
+which compaction preserves).
+
+Three disciplines, all inherited rather than reinvented:
+
+  * Assignment IS a k-NN query.  Centres live in a private k-row
+    QueryEngine; assigning a batch is `topk_packed(k=1)` against it, which
+    buys the serving stack's shape bucketing, traced valid counts, and LRU
+    for free — and its (value, id)-lex tie-break equals `argmin_rows`'
+    first-minimum tie-break because centre ids are centre indices, so
+    incremental assignment agrees exactly with what a `refit` would assign
+    against the same centres.
+  * Refit is deterministic in the membership.  `refit()` gathers the alive
+    rows in id order (the store's history-independent canonical order) and
+    runs the full-batch device engine with the index's fixed seed: two
+    stores holding the same membership — however they got there, including
+    through save/restore — refit to identical centres and labels.  The
+    property tests pin this.
+  * Snapshots ride the store's.  `save` writes the engine snapshot plus a
+    `cluster/` Checkpointer tree (centres, label sidecar, counts/weights),
+    and `restore` reproduces the exact live state — including labels
+    assigned incrementally since the last refit, which a re-fit would not
+    reproduce (they depend on arrival order by design).
+
+Between refits, labels of rows added incrementally are path-dependent
+(each batch is assigned against the centres of its arrival moment); the
+invariance contract applies AFTER `refit()`, which is the point of having
+one.  `refit_every=n` auto-refits once n mutations accumulate.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.kmode import kmode_packed
+from repro.core.packing import pad_rows_pow2, padded_take
+from repro.index.engine import QueryEngine
+
+
+class ClusterIndex:
+    """Online k-medoid clustering attached to a QueryEngine.
+
+    Parameters
+    ----------
+    engine : the QueryEngine whose store is being clustered.  The index
+        subscribes to the store's mutation events at construction; if the
+        store already holds rows, an initial `refit()` runs immediately,
+        otherwise the first `add` bootstraps it.
+    k : number of clusters (>= 1; k > n is legal — degenerate clusters
+        simply stay empty or share duplicate centres, matching kmode).
+    seed / n_iter / block : forwarded to `kmode_packed` on every refit —
+        fixed at construction so refits are a pure function of membership.
+    refit_every : auto-refit after this many mutated rows (None = manual).
+    """
+
+    def __init__(self, engine: QueryEngine, k: int, *, seed: int = 0,
+                 n_iter: int = 15, block: int = 2048,
+                 refit_every: int | None = None):
+        if k < 1:
+            raise ValueError(f"ClusterIndex: k must be >= 1, got {k}")
+        if n_iter < 1:
+            raise ValueError(
+                f"ClusterIndex: n_iter must be >= 1, got {n_iter}")
+        if refit_every is not None and refit_every < 1:
+            raise ValueError(
+                f"ClusterIndex: refit_every must be >= 1, got {refit_every}")
+        self.engine = engine
+        self.k = int(k)
+        self.seed = int(seed)
+        self.n_iter = int(n_iter)
+        self.block = int(block)
+        self.refit_every = refit_every
+        self._centers: np.ndarray | None = None   # (k, w) packed, host
+        self._medoid_ids = np.full(self.k, -1, np.int64)
+        self._centre_engine: QueryEngine | None = None
+        self._centre_ids = np.zeros(0, np.int64)
+        # label sidecar over the ALIVE rows, ascending by external id (ids
+        # are monotone and adds append, so order is maintained for free)
+        self._lab_ids = np.zeros(0, np.int64)
+        self._lab = np.zeros(0, np.int64)
+        self._counts = np.zeros(self.k, np.int64)
+        self._weights = np.zeros(self.k, np.int64)
+        self.mutations_since_refit = 0
+        self.n_refits = 0
+        engine.store.subscribe(self._on_store_event)
+        if len(engine.store):
+            self.refit()
+
+    def detach(self) -> None:
+        """Stop observing the engine's store.  The store holds a strong
+        reference to every subscriber, so an abandoned index would keep
+        paying a k-NN assignment per add forever — detach before replacing
+        one (e.g. to change k or seed)."""
+        self.engine.store.unsubscribe(self._on_store_event)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def fitted(self) -> bool:
+        return self._centers is not None
+
+    @property
+    def counts(self) -> np.ndarray:
+        """Alive rows per cluster, (k,) int64 (a copy)."""
+        return self._counts.copy()
+
+    @property
+    def weights(self) -> np.ndarray:
+        """Summed sketch Hamming weight of alive rows per cluster — the
+        cheap density signal band planning already mirrors on host."""
+        return self._weights.copy()
+
+    @property
+    def centers(self) -> np.ndarray:
+        """Packed centre rows (k, w) int32 (a copy)."""
+        self._require_fit()
+        return self._centers.copy()
+
+    @property
+    def medoid_ids(self) -> np.ndarray:
+        """External id each centre was elected from at the last refit
+        (-1 for clusters whose medoid id predates the sidecar, e.g. after
+        a restore of an unfitted snapshot)."""
+        return self._medoid_ids.copy()
+
+    def labels(self) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, labels) over the alive rows, ascending by id (copies)."""
+        return self._lab_ids.copy(), self._lab.copy()
+
+    def label_of(self, ids) -> np.ndarray:
+        """Cluster of each external id; KeyError on unknown/removed ids."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if len(ids) == 0:
+            return np.zeros(0, np.int64)
+        n = len(self._lab_ids)
+        pos = np.searchsorted(self._lab_ids, ids)
+        ok = pos < n
+        if n:
+            ok &= self._lab_ids[np.minimum(pos, n - 1)] == ids
+        if not ok.all():
+            raise KeyError(f"id {ids[~ok][0]} not in cluster index")
+        return self._lab[pos]
+
+    def stats(self) -> dict:
+        return {
+            "k": self.k,
+            "fitted": self.fitted,
+            "n_labeled": len(self._lab_ids),
+            "counts": self._counts.tolist(),
+            "n_refits": self.n_refits,
+            "mutations_since_refit": self.mutations_since_refit,
+        }
+
+    # -- assignment (the engine's own serving path) -------------------------
+
+    def _require_fit(self) -> None:
+        if self._centers is None:
+            raise RuntimeError(
+                "ClusterIndex has no centres yet: add rows (the first add "
+                "bootstraps a fit) or call refit() on a non-empty store")
+
+    def _ids_to_clusters(self, ids: np.ndarray) -> np.ndarray:
+        if ids.shape[1] == 0:  # empty query batch: topk returns (0, 0)
+            return np.zeros(ids.shape[0], np.int64)
+        return np.searchsorted(self._centre_ids, ids[:, 0]).astype(np.int64)
+
+    def _assign_packed(self, sk, n_valid: int) -> np.ndarray:
+        """Nearest-centre labels for packed query rows via the centre
+        engine's topk_packed(k=1) — LRU + shape bucketing for free, and the
+        (value, id)-lex tie-break equals argmin's first minimum because
+        centre ids are centre indices."""
+        ids, _ = self._centre_engine.topk_packed(sk, 1, n_valid=n_valid)
+        return self._ids_to_clusters(ids)
+
+    def assign(self, queries) -> np.ndarray:
+        """Label raw categorical queries (dense rows or (indices, values)
+        COO) WITHOUT ingesting them — the read-only classification path."""
+        self._require_fit()
+        ids, _ = self._centre_engine.topk(queries, 1)
+        return self._ids_to_clusters(ids)
+
+    def assign_packed(self, sk) -> np.ndarray:
+        """Pre-sketched twin of `assign` (rows must share the engine's
+        CabinParams)."""
+        self._require_fit()
+        import jax.numpy as jnp
+
+        sk = jnp.asarray(sk)
+        return self._assign_packed(pad_rows_pow2(sk), n_valid=sk.shape[0])
+
+    # -- mutation mirror (store hook) ---------------------------------------
+
+    def _on_store_event(self, event: str, ids: np.ndarray,
+                        slots: np.ndarray) -> None:
+        store = self.engine.store
+        if event == "add":
+            if self._centers is None:
+                self.refit()  # bootstrap covers these rows too
+                return
+            sk = padded_take(store.sk_buf, slots)
+            lab = self._assign_packed(sk, n_valid=len(ids))
+            self._lab_ids = np.concatenate([self._lab_ids, ids])
+            self._lab = np.concatenate([self._lab, lab])
+            self._counts += np.bincount(lab, minlength=self.k)
+            self._weights += np.bincount(
+                lab, weights=store.weights_at(slots),
+                minlength=self.k).astype(np.int64)
+        elif event == "remove":
+            pos = np.searchsorted(self._lab_ids, ids)
+            lab = self._lab[pos]
+            self._counts -= np.bincount(lab, minlength=self.k)
+            self._weights -= np.bincount(
+                lab, weights=store.weights_at(slots),
+                minlength=self.k).astype(np.int64)
+            keep = np.ones(len(self._lab_ids), bool)
+            keep[pos] = False
+            self._lab_ids = self._lab_ids[keep]
+            self._lab = self._lab[keep]
+        else:  # compact: ids (hence the sidecar) survive slot renumbering
+            return
+        self.mutations_since_refit += len(ids)
+        if (self.refit_every is not None
+                and self.mutations_since_refit >= self.refit_every):
+            self.refit()
+
+    # -- (re)fitting --------------------------------------------------------
+
+    def refit(self, n_iter: int | None = None) -> np.ndarray:
+        """Re-cluster the current membership with the device engine and
+        return the new labels (id order).
+
+        Deterministic in the membership: the alive rows are gathered in id
+        order (history-independent) and `kmode_packed` runs with the
+        index's fixed seed, so any two stores holding the same vectors
+        under the same ids — regardless of the add/remove/compact/restore
+        history between — refit to identical centres, labels, counts.  An
+        empty store resets to the unfitted state."""
+        store = self.engine.store
+        mat, n_alive, ids = store.gather_alive()
+        if n_alive == 0:
+            self._centers = None
+            self._centre_engine = None
+            self._centre_ids = np.zeros(0, np.int64)
+            self._medoid_ids = np.full(self.k, -1, np.int64)
+            self._lab_ids = np.zeros(0, np.int64)
+            self._lab = np.zeros(0, np.int64)
+            self._counts = np.zeros(self.k, np.int64)
+            self._weights = np.zeros(self.k, np.int64)
+            self.mutations_since_refit = 0
+            return np.zeros(0, np.int64)
+        res = kmode_packed(
+            mat[:n_alive], self.k, d=store.d,
+            n_iter=self.n_iter if n_iter is None else n_iter,
+            seed=self.seed, metric=self.engine.metric, block=self.block,
+            mode=self.engine.mode)
+        self._medoid_ids = ids[res.medoids]
+        self._lab_ids = ids.copy()
+        self._lab = res.labels
+        self._counts = np.bincount(res.labels, minlength=self.k)
+        self._weights = np.bincount(
+            res.labels, weights=store.weights(),
+            minlength=self.k).astype(np.int64)
+        self._install_centers(res.centers)
+        self.mutations_since_refit = 0
+        self.n_refits += 1
+        return res.labels.copy()
+
+    def _install_centers(self, centers: np.ndarray) -> None:
+        """(Re)build the private centre engine: k packed rows whose ids ARE
+        the centre indices (fresh store, ids 0..k-1)."""
+        self._centers = np.asarray(centers, np.int32)
+        self._centre_engine = QueryEngine(
+            self.engine.params, metric=self.engine.metric, block=self.block,
+            mode=self.engine.mode)
+        self._centre_ids = self._centre_engine.add_packed(self._centers)
+
+    # -- convenience mutation wrappers --------------------------------------
+
+    def add_dense(self, x) -> tuple[np.ndarray, np.ndarray]:
+        """Ingest via the engine; returns (ids, labels) of the new rows."""
+        ids = self.engine.add_dense(x)
+        return ids, self.label_of(ids) if len(ids) else ids.copy()
+
+    def add_sparse(self, indices, values) -> tuple[np.ndarray, np.ndarray]:
+        ids = self.engine.add_sparse(indices, values)
+        return ids, self.label_of(ids) if len(ids) else ids.copy()
+
+    def add_packed(self, packed) -> tuple[np.ndarray, np.ndarray]:
+        ids = self.engine.add_packed(packed)
+        return ids, self.label_of(ids) if len(ids) else ids.copy()
+
+    def remove(self, ids) -> int:
+        return self.engine.remove(ids)
+
+    def compact(self) -> None:
+        self.engine.compact()
+
+    # -- persistence --------------------------------------------------------
+
+    _FORMAT = "repro.cluster.v1"
+
+    def save(self, directory: str, step: int = 0, keep: int = 3) -> None:
+        """Snapshot engine + cluster state: the engine snapshot lands in
+        `directory` (QueryEngine.save) and the cluster sidecar in
+        `directory/cluster` under the same step, both through
+        checkpoint.Checkpointer's atomic-publish layout."""
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        self.engine.save(directory, step=step, keep=keep)
+        w = self.engine.store.w
+        centers = (self._centers if self._centers is not None
+                   else np.zeros((0, w), np.int32))
+        tree = {
+            "centers": centers,
+            "medoid_ids": self._medoid_ids,
+            "lab_ids": self._lab_ids,
+            "labels": self._lab,
+            "counts": self._counts,
+            "weights": self._weights,
+        }
+        meta = {
+            "format": self._FORMAT,
+            "k": self.k,
+            "seed": self.seed,
+            "n_iter": self.n_iter,
+            "block": self.block,
+            "refit_every": self.refit_every,
+            "mutations_since_refit": self.mutations_since_refit,
+            "n_refits": self.n_refits,
+        }
+        ckpt = Checkpointer(os.path.join(directory, "cluster"), keep=keep,
+                            async_save=False)
+        ckpt.save(step, tree, extra_meta=meta, block=True)
+
+    @classmethod
+    def restore(cls, directory: str, step: int | None = None,
+                **engine_kwargs) -> "ClusterIndex":
+        """Rebuild (engine, ClusterIndex) from a `save` snapshot.  The
+        restored state is EXACT — including labels assigned incrementally
+        since the last refit, which a fresh refit would not reproduce.
+
+        The step is resolved from the CLUSTER sidecar (written last by
+        `save`), then used for the engine snapshot too — so a save that
+        crashed between the two publishes restores the newest CONSISTENT
+        pair instead of pairing a fresh store with a stale sidecar."""
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        ckpt = Checkpointer(os.path.join(directory, "cluster"),
+                            async_save=False)
+        if step is None:
+            step = ckpt.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no cluster snapshots in {directory}/cluster")
+        engine = QueryEngine.restore(directory, step=step, **engine_kwargs)
+        meta = ckpt.meta(step)
+        if meta.get("format") != cls._FORMAT:
+            raise ValueError(f"not a cluster snapshot: {directory}/cluster")
+        w = engine.store.w
+        like = {
+            "centers": np.zeros((0, w), np.int32),
+            "medoid_ids": np.zeros(0, np.int64),
+            "lab_ids": np.zeros(0, np.int64),
+            "labels": np.zeros(0, np.int64),
+            "counts": np.zeros(0, np.int64),
+            "weights": np.zeros(0, np.int64),
+        }
+        tree, _ = ckpt.restore(like, step=step)
+        self = cls.__new__(cls)
+        self.engine = engine
+        self.k = int(meta["k"])
+        self.seed = int(meta["seed"])
+        self.n_iter = int(meta["n_iter"])
+        self.block = int(meta.get("block", engine.block))
+        refit_every = meta.get("refit_every")
+        self.refit_every = None if refit_every is None else int(refit_every)
+        self._centers = None
+        self._centre_engine = None
+        self._centre_ids = np.zeros(0, np.int64)
+        self._medoid_ids = tree["medoid_ids"].copy()
+        self._lab_ids = tree["lab_ids"].copy()
+        self._lab = tree["labels"].copy()
+        self._counts = tree["counts"].copy()
+        self._weights = tree["weights"].copy()
+        self.mutations_since_refit = int(meta["mutations_since_refit"])
+        self.n_refits = int(meta["n_refits"])
+        if len(self._lab_ids) and not np.array_equal(self._lab_ids,
+                                                     engine.store.ids()):
+            # a desynced pair would corrupt the remove bookkeeping later;
+            # fail at the boundary instead
+            raise ValueError(
+                "cluster snapshot does not match the engine snapshot at "
+                f"step {step}: label sidecar covers different ids than the "
+                "restored store")
+        if len(tree["centers"]):
+            self._install_centers(tree["centers"])
+        engine.store.subscribe(self._on_store_event)
+        return self

@@ -8,9 +8,10 @@ Public API:
     threshold_pairs, argmin_rows, topk_rows(_banded), rowsum     (allpairs)
 
 The query-shaped entry points over a PERSISTENT collection — SketchStore,
-BandedLayout, QueryEngine (repro.index) — are re-exported here lazily (PEP
-562) so `from repro.core import QueryEngine` works without importing the
-index subsystem (which itself imports repro.core) at package-init time.
+BandedLayout, QueryEngine (repro.index) and ClusterIndex (repro.cluster) —
+are re-exported here lazily (PEP 562) so `from repro.core import
+QueryEngine` works without importing the index subsystem (which itself
+imports repro.core) at package-init time.
 """
 
 from repro.core.allpairs import (  # noqa: F401
@@ -56,10 +57,11 @@ from repro.core.packing import (  # noqa: F401
 )
 from repro.core.theory import sketch_dim, theorem2_bound  # noqa: F401
 
-# repro.index entry points, resolved lazily to break the import cycle
-# (repro.index imports repro.core at module load).
+# repro.index / repro.cluster entry points, resolved lazily to break the
+# import cycle (both import repro.core at module load).
 _INDEX_EXPORTS = ("SketchStore", "BandedLayout", "TieredLayout",
                   "QueryEngine")
+_CLUSTER_EXPORTS = ("ClusterIndex",)
 
 
 def __getattr__(name):
@@ -67,4 +69,8 @@ def __getattr__(name):
         from repro import index as _index
 
         return getattr(_index, name)
+    if name in _CLUSTER_EXPORTS:
+        from repro import cluster as _cluster
+
+        return getattr(_cluster, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

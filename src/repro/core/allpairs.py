@@ -500,15 +500,23 @@ def _argmin_rows_impl(a_p, b_p, m, *, block, metric, mode, d):
 
 
 def argmin_rows(a, b, *, d: int, metric: str = "cham", block: int = 2048,
-                mode: str | None = None):
+                mode: str | None = None, m_valid: int | None = None):
     """Per-row nearest column: returns (indices (N,), distances (N,)) on
     host, streaming over blocks of b.  Tie-break = first minimum, identical
     to np.argmin over the dense matrix.  Both row counts are bucketed to
     powers of two and the valid column count is traced, so repeated calls
-    with drifting sizes (the k-mode loops) reuse O(log N) compiled graphs."""
+    with drifting sizes (the k-mode loops) reuse O(log N) compiled graphs.
+
+    `m_valid` declares how many leading rows of b are real when the caller
+    hands over an already pow2-padded block (repro.core.kmode keeps its
+    centre block device-resident and padded once, instead of reshaping it
+    per iteration); it is traced, so varying it does not recompile."""
     a = jnp.asarray(a)
     b = jnp.asarray(b)
-    n, m = a.shape[0], b.shape[0]
+    n, m = a.shape[0], b.shape[0] if m_valid is None else m_valid
+    if not 0 <= m <= b.shape[0]:
+        raise ValueError(f"m_valid={m} outside the {b.shape[0]} supplied "
+                         "rows")
     a_p = _pow2_rows(a)
     b_p2 = _pow2_rows(b)
     block = max(1, min(block, b_p2.shape[0]))
@@ -757,14 +765,23 @@ def _rowsum_impl(a_p, b_p, m, *, block, metric, mode, d):
 
 
 def rowsum(a, b=None, *, d: int, metric: str = "cham", block: int = 2048,
-           mode: str | None = None) -> np.ndarray:
+           mode: str | None = None, m_valid: int | None = None) -> np.ndarray:
     """Per-row total distance to all rows of b (b=None: of a itself),
     streaming over blocks of b.  Used for medoid selection; shapes are
     bucketed to powers of two so repeated calls with varying row counts
-    (the k-mode medoid loop) reuse a handful of compiled graphs."""
+    (the k-mode medoid loop) reuse a handful of compiled graphs.
+
+    `m_valid` declares how many leading rows of b (of a, when b is None)
+    are real: columns past it contribute zero.  It is traced — the k-mode
+    medoid loop passes `padded_take` member gathers whose pad rows
+    REPLICATE row 0 and must not be counted.  Rows of a past the valid
+    count still get (meaningless) sums; callers slice them off."""
     a = jnp.asarray(a)
     b = a if b is None else jnp.asarray(b)
-    n, m = a.shape[0], b.shape[0]
+    n, m = a.shape[0], b.shape[0] if m_valid is None else m_valid
+    if not 0 <= m <= b.shape[0]:
+        raise ValueError(f"m_valid={m} outside the {b.shape[0]} supplied "
+                         "rows")
     a_p = _pow2_rows(a)
     b_p2 = _pow2_rows(b)
     block = max(1, min(block, b_p2.shape[0]))

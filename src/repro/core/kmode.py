@@ -2,18 +2,84 @@
 
 Used by the paper for ground-truth clustering on the full categorical data
 and for clustering binary sketches (binary vectors are categorical with c=2).
-NumPy host implementation with chunked distance computation; deterministic
-k-means++-style seeding so all methods start from identical centres (the
-paper fixes the seed across baselines for exactly this reason).
+Two engines share one control flow (`_kmedoids_run`), so they draw the
+identical rng sequence and produce identical clusterings on the same
+representation:
 
-`kmode_precomputed` additionally supports packed Cabin sketches directly
-(sketch_dim=...): assignment and medoid updates then stream through
-repro.core.allpairs on device instead of calling a host distance oracle.
+  * `kmode_packed` — the PRIMARY engine (DESIGN.md section 9): centres are
+    member rows of a packed Cabin sketch matrix, every distance pass
+    (seeding, assignment, medoid update) streams through the device-resident
+    all-pairs engine (repro.core.allpairs), and the centre block lives on
+    device, pow2-padded once with a traced valid count — no per-iteration
+    reshape, O(log) compiled graphs across a whole run.  `batch_rows` turns
+    on mini-batch mode for collections too large for full-batch medoid
+    updates (the documented deviation — see `kmode_packed`).
+  * `kmode_precomputed(dist_fn, ...)` — the host oracle: `dist_fn` returns
+    dense distance matrices evaluated on host per pass.  Kept for arbitrary
+    representations and as the bit-level equivalence reference the device
+    engine is property-tested against (tests/test_cluster.py).
+
+`kmode` is the NumPy host implementation over raw categorical matrices
+(chunked Hamming distances, per-attribute mode centres) used for the paper's
+full-data ground truth.  All entry points validate their arguments at the
+API boundary and survive degenerate data (duplicate-heavy rows, k >= the
+number of distinct rows, k > n) — the k-means++-style seeding falls back to
+uniform sampling over not-yet-chosen rows when the min-distance vector
+collapses to zero instead of crashing on an unnormalisable distribution.
 """
 
 from __future__ import annotations
 
+from typing import Callable, NamedTuple
+
 import numpy as np
+
+
+def _check_args(n_rows: int, k: int, n_iter: int, what: str) -> None:
+    """API-boundary validation shared by every entry point: the failure
+    modes used to be an obscure `int(x.max())` ValueError on empty input
+    and downstream shape errors for k = 0."""
+    if k < 1:
+        raise ValueError(f"{what}: k must be >= 1, got {k}")
+    if n_iter < 1:
+        raise ValueError(f"{what}: n_iter must be >= 1, got {n_iter}")
+    if n_rows < 1:
+        raise ValueError(f"{what}: cannot cluster an empty matrix (0 rows)")
+
+
+def _seed_indices(n: int, k: int, rng: np.random.Generator,
+                  dist_to: Callable[[int], np.ndarray]) -> np.ndarray:
+    """k-means++-style medoid seeding over row indices.
+
+    `dist_to(i)` returns the (n,) distances of every row to row i; the
+    running min-distance vector d weights the next draw.  Already-chosen
+    rows are excluded outright (their d is 0, but a concentrated float
+    distribution could still return them under `rng.choice` — duplicate
+    centres make a permanently dead cluster).  When d collapses to all
+    zeros (duplicate-heavy data, or k >= #distinct rows) the draw falls
+    back to UNIFORM over the not-yet-chosen rows — and over all rows once
+    every row is already a centre, which only happens for k > n, where
+    duplicate centres are unavoidable.  On non-degenerate data the drawn
+    sequence is identical to the pre-fix seeding (chosen rows already
+    carried zero probability), so fixed-seed comparisons across methods
+    stay valid.
+    """
+    chosen = [int(rng.integers(n))]
+    d = np.asarray(dist_to(chosen[0]), np.float64)
+    for _ in range(1, k):
+        p = np.maximum(d, 0.0)
+        p[np.asarray(chosen)] = 0.0
+        s = p.sum()
+        if s > 0.0:
+            idx = int(rng.choice(n, p=p / s))
+        else:
+            pool = np.setdiff1d(np.arange(n), np.asarray(chosen))
+            if len(pool) == 0:
+                pool = np.arange(n)
+            idx = int(pool[rng.integers(len(pool))])
+        chosen.append(idx)
+        d = np.minimum(d, dist_to(idx))
+    return np.asarray(chosen, np.int64)
 
 
 def _hamming_to_centers(x: np.ndarray, centers: np.ndarray,
@@ -26,26 +92,30 @@ def _hamming_to_centers(x: np.ndarray, centers: np.ndarray,
     return out
 
 
-def _plusplus_init(x: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarray:
-    n = x.shape[0]
-    centers = [x[rng.integers(n)]]
-    d = (x != centers[0]).sum(axis=1).astype(np.float64)
-    for _ in range(1, k):
-        p = d / max(d.sum(), 1e-12)
-        idx = rng.choice(n, p=p)
-        centers.append(x[idx])
-        d = np.minimum(d, (x != centers[-1]).sum(axis=1))
-    return np.stack(centers)
+def _plusplus_init(x: np.ndarray, k: int, rng: np.random.Generator
+                   ) -> np.ndarray:
+    def dist_to(i: int) -> np.ndarray:
+        return (x != x[i]).sum(axis=1).astype(np.float64)
+
+    return x[_seed_indices(x.shape[0], k, rng, dist_to)]
 
 
-def _modes(x: np.ndarray, labels: np.ndarray, k: int, n_cats: int) -> np.ndarray:
-    """Per-cluster per-attribute mode via a (n_attrs, n_cats) count table."""
+def _modes(x: np.ndarray, labels: np.ndarray, k: int, n_cats: int,
+           prev_centers: np.ndarray | None = None) -> np.ndarray:
+    """Per-cluster per-attribute mode via a (n_attrs, n_cats) count table.
+
+    An EMPTY cluster keeps its previous centre: the old all-zeros
+    placeholder sat at the low-category corner of the space and captured
+    low-category rows on the next assignment pass, silently reshaping the
+    clustering around a centre no data ever elected."""
     n_attr = x.shape[1]
     centers = np.zeros((k, n_attr), dtype=x.dtype)
     cols = np.arange(n_attr)
     for c in range(k):
         members = x[labels == c]
         if len(members) == 0:
+            if prev_centers is not None:
+                centers[c] = prev_centers[c]
             continue
         table = np.zeros((n_attr, n_cats + 1), dtype=np.int32)
         for row in members:
@@ -70,26 +140,218 @@ def kmode(
     Returns (labels (N,), centers (k, n_attrs)).
     """
     x = np.ascontiguousarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"kmode: expected a 2-d matrix, got shape {x.shape}")
+    _check_args(x.shape[0], k, n_iter, "kmode")
     if n_categories is None:
         n_categories = int(x.max())
     best = None
     for trial in range(max(n_init, 1)):
         rng = np.random.default_rng(seed * 1000 + trial)
         centers = _plusplus_init(x, k, rng)
-        labels = np.zeros(x.shape[0], dtype=np.int64)
+        # -1 sentinel + closing assignment: same discipline as
+        # _kmedoids_run — a genuinely all-zeros first assignment (k = 1)
+        # must not read as convergence, and returned labels must be an
+        # assignment against the RETURNED centres
+        labels = np.full(x.shape[0], -1, dtype=np.int64)
+        converged = False
         for _ in range(n_iter):
             dist = _hamming_to_centers(x, centers)
             new_labels = dist.argmin(axis=1)
             if np.array_equal(new_labels, labels):
-                labels = new_labels
+                converged = True
                 break
             labels = new_labels
-            centers = _modes(x, labels, k, n_categories)
+            centers = _modes(x, labels, k, n_categories,
+                             prev_centers=centers)
+        if not converged:
+            labels = _hamming_to_centers(x, centers).argmin(axis=1)
         cost = int(_hamming_to_centers(x, centers)[
             np.arange(x.shape[0]), labels].sum())
         if best is None or cost < best[0]:
             best = (cost, labels, centers)
     return best[1], best[2]
+
+
+# ---------------------------------------------------------------------------
+# k-medoids control flow shared by the device engine and the host oracle
+# ---------------------------------------------------------------------------
+
+
+class KmodeResult(NamedTuple):
+    """Full clustering state from the medoid engines — what an ONLINE
+    consumer (repro.cluster.ClusterIndex) needs to keep assigning rows
+    after the fit: the labels, which rows were elected centres, and the
+    centre rows themselves (host copies)."""
+
+    labels: np.ndarray   # (n,) int64 cluster assignment per row
+    medoids: np.ndarray  # (k,) int64 row index of each final centre
+    centers: np.ndarray  # (k, repr_width) final centre rows
+
+
+def _seed_and_install(n: int, k: int, seed: int,
+                      dist_to: Callable[[int], np.ndarray],
+                      set_center: Callable[[int, int], None]) -> np.ndarray:
+    """Seed k medoids and install them as the initial centres — the one
+    entry both the full-batch loop and the mini-batch sweep start from, so
+    their rng draw sequences can never diverge."""
+    rng = np.random.default_rng(seed)
+    medoids = _seed_indices(n, k, rng, dist_to)
+    for c in range(k):
+        set_center(c, int(medoids[c]))
+    return medoids
+
+
+def _kmedoids_run(
+    n: int,
+    k: int,
+    n_iter: int,
+    seed: int,
+    *,
+    dist_to: Callable[[int], np.ndarray],
+    set_center: Callable[[int, int], None],
+    assign: Callable[[], np.ndarray],
+    totals: Callable[[np.ndarray], np.ndarray],
+) -> tuple[np.ndarray, np.ndarray]:
+    """THE k-medoids loop: seeding, assignment sweeps, medoid updates —
+    parameterised over a distance backend.  Both the device engine and the
+    host oracle run exactly this function with the same rng, so equal
+    per-pair distances imply bit-equal labels; the backends only decide
+    WHERE the distance arithmetic happens.
+
+    Empty clusters keep their current medoid (same rationale as `_modes`).
+    Returns (labels (n,), medoids (k,)) with the guarantee that `labels`
+    IS a one-shot assignment against the final medoids: convergence breaks
+    before any further update, and an n_iter-exhausted run (whose last
+    sweep updated the medoids after the last assignment) pays one closing
+    assignment pass.  The pre-assignment label state is a -1 sentinel, so
+    a first sweep that genuinely assigns every row to cluster 0 (always
+    true for k = 1) still elects its medoids instead of being mistaken
+    for convergence against the zero-initialised labels.
+    """
+    medoids = _seed_and_install(n, k, seed, dist_to, set_center)
+    labels = np.full(n, -1, dtype=np.int64)
+    converged = False
+    for _ in range(n_iter):
+        new_labels = assign()
+        if np.array_equal(new_labels, labels):
+            converged = True
+            break
+        labels = new_labels
+        # medoid update: member minimising total distance to cluster members
+        for c in range(k):
+            members = np.flatnonzero(labels == c)
+            if len(members) == 0:
+                continue
+            midx = int(members[int(np.argmin(totals(members)))])
+            medoids[c] = midx
+            set_center(c, midx)
+    if not converged:
+        labels = assign()  # consistent with the final medoids
+    return labels, medoids
+
+
+def kmode_packed(
+    x_packed,
+    k: int,
+    *,
+    d: int,
+    n_iter: int = 15,
+    seed: int = 0,
+    metric: str = "cham",
+    block: int = 2048,
+    batch_rows: int | None = None,
+    mode: str | None = None,
+) -> KmodeResult:
+    """k-medoids over PACKED Cabin sketches — the primary clustering engine.
+
+    `x_packed` is an (n, d/32) int32 matrix of packed sketches; every
+    distance pass streams through repro.core.allpairs under `metric`
+    ("cham" = estimated categorical HD, "hamming" = exact sketch HD):
+    assignment is a device-resident row-argmin against the centre block,
+    medoid updates are streaming row-sums over device-gathered members —
+    no (n, k) or (m, m) float matrix is ever built on host.  The centre
+    block is allocated ONCE at the pow2 bucket of k and updated in place
+    with the valid count traced (`argmin_rows(m_valid=k)`), so a whole run
+    compiles O(log) graphs — one per pow2 member-bucket — rather than
+    reshaping and re-uploading centres per iteration.
+
+    Full-batch (`batch_rows=None`) produces labels bit-identical to the
+    host oracle (`kmode_precomputed` with a dense `dist_fn` of the same
+    metric) on the same rng sequence — including on degenerate inputs
+    (all-duplicate rows, k >= #distinct rows, k > n), property-tested in
+    tests/test_cluster.py.
+
+    Mini-batch (`batch_rows=m`) is the DELIBERATE deviation for large n
+    (DESIGN.md section 9.2): each sweep processes m-row slices, refreshing
+    each touched centre from the slice's own members immediately after
+    assigning the slice, so a medoid pass costs O(n * m / k) pair
+    distances instead of O(n^2 / k); a final full assignment pass makes
+    the returned labels consistent with the final centres.  Labels are NOT
+    bit-identical to full-batch (centres see the data in slice order) —
+    use it when n^2/k is the bottleneck, not when comparing estimators.
+    """
+    import jax.numpy as jnp  # local: keep the host paths numpy-only
+
+    from repro.core import allpairs, packing
+
+    x_dev = jnp.asarray(x_packed)
+    if x_dev.ndim != 2:
+        raise ValueError(
+            f"kmode_packed: expected (n, d/32) packed rows, got {x_dev.shape}")
+    n = x_dev.shape[0]
+    _check_args(n, k, n_iter, "kmode_packed")
+    if batch_rows is not None and batch_rows < 1:
+        raise ValueError(
+            f"kmode_packed: batch_rows must be >= 1, got {batch_rows}")
+
+    # device-resident centre block: pow2-padded once, valid count traced
+    kpad = packing.pow2_bucket(k)
+    centers = jnp.zeros((kpad, x_dev.shape[1]), x_dev.dtype)
+    medoid_rows = np.zeros(k, np.int64)
+
+    def dist_to(i: int) -> np.ndarray:
+        # distances of every row to row i: argmin over a 1-valid-row block
+        _, vals = allpairs.argmin_rows(x_dev, x_dev[i][None, :], d=d,
+                                       metric=metric, block=block, mode=mode)
+        return vals
+
+    def set_center(c: int, i: int) -> None:
+        nonlocal centers
+        medoid_rows[c] = i
+        centers = centers.at[c].set(x_dev[i])
+
+    def assign_rows(rows_dev) -> np.ndarray:
+        lab, _ = allpairs.argmin_rows(rows_dev, centers, d=d, metric=metric,
+                                      block=block, mode=mode, m_valid=k)
+        return lab.astype(np.int64)
+
+    def totals(members: np.ndarray) -> np.ndarray:
+        sub = packing.padded_take(x_dev, members)
+        out = allpairs.rowsum(sub, d=d, metric=metric, block=block, mode=mode,
+                              m_valid=len(members))
+        return out[: len(members)]
+
+    if batch_rows is None:
+        labels, medoids = _kmedoids_run(
+            n, k, n_iter, seed, dist_to=dist_to, set_center=set_center,
+            assign=lambda: assign_rows(x_dev), totals=totals)
+    else:
+        medoids = _seed_and_install(n, k, seed, dist_to, set_center)
+        for _ in range(n_iter):
+            for lo in range(0, n, batch_rows):
+                hi = min(lo + batch_rows, n)
+                lab = assign_rows(x_dev[lo:hi])
+                # per-batch centre refresh: each touched centre re-elects
+                # its medoid from THIS slice's members only
+                for c in np.unique(lab):
+                    members = lo + np.flatnonzero(lab == c)
+                    midx = int(members[int(np.argmin(totals(members)))])
+                    medoids[c] = midx
+                    set_center(int(c), midx)
+        labels = assign_rows(x_dev)  # consistent with the final centres
+    return KmodeResult(labels, np.asarray(medoids, np.int64),
+                       np.asarray(centers[:k]))
 
 
 def kmode_precomputed(
@@ -100,78 +362,62 @@ def kmode_precomputed(
     seed: int = 0,
     *,
     sketch_dim: int | None = None,
+    metric: str = "cham",
     block: int = 2048,
+    batch_rows: int | None = None,
+    mode: str | None = None,
 ) -> np.ndarray:
     """k-medoids-flavoured variant: centres are member rows, assignment is
-    nearest-centre under an estimated distance.
+    nearest-centre under an estimated distance.  Returns labels (n,) int64.
 
     Two modes:
 
     * `sketch_dim` given — x_repr is a matrix of PACKED Cabin sketches
-      (N, d/32) int32 and every distance pass (seeding, assignment, medoid
-      update) runs on the streaming all-pairs engine
-      (repro.core.allpairs) under the Cham metric: assignment is a
-      device-resident row-argmin against the centre block, medoid updates
-      are streaming row-sums — no (N, k) or (s, s) float matrix is built on
-      host.  `dist_fn` is ignored and may be None.  This is the path the
-      packed Pallas kernels drive on TPU.
+      (n, d/32) int32 and the run is delegated to `kmode_packed` (the
+      device engine above); `dist_fn` is ignored and may be None.
+      `metric` / `block` / `batch_rows` / `mode` pass through.
 
-    * `sketch_dim` None — legacy oracle mode: `dist_fn(a, b) -> (len(a),
-      len(b))` distance matrix, evaluated on host per iteration (kept for
-      arbitrary representations and as the equivalence reference).
+    * `sketch_dim` None — host-oracle mode: `dist_fn(a, b) -> (len(a),
+      len(b))` distance matrix, evaluated on host per pass (kept for
+      arbitrary representations and as the equivalence reference the
+      device engine is pinned against).  `batch_rows` is not supported
+      here: mini-batching is a deviation the ORACLE must not share, or
+      the reference would drift with it.
 
     Both modes draw the identical rng sequence, so on the same
     representation they produce the same clustering.
     """
-    n = x_repr.shape[0]
-    use_engine = sketch_dim is not None
-    if use_engine:
-        from repro.core import allpairs  # local: keep numpy-only import path
+    n = np.shape(x_repr)[0]
+    _check_args(n, k, n_iter, "kmode_precomputed")
+    if sketch_dim is not None:
+        return np.asarray(kmode_packed(
+            x_repr, k, d=sketch_dim, n_iter=n_iter, seed=seed, metric=metric,
+            block=block, batch_rows=batch_rows, mode=mode).labels)
+    if dist_fn is None:
+        raise ValueError(
+            "kmode_precomputed: dist_fn is required without sketch_dim")
+    if batch_rows is not None:
+        raise ValueError("kmode_precomputed: batch_rows requires the packed "
+                         "engine (pass sketch_dim=...)")
 
-        def col_dist(rows: np.ndarray, center: np.ndarray) -> np.ndarray:
-            # distances of `rows` to ONE centre row: (len(rows),) float
-            _, vals = allpairs.argmin_rows(rows, center[None, :],
-                                           d=sketch_dim, block=block)
-            return vals
+    x_repr = np.asarray(x_repr)
+    centers = np.zeros((k,) + x_repr.shape[1:], dtype=x_repr.dtype)
 
-    rng = np.random.default_rng(seed)
-    center_idx = [int(rng.integers(n))]
-    if use_engine:
-        d = col_dist(x_repr, x_repr[center_idx[0]]).astype(np.float64)
-    else:
-        d = np.asarray(dist_fn(x_repr, x_repr[center_idx]))[:, 0].astype(np.float64)
-    for _ in range(1, k):
-        p = np.maximum(d, 0)
-        p = p / max(p.sum(), 1e-12)
-        center_idx.append(int(rng.choice(n, p=p)))
-        if use_engine:
-            d = np.minimum(d, col_dist(x_repr, x_repr[center_idx[-1]]))
-        else:
-            d = np.minimum(
-                d, np.asarray(dist_fn(x_repr, x_repr[[center_idx[-1]]]))[:, 0])
-    centers = x_repr[np.asarray(center_idx)]
-    labels = np.zeros(n, dtype=np.int64)
-    for _ in range(n_iter):
-        if use_engine:
-            new_labels, _ = allpairs.argmin_rows(x_repr, centers,
-                                                 d=sketch_dim, block=block)
-            new_labels = new_labels.astype(np.int64)
-        else:
-            dist = np.asarray(dist_fn(x_repr, centers))
-            new_labels = dist.argmin(axis=1)
-        if np.array_equal(new_labels, labels):
-            break
-        labels = new_labels
-        # medoid update: member minimising total distance to cluster members
-        for c in range(k):
-            members = np.where(labels == c)[0]
-            if len(members) == 0:
-                continue
-            if use_engine:
-                totals = allpairs.rowsum(x_repr[members], d=sketch_dim,
-                                         block=block)
-            else:
-                sub = np.asarray(dist_fn(x_repr[members], x_repr[members]))
-                totals = sub.sum(axis=1)
-            centers[c] = x_repr[members[totals.argmin()]]
+    def dist_to(i: int) -> np.ndarray:
+        return np.asarray(dist_fn(x_repr, x_repr[[i]]))[:, 0]
+
+    def set_center(c: int, i: int) -> None:
+        centers[c] = x_repr[i]
+
+    def assign() -> np.ndarray:
+        dist = np.asarray(dist_fn(x_repr, centers))
+        return dist.argmin(axis=1).astype(np.int64)
+
+    def totals(members: np.ndarray) -> np.ndarray:
+        sub = np.asarray(dist_fn(x_repr[members], x_repr[members]))
+        return sub.sum(axis=1)
+
+    labels, _ = _kmedoids_run(n, k, n_iter, seed, dist_to=dist_to,
+                              set_center=set_center, assign=assign,
+                              totals=totals)
     return labels

@@ -359,6 +359,21 @@ class QueryEngine:
             sk, sel, self.d, metric=self.metric))[:q, :n_sel]
         return sel_ids, dists
 
+    def cluster(self, k: int, **kwargs) -> "object":
+        """Attach a `repro.cluster.ClusterIndex` maintaining k-medoid
+        centres and per-row labels over this engine's store: fresh adds are
+        assigned to their nearest centre as they arrive (through this
+        engine's own serving path), removes update the per-cluster
+        bookkeeping, and `refit()` re-clusters the live membership with the
+        device k-mode engine.  Keyword args (seed/n_iter/block/refit_every)
+        forward to ClusterIndex; see repro/cluster/online.py.  The store
+        keeps a strong reference to the attached index — `detach()` an old
+        one before attaching a replacement."""
+        from repro.cluster import ClusterIndex  # local: repro.cluster
+        # imports this module, so the hook resolves the cycle lazily
+
+        return ClusterIndex(self, k, **kwargs)
+
     def sync_layout(self) -> TieredLayout:
         """Sync the serving layout to the store's current version and
         return it — the maintenance the next query would otherwise pay

@@ -124,6 +124,7 @@ class SketchStore:
         self._n_removed_total = 0  # monotone; lets layouts skip mask work
         self._placement = None  # opt-in sharding callback (see `place`)
         self._gather_cache: tuple | None = None
+        self._listeners: list = []  # mutation observers (see `subscribe`)
 
     # -- introspection ------------------------------------------------------
 
@@ -206,6 +207,31 @@ class SketchStore:
         return (slot < self._size and self._ids[slot] == id_
                 and bool(self._alive[slot]))
 
+    # -- mutation observers -------------------------------------------------
+
+    def subscribe(self, callback) -> None:
+        """Register `callback(event, ids, slots)` to run after every
+        mutation commits — the hook per-row SIDECARS (repro.cluster's
+        ClusterIndex labels, or any structure keyed on membership) use to
+        stay in sync even when the store is mutated directly, not through
+        them.  Events: "add" (ids/slots of the appended rows — the slots
+        are valid immediately, so the callback may gather the new sketches
+        before any later append donates the buffer), "remove" (ids/slots
+        tombstoned), "compact" (empty arrays; slot identity changed — read
+        fresh state from the store).  Callbacks run synchronously inside
+        the mutation, in subscription order; they must not mutate the
+        store re-entrantly.  Pair with `unsubscribe` when the observer is
+        discarded — the store holds a strong reference."""
+        self._listeners.append(callback)
+
+    def unsubscribe(self, callback) -> None:
+        """Remove a `subscribe`d callback (ValueError if absent)."""
+        self._listeners.remove(callback)
+
+    def _notify(self, event: str, ids: np.ndarray, slots: np.ndarray) -> None:
+        for cb in self._listeners:
+            cb(event, ids, slots)
+
     # -- mutation -----------------------------------------------------------
 
     def _bump(self) -> None:
@@ -266,6 +292,8 @@ class SketchStore:
         self._n_alive += k
         self._next_id += k
         self._bump()
+        self._notify("add", new_ids,
+                     np.arange(self._size - k, self._size, dtype=np.int64))
         return new_ids
 
     def remove(self, ids) -> int:
@@ -283,6 +311,7 @@ class SketchStore:
         self._n_alive -= len(ids)
         self._n_removed_total += len(ids)
         self._bump()
+        self._notify("remove", ids, slots.astype(np.int64))
         return len(ids)
 
     def compact(self) -> None:
@@ -304,6 +333,7 @@ class SketchStore:
         self._n_alive = n
         self._epoch += 1  # slots renumbered: layouts must rebuild, not sync
         self._bump()
+        self._notify("compact", np.zeros(0, np.int64), np.zeros(0, np.int64))
 
     # -- query-side views ---------------------------------------------------
 

@@ -1,0 +1,443 @@
+"""Clustering subsystem (DESIGN.md section 9): the k-mode degenerate-input
+regressions, device-engine vs host-oracle bit-parity, the compile-cache
+discipline of the packed engine, and the online ClusterIndex contracts
+(incremental assignment, per-cluster bookkeeping, refit invariance,
+snapshot round-trips)."""
+
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.cluster import ClusterIndex
+from repro.core import CabinParams, allpairs
+from repro.core.cabin import sketch_dense
+from repro.core.cham import cham_matrix, hamming_matrix_exact
+from repro.core.kmode import (_modes, _seed_indices, kmode, kmode_packed,
+                              kmode_precomputed)
+from repro.index import QueryEngine
+
+N_DIMS = 400
+D = 256
+P = CabinParams.create(N_DIMS, D, seed=1)
+
+_cham_jit = jax.jit(cham_matrix, static_argnums=2)
+_ham_jit = jax.jit(hamming_matrix_exact)
+
+
+def _rows(n, seed):
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, N_DIMS), np.int32)
+    for i in range(n):
+        density = int(rng.integers(15, 60))
+        idx = rng.choice(N_DIMS, size=density, replace=False)
+        x[i, idx] = rng.integers(1, 8, size=density)
+    return x
+
+
+X = _rows(96, seed=0)
+SK = np.asarray(sketch_dense(P, jnp.asarray(X)))
+
+
+def _dist_fn(metric):
+    """Host-oracle dense distance callback of the engine's metric."""
+    if metric == "cham":
+        return lambda a, b: np.asarray(
+            _cham_jit(jnp.asarray(a), jnp.asarray(b), D))
+    return lambda a, b: np.asarray(
+        _ham_jit(jnp.asarray(a), jnp.asarray(b))).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# seeding / degenerate-input regressions (the primary bugfixes)
+# ---------------------------------------------------------------------------
+
+
+def test_kmode_all_duplicates_does_not_crash():
+    """An all-duplicates matrix collapses the k-means++ min-distance vector
+    to zero; the seeding used to die with 'Probabilities do not sum to 1.'
+    and must now fall back to uniform sampling."""
+    x = np.repeat(X[:1], 12, axis=0)
+    labels, centers = kmode(x, 3, n_iter=4)
+    assert labels.shape == (12,)
+    # every row is identical, so every row lands in one cluster
+    assert len(np.unique(labels)) == 1
+    np.testing.assert_array_equal(centers[labels[0]], x[0])
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_kmode_precomputed_all_duplicates_both_modes(metric):
+    sk = np.repeat(SK[:1], 10, axis=0)
+    oracle = kmode_precomputed(_dist_fn(metric), sk, k=4, seed=3, n_iter=3)
+    engine = kmode_precomputed(None, sk, k=4, seed=3, n_iter=3,
+                               sketch_dim=D, metric=metric)
+    np.testing.assert_array_equal(oracle, engine)
+    assert len(np.unique(oracle)) == 1
+
+
+def test_kmode_k_exceeds_n_rows():
+    """k > n: the seeding pool runs dry and must reuse rows (duplicate
+    centres are unavoidable) instead of crashing."""
+    labels, _ = kmode(X[:3], 5, n_iter=2)
+    assert labels.shape == (3,) and labels.max() < 5
+    for metric in ("cham", "hamming"):
+        oracle = kmode_precomputed(_dist_fn(metric), SK[:3], k=5, seed=1)
+        engine = kmode_precomputed(None, SK[:3], k=5, seed=1, sketch_dim=D,
+                                   metric=metric)
+        np.testing.assert_array_equal(oracle, engine)
+
+
+def test_seeding_returns_distinct_indices():
+    """Whenever k <= n the seeding must return k DISTINCT medoid indices —
+    sampling with replacement used to let a concentrated p elect the same
+    medoid twice (a permanently dead cluster).  Exercised on duplicate-heavy
+    data where the old path crashed or repeated."""
+    sk = np.concatenate([np.repeat(SK[:1], 5, axis=0),
+                         np.repeat(SK[1:2], 5, axis=0),
+                         np.repeat(SK[2:3], 5, axis=0)])
+    ref = np.asarray(_cham_jit(jnp.asarray(sk), jnp.asarray(sk), D))
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        idx = _seed_indices(len(sk), 7, rng,
+                            lambda i: ref[:, i].astype(np.float64))
+        assert len(np.unique(idx)) == 7  # distinct even past the 3 groups
+
+
+def test_modes_empty_cluster_keeps_previous_center():
+    """An empty cluster's centre must stay put — the all-zeros placeholder
+    it used to get sits at the low-category corner and attracts rows on the
+    next assignment pass."""
+    x = np.asarray([[3, 3, 3], [3, 3, 3], [1, 1, 1]], np.int32)
+    labels = np.asarray([0, 0, 2])  # cluster 1 is empty
+    prev = np.asarray([[9, 9, 9], [7, 7, 7], [5, 5, 5]], np.int32)
+    centers = _modes(x, labels, 3, 9, prev_centers=prev)
+    np.testing.assert_array_equal(centers[1], prev[1])  # unchanged
+    np.testing.assert_array_equal(centers[0], [3, 3, 3])
+    np.testing.assert_array_equal(centers[2], [1, 1, 1])
+
+
+def test_api_boundary_validation():
+    """k >= 1, n_iter >= 1, non-empty x — clear ValueErrors instead of the
+    old `int(x.max())` crash on empty input and obscure downstream shape
+    errors for k = 0."""
+    empty = np.zeros((0, 5), np.int32)
+    for bad in (lambda: kmode(X[:4], 0),
+                lambda: kmode(X[:4], 2, n_iter=0),
+                lambda: kmode(empty, 2),
+                lambda: kmode(X[0], 2),  # 1-d input
+                lambda: kmode_precomputed(_dist_fn("cham"), SK[:4], 0),
+                lambda: kmode_precomputed(_dist_fn("cham"), SK[:4], 2,
+                                          n_iter=0),
+                lambda: kmode_precomputed(_dist_fn("cham"), SK[:0], 2),
+                lambda: kmode_precomputed(None, SK[:4], 2),  # no dist_fn
+                lambda: kmode_precomputed(_dist_fn("cham"), SK[:4], 2,
+                                          batch_rows=8),  # oracle minibatch
+                lambda: kmode_packed(SK[:4], 0, d=D),
+                lambda: kmode_packed(SK[:0], 2, d=D),
+                lambda: kmode_packed(SK[:4], 2, d=D, n_iter=0),
+                lambda: kmode_packed(SK[:4], 2, d=D, batch_rows=0)):
+        with pytest.raises(ValueError):
+            bad()
+
+
+# ---------------------------------------------------------------------------
+# device engine vs host oracle: the full-batch bit-parity contract
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**16), st.integers(1, 7))
+def test_packed_engine_equals_host_oracle(seed, k):
+    """Full-batch device labels are bit-identical to the host oracle on the
+    same rng sequence — both metrics, including duplicate-heavy inputs and
+    k >= #distinct rows (the cases that crashed before the seeding fix)."""
+    rng = np.random.default_rng(seed)
+    metric = ("cham", "hamming")[seed % 2]
+    if seed % 3 == 0:
+        # duplicate-heavy: a handful of distinct rows, many copies
+        base = SK[rng.choice(96, size=int(rng.integers(1, 6)), replace=False)]
+        sk = base[rng.integers(0, len(base), size=40)]
+    else:
+        sk = SK[rng.choice(96, size=int(rng.integers(8, 60)), replace=False)]
+    oracle = kmode_precomputed(_dist_fn(metric), sk, k=k, seed=seed % 11,
+                               n_iter=8)
+    engine = kmode_precomputed(None, sk, k=k, seed=seed % 11, n_iter=8,
+                               sketch_dim=D, metric=metric)
+    np.testing.assert_array_equal(oracle, engine)
+
+
+def test_kmode_packed_result_is_consistent():
+    """The KmodeResult invariants an online consumer relies on: medoids are
+    row indices whose rows equal the centres, labels equal a one-shot
+    assignment against those centres, and each non-empty cluster's medoid
+    belongs to it."""
+    res = kmode_packed(SK, 5, d=D, n_iter=10, seed=2)
+    np.testing.assert_array_equal(SK[res.medoids], res.centers)
+    lab, _ = allpairs.argmin_rows(SK, res.centers, d=D)
+    np.testing.assert_array_equal(res.labels, lab)
+    for c in range(5):
+        if (res.labels == c).any():
+            assert res.labels[res.medoids[c]] == c
+
+
+def test_labels_match_final_centers_even_when_unconverged():
+    """An n_iter-exhausted run must still return labels assigned against
+    the RETURNED centres (the loop's last medoid update used to land after
+    the last assignment), and k=1 must actually elect its medoid (the
+    zero-initialised label state used to read an all-zeros first
+    assignment as instant convergence)."""
+    for n_iter in (1, 2):
+        res = kmode_packed(SK, 5, d=D, n_iter=n_iter, seed=0)
+        lab, _ = allpairs.argmin_rows(SK, res.centers, d=D)
+        np.testing.assert_array_equal(res.labels, lab)
+        oracle = kmode_precomputed(_dist_fn("cham"), SK, 5, n_iter=n_iter,
+                                   seed=0)
+        np.testing.assert_array_equal(res.labels, oracle)  # parity holds
+    res1 = kmode_packed(SK, 1, d=D, n_iter=5, seed=2)
+    totals = allpairs.rowsum(SK, d=D)
+    assert res1.medoids[0] == int(np.argmin(totals))
+    # the host kmode path shares the fix: k=1 centres are the attribute
+    # modes of the whole data, not the random k-means++ seed row
+    from repro.core.kmode import _modes
+    labels1, centers1 = kmode(X[:20], 1, n_iter=4)
+    want = _modes(X[:20], np.zeros(20, np.int64), 1, int(X[:20].max()))
+    np.testing.assert_array_equal(centers1, want)
+
+
+def test_minibatch_mode_runs_and_is_deterministic():
+    """Mini-batch is the documented deviation: not bit-identical to
+    full-batch, but deterministic in (data, seed) and consistent — the
+    returned labels are a one-shot assignment against the final centres."""
+    a = kmode_packed(SK, 4, d=D, n_iter=4, seed=5, batch_rows=24)
+    b = kmode_packed(SK, 4, d=D, n_iter=4, seed=5, batch_rows=24)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(a.centers, b.centers)
+    lab, _ = allpairs.argmin_rows(SK, a.centers, d=D)
+    np.testing.assert_array_equal(a.labels, lab)
+    assert a.labels.shape == (96,) and a.labels.max() < 4
+
+
+def test_kmode_packed_compile_cache_stays_bounded():
+    """The centre block is pow2-padded once with a traced valid count and
+    member gathers are pow2-bucketed, so a whole multi-iteration run
+    compiles O(log n) graphs — NOT one per iteration or per cluster size —
+    and an identical re-run compiles nothing (same discipline as
+    test_argmin_rows_bucketed_no_recompile)."""
+    kw = dict(d=D, n_iter=12, seed=7)
+    before_a = allpairs._argmin_rows_impl._cache_size()
+    before_r = allpairs._rowsum_impl._cache_size()
+    kmode_packed(SK, 5, **kw)
+    grow_a = allpairs._argmin_rows_impl._cache_size() - before_a
+    grow_r = allpairs._rowsum_impl._cache_size() - before_r
+    # 96 rows -> member buckets within {8,16,32,64,128}; centre block is one
+    # 8-row bucket.  5 clusters x 12 iterations would be 60 without bucketing.
+    assert grow_a <= 3, grow_a
+    assert grow_r <= 5, grow_r
+    mid_a = allpairs._argmin_rows_impl._cache_size()
+    mid_r = allpairs._rowsum_impl._cache_size()
+    kmode_packed(SK, 5, **kw)  # identical replay: zero new graphs
+    assert allpairs._argmin_rows_impl._cache_size() == mid_a
+    assert allpairs._rowsum_impl._cache_size() == mid_r
+
+
+# ---------------------------------------------------------------------------
+# ClusterIndex: online centres over the live index
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_index_bootstrap_and_incremental_assignment():
+    eng = QueryEngine(P, cache_entries=4)
+    ci = eng.cluster(4, seed=0, n_iter=8)
+    assert not ci.fitted
+    ids = eng.add_dense(X[:48])  # first add bootstraps a fit
+    assert ci.fitted and ci.n_refits == 1
+    ref = kmode_packed(SK[:48], 4, d=D, n_iter=8, seed=0)
+    lab_ids, lab = ci.labels()
+    np.testing.assert_array_equal(lab_ids, ids)
+    np.testing.assert_array_equal(lab, ref.labels)
+    np.testing.assert_array_equal(ci.counts, np.bincount(ref.labels,
+                                                         minlength=4))
+    # incremental adds (through the ENGINE, not the wrapper: the store hook
+    # must observe them) are assigned against the current centres exactly
+    # as argmin would
+    ids2 = eng.add_dense(X[48:64])
+    want, _ = allpairs.argmin_rows(SK[48:64], ref.centers, d=D)
+    np.testing.assert_array_equal(ci.label_of(ids2), want)
+    assert ci.counts.sum() == 64
+    # per-cluster weights mirror the store's sketch weights
+    store_w = eng.store.weights()
+    _, all_lab = ci.labels()
+    np.testing.assert_array_equal(
+        ci.weights, np.bincount(all_lab, weights=store_w,
+                                minlength=4).astype(np.int64))
+    # the wrapper returns (ids, labels) in one call
+    ids3, lab3 = ci.add_dense(X[64:70])
+    np.testing.assert_array_equal(lab3, ci.label_of(ids3))
+    # read-only classification agrees with what ingest would assign
+    np.testing.assert_array_equal(ci.assign(X[64:70]), lab3)
+    np.testing.assert_array_equal(ci.assign_packed(SK[64:70]), lab3)
+
+
+def test_cluster_index_remove_compact_bookkeeping():
+    eng = QueryEngine(P)
+    ci = ClusterIndex(eng, 3, seed=1, n_iter=6)
+    ids = eng.add_dense(X[:40])
+    lab_before = ci.label_of(ids)
+    eng.remove(ids[5:15])
+    want = np.bincount(np.delete(lab_before, np.s_[5:15]), minlength=3)
+    np.testing.assert_array_equal(ci.counts, want)
+    with pytest.raises(KeyError):
+        ci.label_of(ids[7])
+    # compaction renumbers slots but not ids: labels survive untouched
+    lab_ids0, lab0 = ci.labels()
+    eng.compact()
+    lab_ids1, lab1 = ci.labels()
+    np.testing.assert_array_equal(lab_ids0, lab_ids1)
+    np.testing.assert_array_equal(lab0, lab1)
+    assert ci.counts.sum() == 30
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**16), st.lists(st.integers(1, 14), min_size=1,
+                                       max_size=5))
+def test_cluster_refit_invariant_across_histories(seed, chunks):
+    """The acceptance property: same final membership => same centres and
+    labels after refit, no matter the add/remove/compact history (and after
+    a snapshot round-trip)."""
+    rng = np.random.default_rng(seed)
+    eng = QueryEngine(P)
+    ci = ClusterIndex(eng, 3, seed=2, n_iter=6)
+    pos = 0
+    for c in chunks:
+        take = X[pos: pos + c]
+        if len(take) == 0:
+            break
+        eng.add_dense(take)
+        pos += len(take)
+        alive = eng.ids()
+        if len(alive) > 3 and rng.random() < 0.6:
+            kk = int(rng.integers(1, max(2, len(alive) // 3)))
+            eng.remove(rng.choice(alive, size=kk, replace=False))
+        if rng.random() < 0.3:
+            eng.compact()
+    survivors = eng.ids()
+    if len(survivors) == 0:
+        return
+    lab = ci.refit()
+    # fresh build from the survivors: same membership, trivial history
+    fresh_eng = QueryEngine(P)
+    fresh = ClusterIndex(fresh_eng, 3, seed=2, n_iter=6)
+    fresh_eng.add_dense(X[survivors])
+    flab = fresh.refit()
+    np.testing.assert_array_equal(lab, flab)
+    np.testing.assert_array_equal(ci.centers, fresh.centers)
+    np.testing.assert_array_equal(ci.counts, fresh.counts)
+    # snapshot round-trip: the restored index refits identically too
+    with tempfile.TemporaryDirectory() as td:
+        ci.save(td, step=1)
+        back = ClusterIndex.restore(td)
+    np.testing.assert_array_equal(back.labels()[1], ci.labels()[1])
+    np.testing.assert_array_equal(back.refit(), lab)
+
+
+def test_cluster_index_save_restore_exact_state():
+    """Restore reproduces the EXACT live state — including labels assigned
+    incrementally since the last refit, which a re-fit would not — and the
+    restored index keeps serving mutations."""
+    eng = QueryEngine(P)
+    ci = ClusterIndex(eng, 4, seed=0, n_iter=8)
+    eng.add_dense(X[:50])
+    eng.add_dense(X[50:70])  # incremental, post-refit labels
+    assert ci.n_refits == 1 and ci.mutations_since_refit == 20
+    with tempfile.TemporaryDirectory() as td:
+        ci.save(td, step=2)
+        back = ClusterIndex.restore(td)
+    np.testing.assert_array_equal(back.labels()[0], ci.labels()[0])
+    np.testing.assert_array_equal(back.labels()[1], ci.labels()[1])
+    np.testing.assert_array_equal(back.counts, ci.counts)
+    np.testing.assert_array_equal(back.weights, ci.weights)
+    np.testing.assert_array_equal(back.centers, ci.centers)
+    np.testing.assert_array_equal(back.medoid_ids, ci.medoid_ids)
+    assert back.mutations_since_refit == 20 and back.n_refits == 1
+    # the restored store hook is live: new rows get labels on arrival
+    ids, lab = back.add_dense(X[70:76])
+    want, _ = allpairs.argmin_rows(SK[70:76], ci.centers, d=D)
+    np.testing.assert_array_equal(lab, want)
+
+
+def test_cluster_index_refit_every_and_empty_store():
+    eng = QueryEngine(P)
+    ci = ClusterIndex(eng, 2, seed=0, n_iter=4, refit_every=10)
+    eng.add_dense(X[:8])  # bootstrap fit
+    assert ci.n_refits == 1
+    eng.add_dense(X[8:20])  # 12 mutations >= 10: auto-refit
+    assert ci.n_refits == 2 and ci.mutations_since_refit == 0
+    # draining the store resets to the unfitted state; the next add
+    # bootstraps again
+    eng.remove(eng.ids())
+    ci.refit()
+    assert not ci.fitted and ci.counts.sum() == 0
+    with pytest.raises(RuntimeError, match="no centres"):
+        ci.assign(X[:2])
+    eng.add_dense(X[:6])
+    assert ci.fitted and ci.counts.sum() == 6
+    # validation
+    with pytest.raises(ValueError):
+        ClusterIndex(QueryEngine(P), 0)
+    with pytest.raises(ValueError):
+        ClusterIndex(QueryEngine(P), 2, n_iter=0)
+    with pytest.raises(ValueError):
+        ClusterIndex(QueryEngine(P), 2, refit_every=0)
+
+
+def test_cluster_index_detach_and_empty_assign():
+    """detach() stops the store hook (no double bookkeeping after
+    attaching a replacement index), and assign/assign_packed handle an
+    empty query batch instead of crashing on the (0, 0) topk result."""
+    eng = QueryEngine(P)
+    ci = eng.cluster(3, seed=0, n_iter=4)
+    eng.add_dense(X[:16])
+    assert ci.assign(X[:0]).shape == (0,)
+    assert ci.assign_packed(SK[:0]).shape == (0,)
+    assert ci.label_of([]).shape == (0,)
+    ci.detach()
+    n_before = len(ci.labels()[0])
+    eng.add_dense(X[16:24])  # no longer observed
+    assert len(ci.labels()[0]) == n_before
+    ci2 = eng.cluster(3, seed=1, n_iter=4)  # replacement tracks alone
+    eng.add_dense(X[24:30])
+    assert len(ci2.labels()[0]) == 30 and len(ci.labels()[0]) == n_before
+
+
+def test_cluster_index_restore_keeps_refit_every_and_mode():
+    """save/restore round-trips the auto-refit policy (it used to come
+    back disabled) and the centre engine inherits the parent's tile mode."""
+    eng = QueryEngine(P, mode="popcount")
+    ci = ClusterIndex(eng, 2, seed=0, n_iter=4, refit_every=7)
+    eng.add_dense(X[:12])
+    assert ci._centre_engine.mode == "popcount"
+    with tempfile.TemporaryDirectory() as td:
+        ci.save(td, step=1)
+        back = ClusterIndex.restore(td)
+    assert back.refit_every == 7
+    back.engine.add_dense(X[12:20])  # 8 mutations >= 7: auto-refit fires
+    assert back.n_refits == ci.n_refits + 1
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_cluster_index_metric_follows_engine(metric):
+    """The index clusters under the ENGINE's metric: refit labels equal the
+    device engine run with that metric on the same membership."""
+    eng = QueryEngine(P, metric=metric)
+    ci = ClusterIndex(eng, 3, seed=4, n_iter=6)
+    eng.add_dense(X[:32])
+    ref = kmode_packed(SK[:32], 3, d=D, n_iter=6, seed=4, metric=metric)
+    np.testing.assert_array_equal(ci.labels()[1], ref.labels)
+    ids2 = eng.add_dense(X[32:40])
+    want, _ = allpairs.argmin_rows(SK[32:40], ref.centers, d=D,
+                                   metric=metric)
+    np.testing.assert_array_equal(ci.label_of(ids2), want)
