@@ -18,7 +18,13 @@ categorical rows (vocab 32768, ~64 nnz/row — BoW-document-shaped):
     through a full O(N log N) layout rebuild.  Reports `qps_mixed` at both
     scales plus the query-after-single-add latency under the tiered layout
     vs the rebuild-per-mutation baseline (merge_ratio=0); the speedup is
-    asserted >= 50x at N = 64k.
+    asserted >= 50x at N = 64k;
+  * spec migration (`bench_migration`) — what a drift-triggered lazy
+    re-sketch costs (DESIGN.md section 10): `migration_rows_per_s` for
+    draining the whole corpus to a wider sketch, and topk QPS measured
+    mid-flight (cross-version serving over src/dst/fresh tiers) vs after
+    publish, so the serving tax of an in-flight migration is a recorded
+    number rather than folklore.
 """
 
 from __future__ import annotations
@@ -220,4 +226,56 @@ def bench_mixed_traffic(n_small: int = 4096, n_large: int = 65536,
         assert speedup >= speedup_bar, (
             f"layout sync after add only {speedup:.1f}x faster than the "
             f"rebuild path (bar {speedup_bar}x)")
+    return summary
+
+
+def bench_migration(n: int = 32768, d_new: int = 1024,
+                    batch_rows: int = 4096, q_batch: int = 8,
+                    k: int = 10) -> dict:
+    """Lazy re-sketch migration throughput + mid-flight serving cost.
+
+    Builds an N-row index at the base spec (keep_raw=True: migration needs
+    the raw archive), then drives a manual migration to `d_new` and times
+    the batch drain — `migration_rows_per_s` is the headline number the
+    trajectory tracks.  A second engine is parked mid-migration (src, dst
+    and fresh tiers all populated) to measure the cross-version topk QPS
+    against the post-publish QPS on the same membership: the ratio is the
+    price of querying DURING a migration instead of after it.
+    """
+    summary: dict = {"n": n, "d_new": d_new, "batch_rows": batch_rows}
+    idx, val = _sparse_rows(n, seed=2)
+    q_idx, q_val = idx[:q_batch], val[:q_batch]
+
+    eng = _build(idx, val, keep_raw=True)
+    eng.migrate(d=d_new, drive="manual", batch_rows=batch_rows)
+    eng.migration_step()  # untimed: compiles the per-batch re-sketch graph
+    t0 = time.perf_counter()
+    while eng.migration_step():
+        pass
+    t_mig = time.perf_counter() - t0
+    assert not eng.migrating and eng.d == d_new and len(eng) == n
+    rows_timed = n - batch_rows
+    summary["migration_rows_per_s"] = rows_timed / t_mig
+    emit("index.migrate", t_mig * 1e6 / max(rows_timed, 1),
+         f"{rows_timed / t_mig:.0f} rows/s;d={d_new}")
+
+    # --- serving mid-flight vs post-publish -------------------------------
+    eng2 = _build(idx, val, keep_raw=True)
+    eng2.migrate(d=d_new, drive="manual", batch_rows=batch_rows)
+    eng2.migration_step()
+    eng2.add_sparse(idx[:4], val[:4])  # populate the fresh tier too
+    eng2.topk((q_idx, q_val), k)  # warm the three-tier merge graphs
+    t_mid, (ids, _) = timeit(lambda: eng2.topk((q_idx, q_val), k), repeat=3)
+    assert ids.shape == (q_batch, k)
+    summary["qps_mid_migration"] = q_batch / t_mid
+    emit("index.query_mid_migration", t_mid * 1e6 / q_batch,
+         f"qps={q_batch / t_mid:.1f};k={k}")
+
+    eng2.migrate_all()
+    eng2.topk((q_idx, q_val), k)
+    t_post, _ = timeit(lambda: eng2.topk((q_idx, q_val), k), repeat=3)
+    summary["qps_post_migration"] = q_batch / t_post
+    summary["mid_over_post_query_cost"] = t_mid / t_post
+    emit("index.query_post_migration", t_post * 1e6 / q_batch,
+         f"qps={q_batch / t_post:.1f};mid_cost_ratio={t_mid / t_post:.2f}")
     return summary

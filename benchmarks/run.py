@@ -21,7 +21,7 @@ import traceback
 # suites whose results feed the BENCH_kernels.json perf trajectory
 _TRAJECTORY_SUITES = ("kernel_packed", "kernel_cham", "kernel_sketch",
                       "kernel_sparse_sketch", "dedup", "dedup_streaming",
-                      "index", "index_mixed", "cluster")
+                      "index", "index_mixed", "index_migrate", "cluster")
 
 # tiny-size overrides for --smoke: exercise every trajectory suite's wiring
 # (sketch -> kernels -> engine -> index) in seconds on a bare CPU runner
@@ -36,6 +36,7 @@ _SMOKE_KWARGS = {
                   ratio_bar=None),
     "index_mixed": dict(n_small=256, n_large=1024, q_batch=4, rounds=3,
                         churn=16, speedup_bar=None),
+    "index_migrate": dict(n=512, d_new=256, batch_rows=128, q_batch=4),
     "cluster": dict(n_small=256, n_large=1024, k=4, n_iter=2,
                     oracle_iters=1, batch_rows=256, speedup_bar=None),
 }
@@ -95,6 +96,7 @@ def main() -> None:
         ("dedup_streaming", bench_dedup.dedup_streaming_vs_blocked),
         ("index", bench_index.bench_index),
         ("index_mixed", bench_index.bench_mixed_traffic),
+        ("index_migrate", bench_index.bench_migration),
         ("cluster", bench_cluster.bench_cluster),
     ]
     only = None

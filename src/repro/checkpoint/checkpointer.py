@@ -1,16 +1,29 @@
 """Checkpointing: sharded-tree save/restore with async writes, retention,
-and elastic resharding across meshes.
+integrity verification, and elastic resharding across meshes.
 
 Layout per step:  <dir>/step_<n>/arrays.npz  +  meta.json
-Arrays are keyed by their tree path; meta.json stores the path list, shapes,
-dtypes and step.  In this single-controller container each checkpoint holds
-the full (host-gathered) arrays; on a multi-host deployment `save` is called
-with each host's addressable shards and the same layout holds per-host files
+Arrays are keyed by their tree path; meta.json stores the path list, and a
+per-array integrity record (CRC32 of the raw bytes, shape, dtype) written at
+save and verified at restore.  A mismatch, truncation, or unreadable file
+raises `CheckpointCorruptError` naming the step and the array key — and
+`restore(step=None)` falls back to the newest INTACT step instead of dying
+on a torn latest one, so one bad write never takes recovery down with it.
+
+In this single-controller container each checkpoint holds the full
+(host-gathered) arrays; on a multi-host deployment `save` is called with
+each host's addressable shards and the same layout holds per-host files
 (process_index suffix) — the restore/reshard path below is identical either
 way because restore produces host arrays that are device_put under the
 TARGET mesh's shardings.  That device_put-with-new-shardings IS elastic
 resharding: a checkpoint written under mesh A (e.g. 16x16) restores cleanly
 onto mesh B (e.g. 2x16x16 or a degraded 8x16) — covered by tests.
+
+Crash safety: writes land in a `.tmp_step_<n>` staging directory and are
+published by one atomic os.rename; a crash mid-save leaves only the staging
+dir, which the next Checkpointer construction sweeps.  The save path
+carries named fault-injection points (repro.runtime.faultinject) so the
+crash-matrix test can kill it at every stage and assert the published-state
+invariant rather than assume it.
 """
 
 from __future__ import annotations
@@ -21,9 +34,31 @@ import re
 import shutil
 import threading
 import time
+import zipfile
+import zlib
 
 import jax
 import numpy as np
+
+from repro.runtime import faultinject
+
+# the save path's crash points, in execution order (see module docstring)
+_CP_TMP_WRITTEN = faultinject.declare("checkpointer.save.tmp_written")
+_CP_ARRAYS_WRITTEN = faultinject.declare("checkpointer.save.arrays_written")
+_CP_META_WRITTEN = faultinject.declare("checkpointer.save.meta_written")
+_CP_PUBLISHED = faultinject.declare("checkpointer.save.published")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint step failed integrity verification.  Carries the step
+    and the offending array key (None when the damage is file-level, e.g. a
+    truncated archive or unreadable meta.json)."""
+
+    def __init__(self, step: int, key: str | None, reason: str):
+        where = f"step {step}" + (f", array {key!r}" if key else "")
+        super().__init__(f"corrupt checkpoint at {where}: {reason}")
+        self.step = step
+        self.key = key
 
 
 def _path_str(path) -> str:
@@ -54,6 +89,14 @@ def flat_to_tree(flat: dict[str, np.ndarray], like):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _array_record(a: np.ndarray) -> dict:
+    return {
+        "crc32": zlib.crc32(np.ascontiguousarray(a).tobytes()),
+        "shape": list(a.shape),
+        "dtype": str(a.dtype),
+    }
+
+
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
         self.directory = directory
@@ -61,6 +104,17 @@ class Checkpointer:
         self.async_save = async_save
         self._pending: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
+        self._sweep_orphans()
+
+    def _sweep_orphans(self) -> None:
+        """Delete `.tmp_step_*` staging dirs left by a crash mid-save.  A
+        crashed save can never be resumed (its writer is gone), and leaving
+        the orphan around would let a LATER save of the same step blindly
+        mix freshly written files with the corpse's."""
+        for name in os.listdir(self.directory):
+            if name.startswith(".tmp_step_"):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
 
     # -- steps --------------------------------------------------------------
     def all_steps(self) -> list[int]:
@@ -76,6 +130,17 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def latest_intact_step(self) -> int | None:
+        """Newest step that passes full integrity verification (None if no
+        step does) — what `restore(step=None)` actually resolves to."""
+        for step in reversed(self.all_steps()):
+            try:
+                self.verify(step)
+                return step
+            except CheckpointCorruptError:
+                continue
+        return None
+
     # -- save ---------------------------------------------------------------
     def save(self, step: int, tree, extra_meta: dict | None = None,
              block: bool = False) -> None:
@@ -85,19 +150,28 @@ class Checkpointer:
         def _write():
             tmp = os.path.join(self.directory, f".tmp_step_{step}")
             final = os.path.join(self.directory, f"step_{step}")
-            os.makedirs(tmp, exist_ok=True)
+            # never build on a previous attempt's staging files: stale
+            # arrays.npz/meta.json from a crashed bigger tree would survive
+            # into the published dir otherwise
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            faultinject.crash_point(_CP_TMP_WRITTEN)
             np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            faultinject.crash_point(_CP_ARRAYS_WRITTEN)
             meta = {
                 "step": step,
                 "time": time.time(),
                 "paths": sorted(flat.keys()),
+                "arrays": {k: _array_record(v) for k, v in flat.items()},
                 **(extra_meta or {}),
             }
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
+            faultinject.crash_point(_CP_META_WRITTEN)
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)  # atomic publish
+            faultinject.crash_point(_CP_PUBLISHED)
             self._gc()
 
         if self.async_save and not block:
@@ -117,22 +191,86 @@ class Checkpointer:
             shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
                           ignore_errors=True)
 
-    # -- restore ------------------------------------------------------------
-    def restore(self, like, step: int | None = None, shardings=None):
-        """Restore into the structure of `like`; device_put under `shardings`
-        (a matching tree of NamedSharding) if given — this is the elastic
-        reshard path."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+    # -- integrity ----------------------------------------------------------
+    def verify(self, step: int) -> dict[str, np.ndarray]:
+        """Load step `step` and verify it against its integrity record:
+        every recorded path present, shapes/dtypes matching, CRC32 of the
+        raw bytes equal.  Returns the verified flat arrays (so restore pays
+        one read, not two).  Raises CheckpointCorruptError naming the step
+        and the first offending array key."""
         path = os.path.join(self.directory, f"step_{step}")
-        with np.load(os.path.join(path, "arrays.npz")) as data:
-            flat = {k: data[k] for k in data.files}
-        tree = flat_to_tree(flat, like)
-        tree = jax.tree_util.tree_map(
-            lambda ref, a: np.asarray(a, dtype=ref.dtype)
-            if hasattr(ref, "dtype") else a, like, tree)
+        try:
+            with open(os.path.join(path, "meta.json")) as f:
+                meta = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruptError(step, None,
+                                         f"unreadable meta.json ({e})")
+        try:
+            with np.load(os.path.join(path, "arrays.npz")) as data:
+                flat = {k: data[k] for k in data.files}
+        except (OSError, ValueError, zipfile.BadZipFile, KeyError) as e:
+            # a truncated npz surfaces as BadZipFile or a zlib ValueError
+            # mid-member read, depending on where the bytes stop
+            raise CheckpointCorruptError(
+                step, None, f"unreadable arrays.npz ({e})")
+        records = meta.get("arrays")
+        for key in meta.get("paths", []):
+            if key not in flat:
+                raise CheckpointCorruptError(
+                    step, key, "array missing from arrays.npz")
+            if records is None:
+                continue  # pre-integrity snapshot: presence check only
+            rec, a = records.get(key), flat[key]
+            if rec is None:
+                continue
+            if list(a.shape) != rec["shape"] or str(a.dtype) != rec["dtype"]:
+                raise CheckpointCorruptError(
+                    step, key,
+                    f"shape/dtype {a.shape}/{a.dtype} != recorded "
+                    f"{tuple(rec['shape'])}/{rec['dtype']}")
+            crc = zlib.crc32(np.ascontiguousarray(a).tobytes())
+            if crc != rec["crc32"]:
+                raise CheckpointCorruptError(
+                    step, key,
+                    f"CRC32 mismatch ({crc:#010x} != {rec['crc32']:#010x})")
+        return flat
+
+    # -- restore ------------------------------------------------------------
+    def restore(self, like=None, step: int | None = None, shardings=None):
+        """Restore into the structure of `like` (or, when `like` is None,
+        return the verified flat {path: array} dict as-is); device_put under
+        `shardings` (a matching tree of NamedSharding) if given — this is
+        the elastic reshard path.
+
+        step=None restores the newest step that passes integrity
+        verification, skipping (not deleting) corrupt ones; an explicit
+        step that fails verification raises CheckpointCorruptError."""
+        if step is None:
+            steps = self.all_steps()
+            if not steps:
+                raise FileNotFoundError(f"no checkpoints in {self.directory}")
+            flat = None
+            first_err: CheckpointCorruptError | None = None
+            for s in reversed(steps):
+                try:
+                    flat, step = self.verify(s), s
+                    break
+                except CheckpointCorruptError as e:
+                    first_err = first_err or e
+            if flat is None:
+                raise CheckpointCorruptError(
+                    first_err.step, first_err.key,
+                    f"no intact step in {self.directory} "
+                    f"(newest failure: {first_err})")
+        else:
+            flat = self.verify(step)
+        if like is None:
+            tree = flat
+        else:
+            tree = flat_to_tree(flat, like)
+            tree = jax.tree_util.tree_map(
+                lambda ref, a: np.asarray(a, dtype=ref.dtype)
+                if hasattr(ref, "dtype") else a, like, tree)
         if shardings is not None:
             tree = jax.tree_util.tree_map(
                 lambda a, s: jax.device_put(a, s), tree, shardings)

@@ -3,7 +3,9 @@
 `core.kmode.kmode_packed` answers the one-shot question "cluster this
 matrix"; a serving system owns a COLLECTION that mutates between questions.
 ClusterIndex is the bridge (DESIGN.md section 9.3): it subscribes to the
-engine's `SketchStore` mutation events, so rows added through ANY path
+ENGINE's mutation events (`QueryEngine.subscribe` — the engine relays its
+stores' events and knows which store each belongs to, which matters once a
+spec migration has several in flight), so rows added through ANY path
 (engine.add_dense / add_sparse / add_packed, streaming ingest) are assigned
 to their nearest centre the moment they land, removes decrement the cluster
 bookkeeping, and compaction is a no-op (labels are keyed by external id,
@@ -34,6 +36,16 @@ Between refits, labels of rows added incrementally are path-dependent
 (each batch is assigned against the centres of its arrival moment); the
 invariance contract applies AFTER `refit()`, which is the point of having
 one.  `refit_every=n` auto-refits once n mutations accumulate.
+
+Spec migrations (DESIGN.md section 10) are survived, not merely tolerated:
+`refit` captures the medoids' RAW rows (from the engine's archive), so when
+the engine emits "migrate_start" the centres are re-sketched under the new
+spec — rows arriving mid-migration (new-spec sketches) assign against
+new-spec centres, labels/counts carry over unchanged (membership did not
+move), and a pending auto-refit is deferred to the "migrate" publish event
+(a mid-migration membership spans two sketch spaces and cannot be refit).
+A ClusterIndex whose centres predate the raw capture (e.g. restored from a
+v1 snapshot) raises at migrate_start with instructions to `refit()` first.
 """
 
 from __future__ import annotations
@@ -82,6 +94,9 @@ class ClusterIndex:
         self.refit_every = refit_every
         self._centers: np.ndarray | None = None   # (k, w) packed, host
         self._medoid_ids = np.full(self.k, -1, np.int64)
+        # medoids' raw COO rows (idx, val), captured at refit — what lets
+        # the centres be re-sketched when the engine migrates specs
+        self._center_raw: tuple[np.ndarray, np.ndarray] | None = None
         self._centre_engine: QueryEngine | None = None
         self._centre_ids = np.zeros(0, np.int64)
         # label sidecar over the ALIVE rows, ascending by external id (ids
@@ -92,16 +107,17 @@ class ClusterIndex:
         self._weights = np.zeros(self.k, np.int64)
         self.mutations_since_refit = 0
         self.n_refits = 0
-        engine.store.subscribe(self._on_store_event)
-        if len(engine.store):
+        self._refit_pending = False
+        engine.subscribe(self._on_engine_event)
+        if len(engine):
             self.refit()
 
     def detach(self) -> None:
-        """Stop observing the engine's store.  The store holds a strong
-        reference to every subscriber, so an abandoned index would keep
-        paying a k-NN assignment per add forever — detach before replacing
-        one (e.g. to change k or seed)."""
-        self.engine.store.unsubscribe(self._on_store_event)
+        """Stop observing the engine.  The engine holds a strong reference
+        to every subscriber, so an abandoned index would keep paying a k-NN
+        assignment per add forever — detach before replacing one (e.g. to
+        change k or seed)."""
+        self.engine.unsubscribe(self._on_engine_event)
 
     # -- introspection ------------------------------------------------------
 
@@ -198,40 +214,73 @@ class ClusterIndex:
         sk = jnp.asarray(sk)
         return self._assign_packed(pad_rows_pow2(sk), n_valid=sk.shape[0])
 
-    # -- mutation mirror (store hook) ---------------------------------------
+    # -- mutation mirror (engine hook) --------------------------------------
 
-    def _on_store_event(self, event: str, ids: np.ndarray,
-                        slots: np.ndarray) -> None:
-        store = self.engine.store
+    def _bincount(self, lab: np.ndarray, weights=None) -> np.ndarray:
+        """bincount over the k clusters, ignoring unlabeled (-1) rows —
+        rows added to an UNFITTED index mid-migration carry -1 until the
+        deferred bootstrap refit at publish."""
+        m = lab >= 0
+        return np.bincount(
+            lab[m], weights=None if weights is None else weights[m],
+            minlength=self.k).astype(np.int64)
+
+    def _on_engine_event(self, event: str, ids: np.ndarray,
+                         slots: np.ndarray, store) -> None:
         if event == "add":
             if self._centers is None:
-                self.refit()  # bootstrap covers these rows too
-                return
-            sk = padded_take(store.sk_buf, slots)
-            lab = self._assign_packed(sk, n_valid=len(ids))
+                if self.engine.migrating:
+                    # cannot refit a membership spanning two sketch spaces;
+                    # bootstrap at publish, rows carry -1 until then
+                    self._refit_pending = True
+                    lab = np.full(len(ids), -1, np.int64)
+                else:
+                    self.refit()  # bootstrap covers these rows too
+                    return
+            else:
+                # `store` is the originating tier, so the gathered sketches
+                # share a spec with the centre engine even mid-migration
+                # (migrate_start re-sketched the centres before any add
+                # could land in the new-spec tier)
+                sk = padded_take(store.sk_buf, slots)
+                lab = self._assign_packed(sk, n_valid=len(ids))
             self._lab_ids = np.concatenate([self._lab_ids, ids])
             self._lab = np.concatenate([self._lab, lab])
-            self._counts += np.bincount(lab, minlength=self.k)
-            self._weights += np.bincount(
-                lab, weights=store.weights_at(slots),
-                minlength=self.k).astype(np.int64)
+            self._counts += self._bincount(lab)
+            self._weights += self._bincount(lab, store.weights_at(slots))
         elif event == "remove":
             pos = np.searchsorted(self._lab_ids, ids)
             lab = self._lab[pos]
-            self._counts -= np.bincount(lab, minlength=self.k)
-            self._weights -= np.bincount(
-                lab, weights=store.weights_at(slots),
-                minlength=self.k).astype(np.int64)
+            self._counts -= self._bincount(lab)
+            self._weights -= self._bincount(lab, store.weights_at(slots))
             keep = np.ones(len(self._lab_ids), bool)
             keep[pos] = False
             self._lab_ids = self._lab_ids[keep]
             self._lab = self._lab[keep]
+        elif event == "migrate_start":
+            self._resketch_centers(store)
+            return
+        elif event == "migrate":
+            # per-cluster weights were accumulated per-row under each row's
+            # own spec; now every row is under the new spec — rebuild the
+            # signal in one pass (store.weights() is id-ordered, exactly
+            # the sidecar's order)
+            if len(self._lab_ids):
+                self._weights = self._bincount(
+                    self._lab, store.weights().astype(np.float64))
+            if self._refit_pending:
+                self._refit_pending = False
+                self.refit()
+            return
         else:  # compact: ids (hence the sidecar) survive slot renumbering
             return
         self.mutations_since_refit += len(ids)
         if (self.refit_every is not None
                 and self.mutations_since_refit >= self.refit_every):
-            self.refit()
+            if self.engine.migrating:
+                self._refit_pending = True  # refit at the "migrate" event
+            else:
+                self.refit()
 
     # -- (re)fitting --------------------------------------------------------
 
@@ -244,11 +293,22 @@ class ClusterIndex:
         index's fixed seed, so any two stores holding the same vectors
         under the same ids — regardless of the add/remove/compact/restore
         history between — refit to identical centres, labels, counts.  An
-        empty store resets to the unfitted state."""
+        empty store resets to the unfitted state.
+
+        Unavailable while a spec migration is in flight (the membership
+        spans two sketch spaces); refits requested by `refit_every` during
+        one run automatically once the migration publishes."""
+        if self.engine.migrating:
+            raise RuntimeError(
+                "refit() is unavailable while a spec migration is in "
+                "flight: the membership spans two sketch spaces.  Drive "
+                "the migration to completion (engine.migrate_all()) first; "
+                "auto-refits are deferred to the publish automatically")
         store = self.engine.store
         mat, n_alive, ids = store.gather_alive()
         if n_alive == 0:
             self._centers = None
+            self._center_raw = None
             self._centre_engine = None
             self._centre_ids = np.zeros(0, np.int64)
             self._medoid_ids = np.full(self.k, -1, np.int64)
@@ -271,17 +331,51 @@ class ClusterIndex:
             res.labels, weights=store.weights(),
             minlength=self.k).astype(np.int64)
         self._install_centers(res.centers)
+        self._capture_center_raw()
         self.mutations_since_refit = 0
         self.n_refits += 1
         return res.labels.copy()
 
-    def _install_centers(self, centers: np.ndarray) -> None:
+    def _capture_center_raw(self) -> None:
+        """Copy the medoids' raw COO rows out of the engine's archive — a
+        k-medoid centre IS a data row, so its raw form re-sketches to the
+        centre under any spec.  No archive (keep_raw=False, or medoids from
+        a pre-archive snapshot) leaves the capture empty; a later
+        migrate_start then fails loudly instead of serving old-spec
+        centres against new-spec rows."""
+        raw = self.engine.raw
+        if raw is None or len(raw.missing(self._medoid_ids)):
+            self._center_raw = None
+            return
+        idx, val = raw.batch(self._medoid_ids)
+        self._center_raw = (idx.copy(), val.copy())
+
+    def _resketch_centers(self, dst_store) -> None:
+        """migrate_start: rebuild the centre engine under the new spec from
+        the captured raw medoids, so mid-migration arrivals (sketched under
+        the new spec) assign against centres in the SAME sketch space."""
+        if self._centers is None:
+            return
+        if self._center_raw is None:
+            raise RuntimeError(
+                "ClusterIndex centres cannot follow the spec migration: no "
+                "raw medoid capture (centres predate the archive, e.g. a "
+                "v1 snapshot, or keep_raw=False).  refit() before "
+                "engine.migrate()")
+        params = dst_store.spec.params
+        sk, k = self.engine._sketch(self._center_raw, params=params)
+        self._install_centers(np.asarray(sk[:k]), params=params)
+
+    def _install_centers(self, centers: np.ndarray,
+                         params=None) -> None:
         """(Re)build the private centre engine: k packed rows whose ids ARE
-        the centre indices (fresh store, ids 0..k-1)."""
+        the centre indices (fresh store, ids 0..k-1).  `params` pins the
+        sketch space (default: the engine's current params)."""
         self._centers = np.asarray(centers, np.int32)
         self._centre_engine = QueryEngine(
-            self.engine.params, metric=self.engine.metric, block=self.block,
-            mode=self.engine.mode)
+            params if params is not None else self.engine.params,
+            metric=self.engine.metric, block=self.block,
+            mode=self.engine.mode, keep_raw=False)
         self._centre_ids = self._centre_engine.add_packed(self._centers)
 
     # -- convenience mutation wrappers --------------------------------------
@@ -295,8 +389,8 @@ class ClusterIndex:
         ids = self.engine.add_sparse(indices, values)
         return ids, self.label_of(ids) if len(ids) else ids.copy()
 
-    def add_packed(self, packed) -> tuple[np.ndarray, np.ndarray]:
-        ids = self.engine.add_packed(packed)
+    def add_packed(self, packed, raw=None) -> tuple[np.ndarray, np.ndarray]:
+        ids = self.engine.add_packed(packed, raw=raw)
         return ids, self.label_of(ids) if len(ids) else ids.copy()
 
     def remove(self, ids) -> int:
@@ -307,22 +401,29 @@ class ClusterIndex:
 
     # -- persistence --------------------------------------------------------
 
-    _FORMAT = "repro.cluster.v1"
+    _FORMAT = "repro.cluster.v2"
+    _FORMATS = ("repro.cluster.v1", "repro.cluster.v2")
 
     def save(self, directory: str, step: int = 0, keep: int = 3) -> None:
         """Snapshot engine + cluster state: the engine snapshot lands in
         `directory` (QueryEngine.save) and the cluster sidecar in
         `directory/cluster` under the same step, both through
-        checkpoint.Checkpointer's atomic-publish layout."""
+        checkpoint.Checkpointer's atomic-publish layout.  v2 adds the raw
+        medoid capture, so a restored index can still follow a spec
+        migration without an intervening refit."""
         from repro.checkpoint.checkpointer import Checkpointer
 
         self.engine.save(directory, step=step, keep=keep)
         w = self.engine.store.w
         centers = (self._centers if self._centers is not None
                    else np.zeros((0, w), np.int32))
+        craw_i, craw_v = (self._center_raw if self._center_raw is not None
+                          else (np.zeros((0, 1), np.int32),) * 2)
         tree = {
             "centers": centers,
             "medoid_ids": self._medoid_ids,
+            "center_raw_idx": craw_i,
+            "center_raw_val": craw_v,
             "lab_ids": self._lab_ids,
             "labels": self._lab,
             "counts": self._counts,
@@ -337,6 +438,7 @@ class ClusterIndex:
             "refit_every": self.refit_every,
             "mutations_since_refit": self.mutations_since_refit,
             "n_refits": self.n_refits,
+            "has_center_raw": self._center_raw is not None,
         }
         ckpt = Checkpointer(os.path.join(directory, "cluster"), keep=keep,
                             async_save=False)
@@ -364,18 +466,9 @@ class ClusterIndex:
                     f"no cluster snapshots in {directory}/cluster")
         engine = QueryEngine.restore(directory, step=step, **engine_kwargs)
         meta = ckpt.meta(step)
-        if meta.get("format") != cls._FORMAT:
+        if meta.get("format") not in cls._FORMATS:
             raise ValueError(f"not a cluster snapshot: {directory}/cluster")
-        w = engine.store.w
-        like = {
-            "centers": np.zeros((0, w), np.int32),
-            "medoid_ids": np.zeros(0, np.int64),
-            "lab_ids": np.zeros(0, np.int64),
-            "labels": np.zeros(0, np.int64),
-            "counts": np.zeros(0, np.int64),
-            "weights": np.zeros(0, np.int64),
-        }
-        tree, _ = ckpt.restore(like, step=step)
+        tree, _ = ckpt.restore(step=step)
         self = cls.__new__(cls)
         self.engine = engine
         self.k = int(meta["k"])
@@ -385,17 +478,19 @@ class ClusterIndex:
         refit_every = meta.get("refit_every")
         self.refit_every = None if refit_every is None else int(refit_every)
         self._centers = None
+        self._center_raw = None
         self._centre_engine = None
         self._centre_ids = np.zeros(0, np.int64)
-        self._medoid_ids = tree["medoid_ids"].copy()
-        self._lab_ids = tree["lab_ids"].copy()
-        self._lab = tree["labels"].copy()
-        self._counts = tree["counts"].copy()
-        self._weights = tree["weights"].copy()
+        self._medoid_ids = np.asarray(tree["medoid_ids"], np.int64).copy()
+        self._lab_ids = np.asarray(tree["lab_ids"], np.int64).copy()
+        self._lab = np.asarray(tree["labels"], np.int64).copy()
+        self._counts = np.asarray(tree["counts"], np.int64).copy()
+        self._weights = np.asarray(tree["weights"], np.int64).copy()
         self.mutations_since_refit = int(meta["mutations_since_refit"])
         self.n_refits = int(meta["n_refits"])
+        self._refit_pending = False
         if len(self._lab_ids) and not np.array_equal(self._lab_ids,
-                                                     engine.store.ids()):
+                                                     engine.ids()):
             # a desynced pair would corrupt the remove bookkeeping later;
             # fail at the boundary instead
             raise ValueError(
@@ -403,6 +498,15 @@ class ClusterIndex:
                 f"step {step}: label sidecar covers different ids than the "
                 "restored store")
         if len(tree["centers"]):
-            self._install_centers(tree["centers"])
-        engine.store.subscribe(self._on_store_event)
+            # a mid-migration snapshot saved centres ALREADY re-sketched
+            # under the new spec (migrate_start ran before the save)
+            cparams = (engine.migration.new_spec.params
+                       if engine.migrating else None)
+            self._install_centers(np.asarray(tree["centers"], np.int32),
+                                  params=cparams)
+        if meta.get("has_center_raw"):
+            self._center_raw = (
+                np.asarray(tree["center_raw_idx"], np.int32).copy(),
+                np.asarray(tree["center_raw_val"], np.int32).copy())
+        engine.subscribe(self._on_engine_event)
         return self

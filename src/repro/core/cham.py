@@ -43,9 +43,24 @@ def density_estimate(weight: jnp.ndarray, d: int) -> jnp.ndarray:
 
 
 def binhamming_from_stats(
-    wu: jnp.ndarray, wv: jnp.ndarray, inner: jnp.ndarray, d: int
+    wu: jnp.ndarray, wv: jnp.ndarray, inner: jnp.ndarray, d: int,
+    *, obs_u: jnp.ndarray | None = None, obs_v: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """h_hat = estimated HD(u', v') from sketch statistics (broadcasting)."""
+    """h_hat = estimated HD(u', v') from sketch statistics (broadcasting).
+
+    obs_u / obs_v (keyword-only, broadcasting like wu / wv) are per-row
+    OBSERVED-dimension counts under the miss model of Shen et al. (online
+    categorical sketching with misses): a row whose record dropped some
+    categories can have at most obs set bits, so the density and union
+    estimates are clamped into the feasible polytope
+        a_hat <= obs_u,  b_hat <= obs_v,  max(a,b) <= u_hat <= a_hat + b_hat
+    before the distance is formed.  With both None (the default) the
+    arithmetic is bit-identical to the unmasked estimator — serving paths
+    that never see misses pay nothing.  A saturated sketch of a heavily
+    truncated row otherwise explodes a_hat through the log and corrupts
+    every distance against it; clamping degrades it gracefully to "as far
+    as its observed support allows".
+    """
     log_d = jnp.log1p(-1.0 / d)
     wu = wu.astype(jnp.float32)
     wv = wv.astype(jnp.float32)
@@ -53,20 +68,30 @@ def binhamming_from_stats(
     a_hat = _safe_log1m(wu / d) / log_d
     b_hat = _safe_log1m(wv / d) / log_d
     u_hat = _safe_log1m((wu + wv - st) / d) / log_d
+    if obs_u is not None:
+        a_hat = jnp.minimum(a_hat, obs_u.astype(jnp.float32))
+    if obs_v is not None:
+        b_hat = jnp.minimum(b_hat, obs_v.astype(jnp.float32))
+    if obs_u is not None or obs_v is not None:
+        u_hat = jnp.clip(u_hat, jnp.maximum(a_hat, b_hat), a_hat + b_hat)
     return jnp.maximum(2.0 * u_hat - a_hat - b_hat, 0.0)
 
 
-def binhamming(u: jnp.ndarray, v: jnp.ndarray, d: int) -> jnp.ndarray:
+def binhamming(u: jnp.ndarray, v: jnp.ndarray, d: int,
+               *, obs_u: jnp.ndarray | None = None,
+               obs_v: jnp.ndarray | None = None) -> jnp.ndarray:
     """BinHamming on packed sketches (..., w) -> estimated HD(u', v')."""
     wu = packing.popcount_rows(u)
     wv = packing.popcount_rows(v)
     inner = packing.packed_inner(u, v)
-    return binhamming_from_stats(wu, wv, inner, d)
+    return binhamming_from_stats(wu, wv, inner, d, obs_u=obs_u, obs_v=obs_v)
 
 
-def cham(u: jnp.ndarray, v: jnp.ndarray, d: int) -> jnp.ndarray:
+def cham(u: jnp.ndarray, v: jnp.ndarray, d: int,
+         *, obs_u: jnp.ndarray | None = None,
+         obs_v: jnp.ndarray | None = None) -> jnp.ndarray:
     """Cham(u~, v~) = 2 * BinHamming — estimates HD of the ORIGINAL vectors."""
-    return 2.0 * binhamming(u, v, d)
+    return 2.0 * binhamming(u, v, d, obs_u=obs_u, obs_v=obs_v)
 
 
 def inner_estimate(u: jnp.ndarray, v: jnp.ndarray, d: int) -> jnp.ndarray:

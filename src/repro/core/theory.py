@@ -16,6 +16,27 @@ def sketch_dim(s: int, delta: float = 0.1) -> int:
     return max(8, int(math.ceil(s * math.sqrt(s / 2.0 * math.log(6.0 / delta)))))
 
 
+def max_density_for_dim(d: int, delta: float = 0.1) -> int:
+    """Largest density bound s whose paper-prescribed dimension fits in d —
+    the inverse of `sketch_dim`, monotone in s.  A serving index built at
+    sketch dimension d keeps its Theorem 1/2 guarantees only while observed
+    row density stays <= this value; crossing it is the drift signal that
+    triggers a spec migration (index/migrate.py).
+    """
+    if d < 8:
+        raise ValueError("sketch dimension must be >= 8")
+    lo, hi = 1, 2
+    while sketch_dim(hi, delta) <= d:
+        hi *= 2
+    while lo < hi:  # invariant: sketch_dim(lo) <= d < sketch_dim(hi + 1)
+        mid = (lo + hi + 1) // 2
+        if sketch_dim(mid, delta) <= d:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
 def theorem2_bound(s: int, delta: float = 0.1) -> float:
     """Theorem 2 additive error: |Cham - HD| <= 11 sqrt(s ln(7/delta)) w.p. 1-delta."""
     return 11.0 * math.sqrt(s * math.log(7.0 / delta))

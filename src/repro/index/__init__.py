@@ -12,14 +12,20 @@ Public API:
     TieredLayout       — LSM-style base + delta tiers; O(delta) sync after
                          mutations instead of per-version rebuilds
     QueryEngine        — add_dense / add_sparse / topk / radius / pairwise,
-                         save / restore, shard
+                         save / restore, shard, migrate
+    SketchSpec         — versioned (dims, seeds) sketch-space identity
+    Migration          — in-flight lazy re-sketch state machine (DESIGN.md
+                         section 10); RawArchive is its raw-row store
     ingest_documents   — data.pipeline document stream -> engine
 
 Results are bit-identical to the batch engine on the same membership; see
-tests/test_index.py for the pinned contracts.
+tests/test_index.py for the pinned contracts, and tests/test_migrate.py /
+tests/test_faultinject.py for the drift-migration and crash-safety ones.
 """
 
-from repro.index.bands import BandedLayout, TieredLayout  # noqa: F401
+from repro.index.bands import (BandedLayout, TieredLayout,  # noqa: F401
+                               merge_topk_parts)
 from repro.index.engine import QueryEngine  # noqa: F401
 from repro.index.ingest import ingest_documents  # noqa: F401
-from repro.index.store import SketchStore  # noqa: F401
+from repro.index.migrate import Migration, RawArchive  # noqa: F401
+from repro.index.store import SketchSpec, SketchStore  # noqa: F401

@@ -44,6 +44,34 @@ from repro.core.packing import padded_take
 from repro.index.store import SketchStore
 
 
+def merge_topk_parts(kk: int, parts: list[tuple[np.ndarray, np.ndarray]]
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Merge per-partition k-best lists into THE exact (value, id)-lex
+    k-best: `parts` is a list of (ids (Q, <=kk), vals (Q, <=kk)) answers
+    over DISJOINT row partitions, each already exact over its partition.
+    Shared by TieredLayout's base+delta merge and the migration's
+    cross-spec (old store / new store / fresh store) merge — one rule, so
+    partitioned serving is bit-identical to a single scan by construction.
+    Short lists are padded with (KBEST_KEY_PAD, inf), which sorts after any
+    real candidate; pads survive only when the union holds < kk rows."""
+    if len(parts) == 1:
+        return parts[0]  # a lone partition is already the exact k'-best
+
+    def pad_cols(ids: np.ndarray, vals: np.ndarray):
+        have = ids.shape[1]
+        if have == kk:
+            return ids, vals
+        padw = ((0, 0), (0, kk - have))
+        return (np.pad(ids, padw, constant_values=KBEST_KEY_PAD),
+                np.pad(vals, padw, constant_values=np.inf))
+
+    padded = [pad_cols(i, v) for i, v in parts]
+    vals, ids = kbest_lex_merge(
+        kk, np.concatenate([v for _, v in padded], axis=1),
+        np.concatenate([i for i, _ in padded], axis=1))
+    return ids, vals
+
+
 class BandedLayout:
     """Immutable weight-sorted banded snapshot of a slot set.
 
@@ -200,6 +228,9 @@ class TieredLayout:
         self.base = BandedLayout(store, self.metric,
                                  band_rows=self.band_rows)
         self._store = store
+        # per-tier spec record: every row this layout serves was sketched
+        # under it, and the cross-version merge keys the query sketch on it
+        self.spec = store.spec
         self.delta_slots = np.zeros(0, np.int64)
         self.delta_n = 0
         self.delta_ids = np.zeros(0, np.int64)
@@ -324,26 +355,12 @@ class TieredLayout:
             real = pos >= 0
             ids[real] = self.delta_ids[pos[real]]
             parts.append((ids, vals))
-        if len(parts) == 1:
-            return parts[0]  # a lone tier is already the exact k'-best
-
-        def pad_cols(ids: np.ndarray, vals: np.ndarray):
-            have = ids.shape[1]
-            if have == kk:
-                return ids, vals
-            padw = ((0, 0), (0, kk - have))
-            return (np.pad(ids, padw, constant_values=KBEST_KEY_PAD),
-                    np.pad(vals, padw, constant_values=np.inf))
-
-        padded = [pad_cols(i, v) for i, v in parts]
         # exact (value, id)-lexicographic merge of the per-tier k-best
-        # lists — allpairs.kbest_lex_merge, THE same rule as
-        # topk_rows_banded's chunk merge.  Tier memberships are disjoint,
-        # so kk real candidates always exist and no pad survives the cut.
-        vals, ids = kbest_lex_merge(
-            kk, np.concatenate([v for _, v in padded], axis=1),
-            np.concatenate([i for i, _ in padded], axis=1))
-        return ids, vals
+        # lists — merge_topk_parts wraps allpairs.kbest_lex_merge, THE same
+        # rule as topk_rows_banded's chunk merge.  Tier memberships are
+        # disjoint, so kk real candidates always exist and no pad survives
+        # the cut.
+        return merge_topk_parts(kk, parts)
 
     def radius_tiers(self, query_weights: np.ndarray, radius: float
                      ) -> list[tuple[jnp.ndarray, int, np.ndarray]]:

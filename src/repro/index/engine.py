@@ -40,17 +40,18 @@ store rows across the data axes of a mesh via distributed.sharding.
 
 from __future__ import annotations
 
-from collections import OrderedDict
+from collections import OrderedDict, deque
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import allpairs, packing
+from repro.core import allpairs, packing, theory
 from repro.core.cabin import (CabinParams, sketch_dense_jit,
                               sketch_sparse_jit)
 from repro.core.packing import pad_rows_pow2, pow2_bucket
-from repro.index.bands import BandedLayout, TieredLayout
-from repro.index.store import SketchStore
+from repro.index.bands import BandedLayout, TieredLayout, merge_topk_parts
+from repro.index.migrate import Migration, RawArchive
+from repro.index.store import SketchSpec, SketchStore
 
 _METRICS = ("cham", "hamming")
 
@@ -74,46 +75,108 @@ class QueryEngine:
         of a full O(N log N) layout rebuild.  0 merges on every mutation
         (the pre-tiered rebuild-per-version behaviour — the bench baseline);
         None never auto-merges (fold only on `compact()`).
+    keep_raw : archive each ingested row's raw COO form (host-side,
+        index/migrate.RawArchive) so the index can be re-sketched under a
+        new spec.  Default True — without it `migrate()` is impossible and
+        the index is frozen at its birth spec.
+    auto_migrate : start a lazy spec migration automatically when the
+        observed row-density percentile (`drift_pct` over the last
+        `drift_window` ingested rows) crosses the density bound
+        `theory.max_density_for_dim(d, drift_delta)` for the current sketch
+        dim — the Theorem 1/2 accuracy cliff.  The new dim is
+        `theory.sketch_dim(percentile, drift_delta)`, same hash seeds.
     """
 
     def __init__(self, params: CabinParams, *, metric: str = "cham",
                  block: int = 2048, mode: str | None = None,
                  band_rows: int = 1024, cache_entries: int = 256,
-                 merge_ratio: float | None = 0.125):
+                 merge_ratio: float | None = 0.125, keep_raw: bool = True,
+                 auto_migrate: bool = False, drift_delta: float = 0.1,
+                 drift_window: int = 512, drift_pct: float = 95.0):
         if metric not in _METRICS:
             raise ValueError(f"metric must be one of {_METRICS}")
+        if auto_migrate and not keep_raw:
+            raise ValueError("auto_migrate needs keep_raw=True: a drift "
+                             "migration re-sketches from the raw archive")
         self.params = params
         self.metric = metric
         self.block = block
         self.mode = mode
         self.band_rows = band_rows
         self.merge_ratio = merge_ratio
-        self.store = SketchStore(params.sketch_dim)
+        self.spec = SketchSpec(0, params)
+        self.raw: RawArchive | None = RawArchive() if keep_raw else None
+        self.auto_migrate = auto_migrate
+        self.drift_delta = float(drift_delta)
+        self.drift_pct = float(drift_pct)
+        self.drift_window = int(drift_window)
+        self._nnz_window: deque[int] = deque(maxlen=self.drift_window)
+        self._mig: Migration | None = None
+        self._subs: list = []
+        self.store = SketchStore(params.sketch_dim, spec=self.spec)
+        self._attach_relay(self.store)
         self._tiered: TieredLayout | None = None
         self._cache: OrderedDict[tuple, tuple] = OrderedDict()
         self._cache_entries = cache_entries
         self.cache_hits = 0
         self.cache_misses = 0
 
+    # -- mutation observers (engine level) ----------------------------------
+
+    def subscribe(self, callback) -> None:
+        """Register `callback(event, ids, slots, store)` — the engine-level
+        twin of `SketchStore.subscribe` that per-id sidecars (ClusterIndex)
+        should use instead of subscribing to `engine.store` directly: a
+        spec migration swaps stores under the engine, and only the engine
+        knows which store an event belongs to.  Store events ("add",
+        "remove", "compact") relay with the ORIGINATING store; the engine
+        adds two of its own: "migrate_start" (a migration just began;
+        `store` is the new-spec destination — re-sketch any private packed
+        state from raw now) and "migrate" (the migration published;
+        `store` is the engine's new serving store)."""
+        self._subs.append(callback)
+
+    def unsubscribe(self, callback) -> None:
+        self._subs.remove(callback)
+
+    def _attach_relay(self, store: SketchStore) -> None:
+        def relay(event, ids, slots, _store=store):
+            for cb in list(self._subs):
+                cb(event, ids, slots, _store)
+
+        store.subscribe(relay)
+
+    def _emit(self, event: str, store: SketchStore) -> None:
+        z = np.zeros(0, np.int64)
+        for cb in list(self._subs):
+            cb(event, z, z, store)
+
     # -- basics -------------------------------------------------------------
 
     def __len__(self) -> int:
-        return len(self.store)
+        n = len(self.store)
+        if self._mig is not None:
+            n += len(self._mig.dst) + len(self._mig.fresh)
+        return n
 
     @property
     def d(self) -> int:
         return self.params.sketch_dim
 
     def ids(self) -> np.ndarray:
-        return self.store.ids()
+        if self._mig is None:
+            return self.store.ids()
+        return np.sort(np.concatenate([
+            self.store.ids(), self._mig.dst.ids(), self._mig.fresh.ids()]))
 
     def stats(self) -> dict:
         t = self._tiered
-        return {
-            "n_alive": len(self.store),
+        out = {
+            "n_alive": len(self),
             "size": self.store.size,
             "capacity": self.store.capacity,
             "version": self.store.version,
+            "spec_version": self.spec.version,
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "n_bands": t.base.n_bands if t else None,
@@ -122,17 +185,36 @@ class QueryEngine:
             "delta_rows": t.delta_n if t else None,
             "tier_merges": t.n_merges if t else None,
         }
+        if self._mig is not None:
+            m = self._mig
+            out["migration"] = {
+                "phase": m.phase,
+                "to_version": m.new_spec.version,
+                "to_dim": m.new_spec.d,
+                "rows_migrated": m.rows_migrated,
+                "rows_remaining": len(m.src),
+                "fresh_rows": len(m.fresh),
+            }
+        return out
 
     # -- sketching (shape-bucketed) ----------------------------------------
 
-    def _sketch(self, queries) -> tuple[jnp.ndarray, int]:
+    def _sketch(self, queries, params: CabinParams | None = None
+                ) -> tuple[jnp.ndarray, int]:
         """Raw categorical input -> (packed sketches (pow2-padded, w), k).
 
         `queries` is a dense (k, n_dims) int array, or an (indices, values)
         padded-COO pair.  Both layouts are padded to power-of-two buckets
         (rows, and nnz width for COO) so the sketch jits are reused across
         request sizes; zero padding is inert under psi/pi by construction.
+        `params` overrides the engine's CabinParams — the cross-version
+        serving and migration paths sketch the same rows under another
+        spec's params through exactly this path, which is what makes a
+        completed migration bit-identical to a fresh build.
         """
+        if params is None:
+            params = self.params
+        w = params.packed_width
         if isinstance(queries, (tuple, list)):
             idx_host, val_host = queries
             # validate on host BEFORE the device transfer: no sync on the
@@ -141,55 +223,215 @@ class QueryEngine:
             if idx_host.shape != np.shape(val_host) or idx_host.ndim != 2:
                 raise ValueError("COO input needs matching (k, m) "
                                  "indices/values")
-            if idx_host.size and (idx_host.max() >= self.params.n_dims
+            if idx_host.size and (idx_host.max() >= params.n_dims
                                   or idx_host.min() < 0):
                 raise ValueError(
-                    f"COO indices out of range [0, {self.params.n_dims})")
+                    f"COO indices out of range [0, {params.n_dims})")
             indices = jnp.asarray(idx_host, jnp.int32)
             values = jnp.asarray(val_host, jnp.int32)
             k = indices.shape[0]
             if k == 0:
-                return jnp.zeros((0, self.store.w), jnp.int32), 0
+                return jnp.zeros((0, w), jnp.int32), 0
             mpad = pow2_bucket(indices.shape[1])
             wpad = ((0, pow2_bucket(k) - k), (0, mpad - indices.shape[1]))
-            sk = sketch_sparse_jit(self.params, jnp.pad(indices, wpad),
+            sk = sketch_sparse_jit(params, jnp.pad(indices, wpad),
                                    jnp.pad(values, wpad))
             return sk, k
         x = jnp.asarray(queries, jnp.int32)
-        if x.ndim != 2 or x.shape[1] != self.params.n_dims:
+        if x.ndim != 2 or x.shape[1] != params.n_dims:
             raise ValueError(
-                f"expected dense (k, {self.params.n_dims}) rows, "
+                f"expected dense (k, {params.n_dims}) rows, "
                 f"got {x.shape}")
         k = x.shape[0]
         if k == 0:
-            return jnp.zeros((0, self.store.w), jnp.int32), 0
-        return sketch_dense_jit(self.params, pad_rows_pow2(x)), k
+            return jnp.zeros((0, w), jnp.int32), 0
+        return sketch_dense_jit(params, pad_rows_pow2(x)), k
 
     # -- ingestion ----------------------------------------------------------
 
+    def _ingest_target(self) -> tuple[SketchStore, CabinParams]:
+        """Where adds land and which spec sketches them: the serving store
+        normally, the new-spec fresh store while a migration is in flight —
+        acked mutations during migration must never need re-migration."""
+        if self._mig is not None:
+            return self._mig.fresh, self._mig.new_spec.params
+        return self.store, self.params
+
     def add_dense(self, x) -> np.ndarray:
         """Ingest dense categorical rows (k, n_dims); returns ids (k,)."""
-        sk, k = self._sketch(x)
-        return self.store.add(sk, n_valid=k)
+        self._drive()
+        store, params = self._ingest_target()
+        sk, k = self._sketch(x, params=params)
+        ids = store.add(sk, n_valid=k)
+        if k:
+            x_host = np.asarray(x)
+            if self.raw is not None:
+                self.raw.put_dense(ids, x_host)
+            self._track_drift(np.count_nonzero(x_host, axis=1))
+        return ids
 
     def add_sparse(self, indices, values) -> np.ndarray:
         """Ingest padded-COO categorical rows; returns ids (k,)."""
-        sk, k = self._sketch((indices, values))
-        return self.store.add(sk, n_valid=k)
+        self._drive()
+        store, params = self._ingest_target()
+        sk, k = self._sketch((indices, values), params=params)
+        ids = store.add(sk, n_valid=k)
+        if k:
+            if self.raw is not None:
+                self.raw.put(ids, indices, values)
+            self._track_drift(
+                np.count_nonzero(np.asarray(values), axis=1))
+        return ids
 
-    def add_packed(self, packed) -> np.ndarray:
+    def add_packed(self, packed, raw=None) -> np.ndarray:
         """Ingest pre-sketched packed rows (k, w).  The rows MUST come from
-        this engine's CabinParams — used by streaming ingest after an
-        in-window dedup pass already paid for the sketches."""
+        this engine's CURRENT CabinParams — used by streaming ingest after
+        an in-window dedup pass already paid for the sketches.  `raw` is
+        the rows' (indices, values) COO pair; pass it to keep the rows
+        re-sketchable (without it they cannot survive a `migrate()`).
+        While a migration is in flight the packed rows are spec-ambiguous:
+        with `raw` the engine re-sketches them under the live spec, without
+        it the call raises."""
+        self._drive()
+        if self._mig is not None:
+            if raw is None:
+                raise RuntimeError(
+                    "add_packed mid-migration needs raw=(indices, values): "
+                    "the supplied sketches are under the OLD spec, but new "
+                    "rows must land in the new-spec tier")
+            return self.add_sparse(*raw)
         packed = jnp.asarray(packed)
-        return self.store.add(pad_rows_pow2(packed),
-                              n_valid=packed.shape[0])
+        ids = self.store.add(pad_rows_pow2(packed),
+                             n_valid=packed.shape[0])
+        if raw is not None and self.raw is not None and len(ids):
+            self.raw.put(ids, *raw)
+        return ids
 
     def remove(self, ids) -> int:
-        return self.store.remove(ids)
+        self._drive()
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if self._mig is None:
+            n = self.store.remove(ids)
+        else:
+            if len(np.unique(ids)) != len(ids):
+                raise ValueError("duplicate ids in remove batch")
+            # validate membership BEFORE mutating any store, so a bad id
+            # cannot leave a partial cross-store remove behind
+            groups: dict[int, tuple[SketchStore, list[int]]] = {}
+            for id_ in ids.tolist():
+                store = self._mig.store_of(id_)  # KeyError on unknown
+                groups.setdefault(id(store), (store, []))[1].append(id_)
+            for store, grp in groups.values():
+                store.remove(np.asarray(grp, np.int64))
+            n = len(ids)
+        if self.raw is not None:
+            self.raw.drop(ids)
+        return n
 
     def compact(self) -> None:
+        self._drive()
         self.store.compact()
+        if self._mig is not None:
+            self._mig.dst.compact()
+            self._mig.fresh.compact()
+
+    # -- spec migration ------------------------------------------------------
+
+    @property
+    def migrating(self) -> bool:
+        return self._mig is not None
+
+    @property
+    def migration(self) -> Migration | None:
+        return self._mig
+
+    def migrate(self, new_params: CabinParams | None = None, *,
+                d: int | None = None, batch_rows: int = 1024,
+                drive: str = "lazy", journal_dir: str | None = None,
+                journal_every: int = 1, journal_keep: int = 3) -> Migration:
+        """Begin an incremental re-sketch of the index to a new spec.
+
+        `new_params` is the target CabinParams (same n_dims; typically a new
+        sketch_dim after density drift), or pass `d` to keep the current
+        hash seeds and change only the dim.  Old-spec rows are re-sketched
+        from the raw archive in `batch_rows` batches; serving stays live
+        throughout, answering across the old- and new-spec tiers.  `drive`:
+
+          * "lazy"  — each engine call (add/remove/query/compact) advances
+            the migration one batch before doing its own work; no separate
+            driver needed, progress rides the request stream.
+          * "manual" — only `migration_step()` / `migrate_all()` advance it.
+          * "eager" — run to completion before returning.
+
+        `journal_dir` checkpoints the full engine (both tiers + cursor)
+        through checkpoint.Checkpointer every `journal_every` batches —
+        `QueryEngine.restore(journal_dir)` after a crash resumes the
+        migration without losing any acked mutation.  A completed migration
+        is bit-identical to an engine freshly built at the new spec."""
+        if self._mig is not None:
+            raise RuntimeError("a migration is already in flight")
+        if new_params is None:
+            if d is None:
+                raise ValueError("migrate() needs new_params or d")
+            new_params = CabinParams(
+                n_dims=self.params.n_dims, sketch_dim=int(d),
+                psi_seed=self.params.psi_seed, pi_seed=self.params.pi_seed)
+        new_spec = self.spec.successor(new_params)
+        mig = Migration(self, new_spec, batch_rows=batch_rows, drive=drive,
+                        journal_dir=journal_dir, journal_every=journal_every,
+                        journal_keep=journal_keep)
+        self._mig = mig
+        self._attach_relay(mig.dst)
+        self._attach_relay(mig.fresh)
+        self._emit("migrate_start", mig.dst)
+        if drive == "eager":
+            mig.run()
+        return mig
+
+    def migration_step(self, rows: int | None = None) -> bool:
+        """Advance an in-flight migration by one batch (default
+        `batch_rows`); returns True while more work remains."""
+        if self._mig is None:
+            return False
+        self._mig.step(rows)
+        return self._mig is not None
+
+    def migrate_all(self) -> None:
+        """Drive an in-flight migration to completion."""
+        while self.migration_step():
+            pass
+
+    def _drive(self) -> None:
+        """Lazy-mode pacing: one migration batch per engine call."""
+        if self._mig is not None and self._mig.drive == "lazy":
+            self._mig.step()
+
+    def _publish_migration(self, mig: Migration) -> None:
+        """Called by Migration._finish once every row is under the new
+        spec: atomically (w.r.t. the Python API) swap the serving store."""
+        self.store = mig.dst
+        self.params = mig.new_spec.params
+        self.spec = mig.new_spec
+        self._tiered = None
+        self._cache.clear()
+        self._mig = None
+        self._emit("migrate", self.store)
+
+    def _track_drift(self, nnz_counts: np.ndarray) -> None:
+        """Feed per-row density observations into the drift window; when
+        the `drift_pct` percentile needs a bigger sketch dim than we have
+        (theory.sketch_dim at `drift_delta`), auto-start a lazy migration
+        to that dim.  No-op unless auto_migrate."""
+        self._nnz_window.extend(int(c) for c in nnz_counts)
+        if not self.auto_migrate or self._mig is not None:
+            return
+        if len(self._nnz_window) < min(64, self.drift_window):
+            return  # too few observations to call a drift
+        p = max(1, int(np.ceil(np.percentile(
+            np.fromiter(self._nnz_window, np.int64), self.drift_pct))))
+        need = theory.sketch_dim(p, self.drift_delta)
+        if need > self.d:
+            self.migrate(d=need, drive="lazy")
 
     # -- result cache -------------------------------------------------------
 
@@ -223,6 +465,9 @@ class QueryEngine:
         Raises ValueError for k < 0 (k = 0 is a valid empty query)."""
         if k < 0:
             raise ValueError(f"topk: k must be >= 0, got {k}")
+        self._drive()
+        if self._mig is not None:
+            return self._topk_migrating(queries, k)
         sk, q = self._sketch(queries)
         return self.topk_packed(sk, k, n_valid=q)
 
@@ -239,6 +484,10 @@ class QueryEngine:
         host work regardless of store size."""
         if k < 0:
             raise ValueError(f"topk: k must be >= 0, got {k}")
+        if self._mig is not None:
+            raise RuntimeError(
+                "topk_packed is unavailable mid-migration (packed queries "
+                "are spec-ambiguous); use topk() with raw rows")
         sk = jnp.asarray(sk)
         q = sk.shape[0] if n_valid is None else n_valid
         if not 0 <= q <= sk.shape[0]:
@@ -272,12 +521,19 @@ class QueryEngine:
         r <= 0 returns an empty id array for every query — an explicit
         contract, not an error (negative radii short-circuit before any
         layout or device work)."""
+        self._drive()
+        if self._mig is not None:
+            return self._radius_migrating(queries, r)
         sk, q = self._sketch(queries)
         return self.radius_packed(sk, r, n_valid=q)
 
     def radius_packed(self, sk, r: float, n_valid: int | None = None
                       ) -> list[np.ndarray]:
         """Pre-sketched twin of `radius` (same r <= 0 -> empty contract)."""
+        if self._mig is not None:
+            raise RuntimeError(
+                "radius_packed is unavailable mid-migration (packed queries "
+                "are spec-ambiguous); use radius() with raw rows")
         sk = jnp.asarray(sk)
         q = sk.shape[0] if n_valid is None else n_valid
         if not 0 <= q <= sk.shape[0]:
@@ -317,6 +573,80 @@ class QueryEngine:
         self._remember(key, out)
         return out
 
+    # -- cross-version serving (mid-migration) -------------------------------
+
+    def _sketch_per_spec(self, queries, specs) -> dict:
+        """Sketch the same raw queries once under every distinct spec in
+        `specs` — the cross-version serving discipline: each tier is
+        queried in its OWN sketch space, results merge in id/distance
+        space (which both specs estimate for "cham")."""
+        out: dict[int, tuple[jnp.ndarray, int]] = {}
+        for spec in specs:
+            if spec.version not in out:
+                out[spec.version] = self._sketch(queries, params=spec.params)
+        return out
+
+    def _topk_migrating(self, queries, k: int
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """topk across the migration's live tiers (old-spec remainder,
+        new-spec migrated rows, new-spec fresh mutations).  Tier
+        memberships partition the alive ids, each per-tier answer is exact
+        over its partition, and `merge_topk_parts` keeps the global
+        (value, id)-lex order — so the result equals merging per-store
+        reference answers, each under its own spec.  The LRU is bypassed:
+        mid-migration versions span three stores and the window is
+        transient."""
+        tiers = self._mig.serving_tiers()
+        kk = min(k, len(self))
+        if not tiers or kk == 0:
+            _, q = self._sketch(queries)
+            return (np.zeros((q, 0), np.int64), np.zeros((q, 0), np.float32))
+        sketched = self._sketch_per_spec(queries, [s for _, s in tiers])
+        q = next(iter(sketched.values()))[1]
+        if q == 0:
+            return (np.zeros((0, 0), np.int64), np.zeros((0, 0), np.float32))
+        parts = []
+        for layout, spec in tiers:
+            sk, _ = sketched[spec.version]
+            q_host = np.asarray(sk[:q])
+            parts.append(layout.topk(
+                pad_rows_pow2(sk), packing.np_popcount_rows(q_host), kk,
+                q_valid=q, block=self.block, mode=self.mode))
+        return merge_topk_parts(kk, parts)
+
+    def _radius_migrating(self, queries, r: float) -> list[np.ndarray]:
+        """radius across the migration's live tiers — per-tier hits union
+        to the answer over the full alive membership (strict `dist < r`,
+        each tier scored in its own sketch space)."""
+        tiers = self._mig.serving_tiers()
+        if not tiers:
+            _, q = self._sketch(queries)
+            return [np.zeros(0, np.int64) for _ in range(q)]
+        sketched = self._sketch_per_spec(queries, [s for _, s in tiers])
+        q = next(iter(sketched.values()))[1]
+        if q == 0:
+            return []
+        if r <= 0:
+            return [np.zeros(0, np.int64) for _ in range(q)]
+        hits: list[list[np.ndarray]] = [[] for _ in range(q)]
+        for layout, spec in tiers:
+            sk, _ = sketched[spec.version]
+            q_host = np.asarray(sk[:q])
+            q_weights = packing.np_popcount_rows(q_host)
+            for sel, n_sel, sel_ids in layout.radius_tiers(q_weights, r):
+                pairs = allpairs.threshold_pairs(
+                    pad_rows_pow2(sk), sel, d=layout.d, threshold=r,
+                    metric=self.metric, block=min(self.block, 256),
+                    mode=self.mode, n_valid=q, m_valid=n_sel)
+                by_q = pairs[np.argsort(pairs[:, 0], kind="stable")]
+                splits = np.searchsorted(by_q[:, 0], np.arange(q + 1))
+                for qi in range(q):
+                    seg = sel_ids[by_q[splits[qi]: splits[qi + 1], 1]]
+                    if seg.size:
+                        hits[qi].append(seg)
+        return [np.sort(np.concatenate(h)) if h else np.zeros(0, np.int64)
+                for h in hits]
+
     def pairwise(self, queries, ids=None) -> tuple[np.ndarray, np.ndarray]:
         """Engine-metric distance matrix (Q, N') between queries and the
         given stored ids (default: all alive rows, id order) — the
@@ -328,6 +658,11 @@ class QueryEngine:
         through core.allpairs."""
         from repro.kernels.hamming import ops as hamming_ops
 
+        if self._mig is not None:
+            raise RuntimeError(
+                "pairwise is unavailable mid-migration: rows live under two "
+                "specs and a single distance matrix would mix sketch spaces; "
+                "drive the migration to completion first (migrate_all())")
         sk, q = self._sketch(queries)
         view = self.store.gather_alive()
         # cheap stale-view guard BEFORE anything dereferences the matrix
@@ -397,56 +732,111 @@ class QueryEngine:
 
     # -- persistence --------------------------------------------------------
 
+    def _set_store(self, store: SketchStore) -> None:
+        """Install a restored serving store: reset the layout and wire the
+        engine-level event relay (restore builds stores outside __init__)."""
+        self.store = store
+        self._tiered = None
+        self._attach_relay(store)
+
     def save(self, directory: str, step: int = 0, keep: int = 3) -> None:
-        """Snapshot the full index (store buffers + hash params + metadata)
-        via checkpoint.Checkpointer — same atomic-publish layout as model
-        checkpoints, so index snapshots ride the existing retention/GC."""
+        """Snapshot the full index via checkpoint.Checkpointer — same
+        atomic-publish layout as model checkpoints, so index snapshots ride
+        the existing retention/GC, integrity records, and fault-injection
+        crash points.  One step holds the serving store, the raw archive,
+        and — mid-migration — BOTH new-spec tiers plus the cursor/spec-pair
+        journal record: the unit of atomicity is the whole engine, which is
+        what makes crash recovery unable to lose an acked mutation."""
         from repro.checkpoint.checkpointer import Checkpointer
 
         ckpt = Checkpointer(directory, keep=keep, async_save=False)
+        tree: dict = {"store": self.store.state_tree()}
         meta = {
-            "format": "repro.index.v1",
+            "format": "repro.index.v2",
             "metric": self.metric,
-            "n_dims": self.params.n_dims,
-            "sketch_dim": self.params.sketch_dim,
-            "psi_seed": self.params.psi_seed,
-            "pi_seed": self.params.pi_seed,
-            **self.store.state_meta(),
+            "spec": self.spec.meta(),
+            "store_meta": self.store.state_meta(),
+            "keep_raw": self.raw is not None,
         }
-        ckpt.save(step, self.store.state_tree(), extra_meta=meta, block=True)
+        if self.raw is not None:
+            tree["raw"] = self.raw.state_tree()
+        if self._mig is not None:
+            tree["mig_dst"] = self._mig.dst.state_tree()
+            tree["mig_fresh"] = self._mig.fresh.state_tree()
+            meta["migration"] = self._mig.meta()
+        ckpt.save(step, tree, extra_meta=meta, block=True)
 
     @classmethod
     def restore(cls, directory: str, step: int | None = None,
                 **engine_kwargs) -> "QueryEngine":
         """Rebuild an engine from a snapshot; queries against the restored
-        engine are bit-identical to the engine that saved it."""
+        engine are bit-identical to the engine that saved it.  step=None
+        restores the NEWEST INTACT step — corrupt or partially-written
+        snapshots are verified against their integrity records and skipped
+        (checkpoint.CheckpointCorruptError if none survive).  A snapshot
+        taken mid-migration resumes the migration exactly where the journal
+        left it: already-migrated rows stay migrated, acked mutations stay
+        acked, and serving continues cross-version."""
         from repro.checkpoint.checkpointer import Checkpointer
 
         ckpt = Checkpointer(directory, async_save=False)
-        if step is None:
-            step = ckpt.latest_step()
-            if step is None:
-                raise FileNotFoundError(f"no index snapshots in {directory}")
+        if ckpt.latest_step() is None:
+            raise FileNotFoundError(f"no index snapshots in {directory}")
+        flat, step = ckpt.restore(step=step)
         meta = ckpt.meta(step)
-        if meta.get("format") != "repro.index.v1":
+        fmt = meta.get("format")
+        if fmt == "repro.index.v1":
+            return cls._restore_v1(flat, meta, engine_kwargs)
+        if fmt != "repro.index.v2":
             raise ValueError(f"not an index snapshot: {directory}")
         if "metric" in engine_kwargs:
             raise ValueError("metric is fixed by the snapshot "
                              f"({meta['metric']!r}); it cannot be overridden "
                              "on restore")
-        w = packing.packed_width(int(meta["sketch_dim"]))
-        like = {
-            "sk": np.zeros((0, w), np.int32),
-            "ids": np.zeros(0, np.int64),
-            "alive": np.zeros(0, bool),
-            "weights": np.zeros(0, np.int64),
-        }
-        tree, _ = ckpt.restore(like, step=step)
+        if "keep_raw" in engine_kwargs:
+            raise ValueError("keep_raw is fixed by the snapshot "
+                             f"({meta['keep_raw']}); it cannot be overridden "
+                             "on restore")
+
+        def sub(prefix: str) -> dict:
+            return {k[len(prefix):]: v for k, v in flat.items()
+                    if k.startswith(prefix)}
+
+        spec = SketchSpec.from_meta(meta["spec"])
+        eng = cls(spec.params, metric=meta["metric"],
+                  keep_raw=meta["keep_raw"], **engine_kwargs)
+        eng.spec = spec
+        eng._set_store(SketchStore.from_state(
+            sub("store/"), meta["store_meta"], spec=spec))
+        if meta["keep_raw"]:
+            eng.raw = RawArchive.from_state(sub("raw/"))
+        if "migration" in meta:
+            mmeta = meta["migration"]
+            new_spec = SketchSpec.from_meta(mmeta["new_spec"])
+            dst = SketchStore.from_state(
+                sub("mig_dst/"), mmeta["dst_meta"], spec=new_spec)
+            fresh = SketchStore.from_state(
+                sub("mig_fresh/"), mmeta["fresh_meta"], spec=new_spec)
+            eng._mig = Migration.resume(eng, mmeta, dst, fresh)
+            eng._attach_relay(dst)
+            eng._attach_relay(fresh)
+        return eng
+
+    @classmethod
+    def _restore_v1(cls, flat: dict, meta: dict,
+                    engine_kwargs: dict) -> "QueryEngine":
+        """Pre-migration snapshot format: one store, no raw archive (the
+        restored engine starts an empty one — rows saved under v1 cannot be
+        re-sketched until re-ingested)."""
+        if "metric" in engine_kwargs:
+            raise ValueError("metric is fixed by the snapshot "
+                             f"({meta['metric']!r}); it cannot be overridden "
+                             "on restore")
         params = CabinParams(
             n_dims=int(meta["n_dims"]), sketch_dim=int(meta["sketch_dim"]),
             psi_seed=int(meta["psi_seed"]), pi_seed=int(meta["pi_seed"]))
         eng = cls(params, metric=meta["metric"], **engine_kwargs)
-        eng.store = SketchStore.from_state(tree, meta)
+        eng._set_store(SketchStore.from_state(flat, meta, spec=eng.spec))
         return eng
 
     # -- placement ----------------------------------------------------------

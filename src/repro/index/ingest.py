@@ -58,7 +58,11 @@ def ingest_documents(
             ids = np.full(len(win), -1, np.int64)
             keep = result.keep_mask
             if keep.any():
-                ids[keep] = engine.add_packed(sk_host[keep])
+                # hand the kept rows' raw COO along with the sketches so
+                # the engine's archive keeps them re-sketchable (and the
+                # mid-migration path can route them to the new-spec tier)
+                ids[keep] = engine.add_packed(
+                    sk_host[keep], raw=(idx[keep], val[keep]))
             out.append(ids)
     if not out:
         return np.zeros(0, np.int64)

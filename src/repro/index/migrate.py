@@ -1,0 +1,385 @@
+"""Spec migration: incremental lazy re-sketch of a live index.
+
+A Cabin sketch is a PURE function of (raw categorical row, SketchSpec) —
+no training, no data-dependent state — so moving an index from spec v to
+spec v+1 is not an approximation problem, only a scheduling one: re-sketch
+every alive row through the same `core.cabin` path a fresh build would use,
+in bounded batches, while queries keep serving.  This module owns both
+halves (DESIGN.md section 10):
+
+  * `RawArchive` — the host-side id -> trimmed-COO row store the engine
+    keeps alongside the sketches (keep_raw=True).  It is what makes
+    re-sketching possible at all: packed bits under one spec carry no
+    information about another spec's hash bins.
+  * `Migration` — the three-store state machine:
+
+        src    engine.store, OLD spec.  Rows not yet migrated.  Migrated
+               rows are QUIET-tombstoned (no "remove" event — membership
+               is unchanged globally).
+        dst    NEW spec.  Receives migrated rows via `add_with_ids` in
+               ascending id order, so the slot-order == id-order invariant
+               holds by construction and the finished store is
+               bit-identical to a fresh batch build at the new spec.
+        fresh  NEW spec.  Receives every row ADDED while the migration is
+               in flight (its id counter starts at src's watermark, above
+               every migratable id).  Folded into dst at the end — fresh
+               ids all exceed dst ids, so the fold is one ascending append.
+
+    phases: resketch (batches of src rows move to dst) -> fold (fresh
+    appends onto dst) -> publish (engine swaps store/spec/params).  The
+    cursor is the last migrated id; together with the (old, new) spec pair
+    it fully determines progress, and `QueryEngine.save` writes all three
+    stores + cursor + specs in ONE atomic checkpoint step — restore resumes
+    from the last journaled batch with no acked row lost (the crash-matrix
+    test in tests/test_faultinject.py kills at every crash point below and
+    asserts exactly that).
+
+Mid-migration serving stays EXACT: the three stores partition the alive
+membership, each serves its own exact (value, id)-lex k-best through its
+own TieredLayout (the query is sketched once per spec), and
+`bands.merge_topk_parts` — the same rule as the base/delta tier merge —
+combines them.  Radius queries union per-store threshold scans the same
+way.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.packing import pow2_bucket
+from repro.index.bands import TieredLayout
+from repro.index.store import SketchSpec, SketchStore
+from repro.runtime import faultinject
+
+_CP_START = faultinject.declare("migrate.start")
+_CP_RESKETCHED = faultinject.declare("migrate.batch.resketched")
+_CP_COMMITTED = faultinject.declare("migrate.batch.committed")
+_CP_FOLD = faultinject.declare("migrate.fold")
+_CP_PUBLISHED = faultinject.declare("migrate.published")
+
+
+class RawArchive:
+    """Host-side id -> raw categorical row (trimmed COO) storage.
+
+    Ingest batches land as whole (k, m) blocks — one list append plus a
+    dict update, no per-row work on the serving path; per-row gathers are
+    paid only where they are already off the hot path (migration batches,
+    checkpoint save/restore).  Dropped ids just leave the locator; dead
+    block rows are garbage-collected by the next save/restore cycle
+    (`state_tree` serialises live rows only).
+    """
+
+    def __init__(self):
+        self._blocks: list[tuple[np.ndarray, np.ndarray]] = []
+        self._loc: dict[int, tuple[int, int]] = {}  # id -> (block, row)
+
+    def __len__(self) -> int:
+        return len(self._loc)
+
+    def __contains__(self, id_) -> bool:
+        return int(id_) in self._loc
+
+    def put(self, ids: np.ndarray, indices, values) -> None:
+        """Record rows as a padded-COO block (value 0 = padding)."""
+        idx = np.array(indices, np.int32, copy=True, ndmin=2)
+        val = np.array(values, np.int32, copy=True, ndmin=2)
+        if idx.shape != val.shape or idx.shape[0] != len(ids):
+            raise ValueError(f"raw block shape mismatch: {len(ids)} ids, "
+                             f"indices {idx.shape}, values {val.shape}")
+        b = len(self._blocks)
+        self._blocks.append((idx, val))
+        self._loc.update(zip(np.asarray(ids, np.int64).tolist(),
+                             ((b, r) for r in range(idx.shape[0]))))
+
+    def put_dense(self, ids: np.ndarray, x) -> None:
+        """Record dense categorical rows by their nonzero entries (psi maps
+        value 0 to bit 0, so a dense row and the COO of its nonzeros sketch
+        bit-identically under every spec)."""
+        x = np.asarray(x)
+        nz = x != 0
+        m = max(int(nz.sum(axis=1).max(initial=0)), 1)
+        # stable argsort floats each row's nonzero columns to the front in
+        # ascending-column order; surplus columns carry value 0 (inert)
+        cols = np.argsort(~nz, axis=1, kind="stable")[:, :m]
+        vals = np.where(np.take_along_axis(nz, cols, axis=1),
+                        np.take_along_axis(x, cols, axis=1), 0)
+        self.put(ids, cols, vals)
+
+    def drop(self, ids) -> None:
+        for id_ in np.atleast_1d(np.asarray(ids, np.int64)).tolist():
+            self._loc.pop(id_, None)
+
+    def missing(self, ids) -> np.ndarray:
+        """Subset of `ids` with no archived raw row — the rows a migration
+        cannot re-sketch."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        return ids[[int(i) not in self._loc for i in ids]]
+
+    def batch(self, ids) -> tuple[np.ndarray, np.ndarray]:
+        """Gather rows into one padded-COO batch (k, mpad) — the layout
+        `QueryEngine._sketch` takes.  KeyError on unarchived ids."""
+        rows = []
+        for id_ in np.atleast_1d(np.asarray(ids, np.int64)).tolist():
+            if id_ not in self._loc:
+                raise KeyError(f"id {id_} has no raw row in the archive")
+            b, r = self._loc[id_]
+            idx, val = self._blocks[b]
+            live = val[r] != 0
+            rows.append((idx[r][live], val[r][live]))
+        m = pow2_bucket(max((len(i) for i, _ in rows), default=0), floor=1)
+        k = len(rows)
+        out_i = np.zeros((k, m), np.int32)
+        out_v = np.zeros((k, m), np.int32)
+        for r, (i, v) in enumerate(rows):
+            out_i[r, : len(i)] = i
+            out_v[r, : len(i)] = v
+        return out_i, out_v
+
+    # -- snapshot / restore -------------------------------------------------
+
+    def state_tree(self) -> dict[str, np.ndarray]:
+        """Live rows as (ids, offsets, idx_flat, val_flat) — also the
+        archive's compaction: dead block rows do not survive a cycle."""
+        ids = np.sort(np.fromiter(self._loc.keys(), np.int64,
+                                  count=len(self._loc)))
+        parts_i, parts_v, lens = [], [], []
+        for id_ in ids.tolist():
+            b, r = self._loc[id_]
+            idx, val = self._blocks[b]
+            live = val[r] != 0
+            parts_i.append(idx[r][live])
+            parts_v.append(val[r][live])
+            lens.append(int(live.sum()))
+        offsets = np.zeros(len(ids) + 1, np.int64)
+        np.cumsum(lens, out=offsets[1:])
+        cat = (lambda p: np.concatenate(p) if p else np.zeros(0, np.int32))
+        return {"ids": ids, "offsets": offsets,
+                "idx": cat(parts_i), "val": cat(parts_v)}
+
+    @classmethod
+    def from_state(cls, tree: dict[str, np.ndarray]) -> "RawArchive":
+        self = cls()
+        ids, offsets = tree["ids"], tree["offsets"]
+        if len(ids) == 0:
+            return self
+        m = max(int(np.diff(offsets).max()), 1)
+        idx = np.zeros((len(ids), m), np.int32)
+        val = np.zeros((len(ids), m), np.int32)
+        for r in range(len(ids)):
+            lo, hi = int(offsets[r]), int(offsets[r + 1])
+            idx[r, : hi - lo] = tree["idx"][lo:hi]
+            val[r, : hi - lo] = tree["val"][lo:hi]
+        self.put(ids, idx, val)
+        return self
+
+
+class Migration:
+    """The in-flight re-sketch state machine (see module docstring).
+
+    Create through `QueryEngine.migrate` — the engine wires the event
+    relays, routes mutations, and serves cross-version queries; this class
+    owns the batch schedule, the cursor, and the journal.
+    """
+
+    def __init__(self, engine, new_spec: SketchSpec, *,
+                 batch_rows: int = 1024, drive: str = "lazy",
+                 journal_dir: str | None = None, journal_every: int = 1,
+                 journal_keep: int = 3):
+        if batch_rows < 1:
+            raise ValueError(f"batch_rows must be >= 1, got {batch_rows}")
+        if drive not in ("lazy", "manual", "eager"):
+            raise ValueError(
+                f"drive must be 'lazy', 'manual' or 'eager', got {drive!r}")
+        if engine.raw is None:
+            raise RuntimeError(
+                "migration needs the raw archive (keep_raw=True): packed "
+                "sketches cannot be re-sketched under a new spec")
+        stranded = engine.raw.missing(engine.store.ids())
+        if len(stranded):
+            raise RuntimeError(
+                f"{len(stranded)} alive rows (e.g. id {stranded[0]}) have "
+                "no raw archive entry — they were ingested via add_packed "
+                "without raw=(indices, values) and cannot be re-sketched")
+        self.engine = engine
+        self.src: SketchStore = engine.store
+        self.old_spec: SketchSpec = engine.spec
+        self.new_spec = new_spec
+        self.batch_rows = int(batch_rows)
+        self.drive = drive
+        self.journal_dir = journal_dir
+        self.journal_every = int(journal_every)
+        self.journal_keep = int(journal_keep)
+        self.dst = SketchStore(new_spec.d, spec=new_spec)
+        self.fresh = SketchStore(new_spec.d, spec=new_spec)
+        # fresh ids start above every migratable id, so migrated appends
+        # into dst stay ascending even with adds landing concurrently
+        self.fresh._next_id = self.src._next_id
+        self.phase = "resketch"
+        self.cursor = -1  # last migrated id
+        self.rows_migrated = 0
+        self.n_batches = 0
+        self._journal_step = self._next_journal_step()
+        self._dst_tiered: TieredLayout | None = None
+        self._fresh_tiered: TieredLayout | None = None
+        if journal_dir is not None and self._journal_step == 0:
+            # fresh journal dir: write the pre-migration engine as step 0,
+            # so a crash before the first batch boundary still leaves a
+            # restorable snapshot (engine._mig is not attached yet — this
+            # baseline deliberately carries no migration state)
+            engine.save(journal_dir, step=0, keep=journal_keep)
+            self._journal_step = 1
+        faultinject.crash_point(_CP_START)
+
+    # -- resume (QueryEngine.restore) ---------------------------------------
+
+    @classmethod
+    def resume(cls, engine, mmeta: dict, dst: SketchStore,
+               fresh: SketchStore) -> "Migration":
+        self = cls.__new__(cls)
+        self.engine = engine
+        self.src = engine.store
+        self.old_spec = engine.spec
+        self.new_spec = dst.spec
+        self.batch_rows = int(mmeta["batch_rows"])
+        # a crashed eager run resumes as lazy: it rides the request stream
+        # to completion instead of blocking the restore call
+        drive = mmeta.get("drive", "lazy")
+        self.drive = "lazy" if drive == "eager" else drive
+        self.journal_dir = mmeta.get("journal_dir")
+        self.journal_every = int(mmeta.get("journal_every", 1))
+        self.journal_keep = int(mmeta.get("journal_keep", 3))
+        self.dst = dst
+        self.fresh = fresh
+        self.phase = mmeta["phase"]
+        self.cursor = int(mmeta["cursor"])
+        self.rows_migrated = int(mmeta["rows_migrated"])
+        self.n_batches = int(mmeta.get("n_batches", 0))
+        self._journal_step = self._next_journal_step()
+        self._dst_tiered = None
+        self._fresh_tiered = None
+        return self
+
+    def meta(self) -> dict:
+        """The journal record `QueryEngine.save` embeds next to the store
+        trees: cursor + spec pair + store watermarks, atomically."""
+        return {
+            "phase": self.phase, "cursor": self.cursor,
+            "rows_migrated": self.rows_migrated, "n_batches": self.n_batches,
+            "batch_rows": self.batch_rows, "drive": self.drive,
+            "journal_dir": self.journal_dir,
+            "journal_every": self.journal_every,
+            "journal_keep": self.journal_keep,
+            "new_spec": self.new_spec.meta(),
+            "dst_meta": self.dst.state_meta(),
+            "fresh_meta": self.fresh.state_meta(),
+        }
+
+    # -- progress -----------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return self.phase == "done"
+
+    def remaining(self) -> int:
+        """Alive src rows still waiting to be re-sketched."""
+        return len(self.src)
+
+    def step(self, rows: int | None = None) -> int:
+        """Migrate up to `rows` (default batch_rows) src rows; returns how
+        many moved.  When src drains, folds fresh into dst and publishes —
+        after the call that returns with `done`, the engine serves entirely
+        at the new spec."""
+        if self.done:
+            return 0
+        rows = self.batch_rows if rows is None else max(1, int(rows))
+        take = self.src.ids()[:rows]
+        if len(take) == 0:
+            self._finish()
+            return 0
+        idx, val = self.engine.raw.batch(take)
+        sk, k = self.engine._sketch((idx, val),
+                                    params=self.new_spec.params)
+        faultinject.crash_point(_CP_RESKETCHED)
+        self.dst.add_with_ids(sk, take, n_valid=k)
+        # quiet tombstone: the rows MOVED, membership is unchanged — no
+        # "remove" event, but version/removed_count bump so the src layout
+        # resyncs its alive masks
+        self.src.remove(take, notify=False)
+        self.cursor = int(take[-1])
+        self.rows_migrated += len(take)
+        self.n_batches += 1
+        faultinject.crash_point(_CP_COMMITTED)
+        self._journal()
+        if len(self.src) == 0:
+            self._finish()
+        return len(take)
+
+    def run(self) -> None:
+        """Drive to completion (the eager path)."""
+        while not self.done:
+            self.step()
+
+    def _finish(self) -> None:
+        faultinject.crash_point(_CP_FOLD)
+        self.phase = "fold"
+        mat, n, ids = self.fresh.gather_alive()
+        if n:
+            self.dst.add_with_ids(mat, ids, n_valid=n)
+        # future ids must clear fresh's watermark even if its newest rows
+        # were removed before the fold
+        self.dst._next_id = max(self.dst._next_id, self.fresh._next_id)
+        self.phase = "done"
+        self.engine._publish_migration(self)
+        faultinject.crash_point(_CP_PUBLISHED)
+        if self.journal_dir is not None:
+            self.engine.save(self.journal_dir, step=self._journal_step,
+                             keep=self.journal_keep)
+
+    def _journal(self) -> None:
+        if self.journal_dir is None or self.n_batches % self.journal_every:
+            return
+        self.engine.save(self.journal_dir, step=self._journal_step,
+                         keep=self.journal_keep)
+        self._journal_step += 1
+
+    def _next_journal_step(self) -> int:
+        if self.journal_dir is None:
+            return 0
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        latest = Checkpointer(self.journal_dir,
+                              async_save=False).latest_step()
+        return 0 if latest is None else latest + 1
+
+    # -- cross-version serving helpers (used by QueryEngine) ----------------
+
+    def serving_tiers(self) -> list[tuple[TieredLayout, SketchSpec]]:
+        """(layout, spec) per non-empty store — the partition a
+        mid-migration query serves over.  src serves through the engine's
+        own layout (old spec); dst and fresh through layouts owned here."""
+        tiers = []
+        if len(self.src):
+            tiers.append((self.engine._layout(), self.old_spec))
+        if len(self.dst):
+            if self._dst_tiered is None:
+                self._dst_tiered = TieredLayout(
+                    self.dst, self.engine.metric,
+                    band_rows=self.engine.band_rows,
+                    merge_ratio=self.engine.merge_ratio)
+            tiers.append((self._dst_tiered.sync(self.dst), self.new_spec))
+        if len(self.fresh):
+            if self._fresh_tiered is None:
+                self._fresh_tiered = TieredLayout(
+                    self.fresh, self.engine.metric,
+                    band_rows=self.engine.band_rows,
+                    merge_ratio=self.engine.merge_ratio)
+            tiers.append((self._fresh_tiered.sync(self.fresh),
+                          self.new_spec))
+        return tiers
+
+    def store_of(self, id_: int) -> SketchStore:
+        """Which store currently serves `id_` (KeyError if none)."""
+        for store in (self.fresh, self.dst, self.src):
+            if store.contains(id_):
+                return store
+        raise KeyError(f"id {id_} not in store")

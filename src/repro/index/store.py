@@ -28,6 +28,7 @@ and id translation all happen on host without touching the device buffers.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import NamedTuple
 
 import numpy as np
@@ -35,7 +36,53 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packing
+from repro.core.cabin import CabinParams
 from repro.core.packing import pow2_bucket  # the shared bucketing rule
+from repro.runtime import faultinject
+
+_CP_COMPACT = faultinject.declare("store.compact")
+
+
+@dataclass(frozen=True)
+class SketchSpec:
+    """A VERSIONED sketch-space identity: the CabinParams every row in a
+    store was sketched under, plus a monotone generation counter.
+
+    The params alone already define the sketch space; the version exists so
+    serving code can ask the cheap question "same space?" without comparing
+    seeds, and so snapshots/journals can name which generation a tier
+    belongs to.  index/migrate.py moves an engine from spec v to v+1 by
+    re-sketching rows — two stores with different specs hold incomparable
+    bits, and the cross-version serving path must sketch each query once
+    per spec it touches.
+    """
+
+    version: int
+    params: CabinParams
+
+    @property
+    def d(self) -> int:
+        return self.params.sketch_dim
+
+    def successor(self, params: CabinParams) -> "SketchSpec":
+        if params.n_dims != self.params.n_dims:
+            raise ValueError(
+                f"spec migration cannot change n_dims "
+                f"({self.params.n_dims} -> {params.n_dims}): the raw rows "
+                "live in the original categorical space")
+        return SketchSpec(self.version + 1, params)
+
+    def meta(self) -> dict:
+        return {"version": self.version, "n_dims": self.params.n_dims,
+                "sketch_dim": self.params.sketch_dim,
+                "psi_seed": self.params.psi_seed,
+                "pi_seed": self.params.pi_seed}
+
+    @classmethod
+    def from_meta(cls, m: dict) -> "SketchSpec":
+        return cls(int(m["version"]), CabinParams(
+            n_dims=int(m["n_dims"]), sketch_dim=int(m["sketch_dim"]),
+            psi_seed=int(m["psi_seed"]), pi_seed=int(m["pi_seed"])))
 
 
 class VersionStamp(NamedTuple):
@@ -107,7 +154,11 @@ class SketchStore:
     stable across compaction and checkpoint restore) — never by slot.
     """
 
-    def __init__(self, d: int):
+    def __init__(self, d: int, spec: SketchSpec | None = None):
+        self.spec = spec  # which sketch space the rows live in (may be None
+        # for spec-agnostic uses; the engine always sets it)
+        if spec is not None and spec.d != int(d):
+            raise ValueError(f"d={d} disagrees with spec.d={spec.d}")
         self.d = int(d)
         self.w = packing.packed_width(self.d)
         cap = pow2_bucket(0)
@@ -258,6 +309,35 @@ class SketchStore:
         leading rows are real — the engine hands over its power-of-two
         padded sketch batches unchanged, so no reshape happens here.
         """
+        packed, k = self._check_batch(packed, n_valid)
+        if k == 0:
+            return np.zeros(0, np.int64)
+        new_ids = np.arange(self._next_id, self._next_id + k, dtype=np.int64)
+        return self._append(packed, k, new_ids, notify=True)
+
+    def add_with_ids(self, packed, ids, n_valid: int | None = None,
+                     *, notify: bool = False) -> np.ndarray:
+        """Append packed rows under EXPLICIT external ids — the migration
+        path (index/migrate.py), which rebuilds a store row-by-row while
+        preserving the original id assignment.  `ids` must be strictly
+        ascending and greater than every id already appended, so the
+        slot-order == id-order invariant survives by construction.
+        Defaults to notify=False: a migrated row is not new membership, and
+        per-id sidecars (ClusterIndex labels) must NOT double-count it."""
+        packed, k = self._check_batch(packed, n_valid)
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if len(ids) != k:
+            raise ValueError(f"{len(ids)} ids for {k} valid rows")
+        if k == 0:
+            return np.zeros(0, np.int64)
+        floor = self._ids[self._size - 1] if self._size else -1
+        if ids[0] <= floor or (k > 1 and (np.diff(ids) <= 0).any()):
+            raise ValueError(
+                "add_with_ids requires strictly ascending ids above the "
+                f"store's last id ({floor}); got head {ids[:4]}")
+        return self._append(packed, k, ids, notify=notify)
+
+    def _check_batch(self, packed, n_valid) -> tuple[jnp.ndarray, int]:
         packed = jnp.asarray(packed)
         if packed.ndim != 2 or packed.shape[1] != self.w:
             raise ValueError(
@@ -266,8 +346,10 @@ class SketchStore:
         if not 0 <= k <= packed.shape[0]:
             raise ValueError(
                 f"n_valid={k} outside the {packed.shape[0]} supplied rows")
-        if k == 0:
-            return np.zeros(0, np.int64)
+        return packed, k
+
+    def _append(self, packed: jnp.ndarray, k: int, new_ids: np.ndarray,
+                *, notify: bool) -> np.ndarray:
         kpad = pow2_bucket(k)
         if packed.shape[0] < kpad:
             packed = jnp.pad(packed, ((0, kpad - packed.shape[0]), (0, 0)))
@@ -280,7 +362,6 @@ class SketchStore:
         if self._placement is not None:
             self._sk_buf = self._place(self._sk_buf)
             self._wt_buf = self._place(self._wt_buf)
-        new_ids = np.arange(self._next_id, self._next_id + k, dtype=np.int64)
         sl = slice(self._size, self._size + k)
         self._ids[sl] = new_ids
         self._alive[sl] = True
@@ -290,15 +371,22 @@ class SketchStore:
         self._weights[sl] = np.asarray(self._wt_buf[sl], np.int64)
         self._size += k
         self._n_alive += k
-        self._next_id += k
+        self._next_id = max(self._next_id, int(new_ids[-1]) + 1)
         self._bump()
-        self._notify("add", new_ids,
-                     np.arange(self._size - k, self._size, dtype=np.int64))
+        if notify:
+            self._notify("add", new_ids,
+                         np.arange(self._size - k, self._size,
+                                   dtype=np.int64))
         return new_ids
 
-    def remove(self, ids) -> int:
+    def remove(self, ids, *, notify: bool = True) -> int:
         """Tombstone rows by id (device buffers untouched).  Raises KeyError
-        on unknown or already-removed ids.  Returns the number removed."""
+        on unknown or already-removed ids.  Returns the number removed.
+
+        notify=False is the QUIET tombstone the migration uses when a row
+        leaves this store because it moved to the new-spec store: membership
+        is unchanged globally, so per-id sidecars must not see a "remove" —
+        but version/removed_count still bump so layouts resync."""
         ids = np.atleast_1d(np.asarray(ids, np.int64))
         if len(np.unique(ids)) != len(ids):
             raise ValueError("duplicate ids in remove batch")
@@ -311,12 +399,14 @@ class SketchStore:
         self._n_alive -= len(ids)
         self._n_removed_total += len(ids)
         self._bump()
-        self._notify("remove", ids, slots.astype(np.int64))
+        if notify:
+            self._notify("remove", ids, slots.astype(np.int64))
         return len(ids)
 
     def compact(self) -> None:
         """Drop tombstoned slots, preserving insertion order, and shrink the
         buffers to the smallest power-of-two capacity that fits."""
+        faultinject.crash_point(_CP_COMPACT)
         slots = self.alive_slots()
         n = len(slots)
         cap = pow2_bucket(n)
@@ -406,9 +496,9 @@ class SketchStore:
         return {"d": self.d, "size": self._size, "next_id": self._next_id}
 
     @classmethod
-    def from_state(cls, tree: dict[str, np.ndarray], meta: dict
-                   ) -> "SketchStore":
-        store = cls(int(meta["d"]))
+    def from_state(cls, tree: dict[str, np.ndarray], meta: dict,
+                   spec: SketchSpec | None = None) -> "SketchStore":
+        store = cls(int(meta["d"]), spec=spec)
         size = int(meta["size"])
         cap = pow2_bucket(size)
         sk = np.zeros((cap, store.w), np.int32)

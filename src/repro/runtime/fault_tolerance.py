@@ -16,8 +16,13 @@ single-controller stack supports:
     shard (documented policy — data reassignment happens in the pipeline's
     host_index/n_hosts parameters).
 
-Everything is exercised in-process by tests (simulated failures); the file
-protocol is host-agnostic.
+Exercised by real tests rather than asserted here: heartbeat timeout and
+malformed-beat handling in tests/test_train_checkpoint_ft.py
+(test_heartbeat_failure_detection, test_dead_hosts_tolerates_malformed_beat),
+elastic degradation in test_plan_degraded_mesh, and crash recovery itself —
+injected process kills at every registered crash point — in
+tests/test_faultinject.py via repro.runtime.faultinject.  The file protocol
+is host-agnostic.
 """
 
 from __future__ import annotations
@@ -69,7 +74,11 @@ class FailureDetector:
         dead = []
         for h in expected_hosts:
             b = beats.get(h)
-            if b is None or now - b["time"] > self.timeout_s:
+            # a beat missing "time" (or carrying a non-numeric one) passed
+            # read_all's "host" check but proves nothing about liveness —
+            # treat it exactly like no beat at all
+            t = b.get("time") if b is not None else None
+            if not isinstance(t, (int, float)) or now - t > self.timeout_s:
                 dead.append(h)
         return dead
 

@@ -1,0 +1,142 @@
+"""Fault injection: named crash points that turn "recovers from a crash
+anywhere" into an enumerable property.
+
+The recovery claims this repo makes (Checkpointer's atomic publish, the
+index's crash-safe migration journal) are only as strong as the set of
+interruption points they were actually tested at.  This module gives every
+durability-critical code path a NAMED crash point::
+
+    _CP_PUBLISH = faultinject.declare("checkpointer.save.published")
+    ...
+    faultinject.crash_point(_CP_PUBLISH)
+
+`declare` runs at import time, so the full set of points is enumerable
+(`registered_points()`) without executing any path — the crash-matrix test
+in tests/test_faultinject.py arms each one in turn and asserts recovery.
+
+Two trigger mechanisms:
+
+  * programmatic — `arm(name)` / the `armed(name)` context manager make the
+    next hit of that point raise `InjectedCrash` (a BaseException subclass,
+    so no library `except Exception` can swallow it).  The point disarms on
+    fire: one arm, one crash.  This is the in-process test path — the test
+    catches InjectedCrash at its top level and then recovers FROM DISK ONLY,
+    which is exactly the state a killed process would leave behind.
+  * environment — set REPRO_CRASH_POINT=<name> (and optionally
+    REPRO_CRASH_MODE=exit) before starting a subprocess: the first hit of
+    that point calls os._exit(EXIT_CODE), an un-catchable process death
+    with no atexit/finally cleanup — the honest crash.  The subprocess test
+    uses this to validate that in-process raising is not hiding behind
+    interpreter teardown.
+
+When nothing is armed, `crash_point` is a single global-is-None check —
+cheap enough to leave in serving hot paths (the idle-overhead bench bar in
+ISSUE 6 covers this).  Triggers are process-wide module state rather than
+contextvars because crash points fire from helper threads too
+(Checkpointer's async save), and contextvars do not propagate into
+`threading.Thread` targets.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+
+EXIT_CODE = 17  # distinguishes an injected kill from any real failure
+
+_ENV_POINT = "REPRO_CRASH_POINT"
+_ENV_MODE = "REPRO_CRASH_MODE"
+
+_registry: set[str] = set()
+_armed: str | None = None
+_armed_mode: str = "raise"
+_record = False  # hit recording is test-only: a server must not grow a log
+_hits: list[str] = []  # points crossed while recording was on, in order
+
+
+class InjectedCrash(BaseException):
+    """Raised (not Exception — nothing may swallow it) at an armed point."""
+
+    def __init__(self, point: str):
+        super().__init__(f"injected crash at {point!r}")
+        self.point = point
+
+
+def declare(name: str) -> str:
+    """Register a crash-point name (idempotent) and return it.  Call at
+    module import so `registered_points` enumerates every point without
+    executing the paths that contain them."""
+    _registry.add(name)
+    return name
+
+
+def registered_points() -> tuple[str, ...]:
+    """All declared crash points, sorted — the crash-matrix test's domain."""
+    return tuple(sorted(_registry))
+
+
+def arm(name: str, mode: str = "raise") -> None:
+    """Arm `name`: its next `crash_point` hit fires once, then disarms.
+    mode "raise" raises InjectedCrash; mode "exit" calls os._exit."""
+    global _armed, _armed_mode
+    if name not in _registry:
+        raise ValueError(f"unknown crash point {name!r}; "
+                         f"registered: {registered_points()}")
+    if mode not in ("raise", "exit"):
+        raise ValueError(f"mode must be 'raise' or 'exit', got {mode!r}")
+    _armed, _armed_mode = name, mode
+
+
+def disarm() -> None:
+    global _armed
+    _armed = None
+
+
+@contextlib.contextmanager
+def armed(name: str, mode: str = "raise"):
+    """Context manager form of arm(); always disarms on exit (the point may
+    not have been reached — e.g. enumerating points some scenario skips)."""
+    arm(name, mode)
+    try:
+        yield
+    finally:
+        disarm()
+
+
+def record_hits(enabled: bool = True) -> None:
+    """Toggle hit recording (off by default: a long-lived server must not
+    accumulate a hit log)."""
+    global _record
+    _record = enabled
+
+
+def hits() -> tuple[str, ...]:
+    """Crash points crossed while recording was enabled, in order — lets
+    tests assert a scenario actually reaches a point before trusting a
+    no-crash run of it."""
+    return tuple(_hits)
+
+
+def clear_hits() -> None:
+    del _hits[:]
+
+
+def crash_point(name: str) -> None:
+    """Die here iff `name` is armed (programmatically or via env)."""
+    global _armed
+    if _record:
+        _hits.append(name)
+    if _armed is not None and name == _armed:
+        _armed = None  # one arm, one crash
+        if _armed_mode == "exit":
+            os._exit(EXIT_CODE)
+        raise InjectedCrash(name)
+
+
+# env trigger, picked up once at import: subprocess tests set
+# REPRO_CRASH_POINT before exec'ing the child, so the armed state exists
+# before any call site runs, and the serving-path cost of crash_point stays
+# one global comparison regardless of trigger mechanism.
+if os.environ.get(_ENV_POINT):
+    _armed = os.environ[_ENV_POINT]
+    _armed_mode = os.environ.get(_ENV_MODE, "exit")

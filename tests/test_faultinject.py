@@ -1,0 +1,352 @@
+"""Fault injection: the crash matrix, checkpoint integrity, orphan sweep.
+
+The recovery story is only as strong as the set of interruption points it
+was tested at, so these tests enumerate `faultinject.registered_points()`
+and kill the system at EVERY one — in-process (InjectedCrash caught at the
+test's top level, then recovery FROM DISK ONLY, which is exactly the state
+a dead process leaves) and once via a real subprocess os._exit, to prove
+the in-process form isn't hiding behind interpreter teardown.  The
+invariant asserted everywhere: restore finds an intact snapshot, resumes,
+and the final state is bit-identical to the run that was never killed —
+with every journaled (acked-durable) mutation present.
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (CheckpointCorruptError,
+                                           Checkpointer)
+from repro.core.cabin import CabinParams
+from repro.index import QueryEngine
+from repro.runtime import faultinject
+
+N_DIMS = 300
+P_OLD = CabinParams(n_dims=N_DIMS, sketch_dim=64, psi_seed=21, pi_seed=22)
+P_NEW = CabinParams(n_dims=N_DIMS, sketch_dim=128, psi_seed=21, pi_seed=22)
+
+SAVE_POINTS = tuple(p for p in faultinject.registered_points()
+                    if p.startswith("checkpointer.save."))
+MIGRATE_POINTS = tuple(p for p in faultinject.registered_points()
+                       if p.startswith("migrate."))
+
+
+def _rows(n, seed):
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, N_DIMS), np.int32)
+    for r in range(n):
+        cols = rng.choice(N_DIMS, size=rng.integers(8, 25), replace=False)
+        x[r, cols] = rng.integers(1, 6, size=len(cols))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# harness mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_every_durability_path():
+    pts = faultinject.registered_points()
+    assert set(SAVE_POINTS) == {
+        "checkpointer.save.tmp_written",
+        "checkpointer.save.arrays_written",
+        "checkpointer.save.meta_written",
+        "checkpointer.save.published",
+    }
+    assert set(MIGRATE_POINTS) == {
+        "migrate.start", "migrate.batch.resketched",
+        "migrate.batch.committed", "migrate.fold", "migrate.published",
+    }
+    assert "store.compact" in pts
+
+
+def test_arm_fires_once_then_disarms():
+    with pytest.raises(ValueError):
+        faultinject.arm("no.such.point")
+    faultinject.arm("store.compact")
+    with pytest.raises(faultinject.InjectedCrash) as ei:
+        faultinject.crash_point("store.compact")
+    assert ei.value.point == "store.compact"
+    faultinject.crash_point("store.compact")  # disarmed: no second crash
+    # armed() always disarms, even when the point is never reached
+    with faultinject.armed("store.compact"):
+        pass
+    faultinject.crash_point("store.compact")
+
+
+def test_hit_recording_is_opt_in():
+    faultinject.clear_hits()
+    faultinject.crash_point("store.compact")
+    assert faultinject.hits() == ()
+    faultinject.record_hits(True)
+    try:
+        faultinject.crash_point("store.compact")
+        faultinject.crash_point("migrate.start")
+    finally:
+        faultinject.record_hits(False)
+    assert faultinject.hits() == ("store.compact", "migrate.start")
+    faultinject.clear_hits()
+
+
+# ---------------------------------------------------------------------------
+# checkpointer: crash matrix + integrity + sweep
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.random((5, 7)).astype(np.float32),
+            "ids": np.arange(seed, seed + 4, dtype=np.int64)}
+
+
+@pytest.mark.parametrize("point", SAVE_POINTS)
+def test_save_crash_matrix_recovers_newest_intact(tmp_path, point):
+    """Kill the save at every stage: recovery must see either the previous
+    step (crash before publish) or the new one (crash after), never a torn
+    mix — and a later Checkpointer must sweep the staging corpse."""
+    d = str(tmp_path)
+    ck = Checkpointer(d, async_save=False)
+    ck.save(0, _tree(0), block=True)
+    with faultinject.armed(point):
+        try:
+            ck.save(1, _tree(1), block=True)
+            crashed = False
+        except faultinject.InjectedCrash:
+            crashed = True
+    assert crashed
+    # recover from disk only, as a fresh process would
+    ck2 = Checkpointer(d, async_save=False)
+    assert not any(n.startswith(".tmp_step_") for n in os.listdir(d))
+    flat, step = ck2.restore()
+    expect = 1 if point == "checkpointer.save.published" else 0
+    assert step == expect
+    ref = {k: np.asarray(v) for k, v in _tree(expect).items()}
+    for k, v in ref.items():
+        assert np.array_equal(flat[k], v)
+
+
+def test_orphan_tmp_dirs_swept_on_init(tmp_path):
+    d = str(tmp_path)
+    ck = Checkpointer(d, async_save=False)
+    ck.save(0, _tree(0), block=True)
+    orphan = os.path.join(d, ".tmp_step_7")
+    os.makedirs(orphan)
+    with open(os.path.join(orphan, "arrays.npz"), "w") as f:
+        f.write("torn")
+    Checkpointer(d, async_save=False)
+    assert not os.path.exists(orphan)
+    # published steps untouched
+    _, step = Checkpointer(d, async_save=False).restore()
+    assert step == 0
+
+
+def _corrupt_array(directory, step, key, mutate):
+    path = os.path.join(directory, f"step_{step}", "arrays.npz")
+    with np.load(path) as data:
+        flat = {k: data[k].copy() for k in data.files}
+    flat[key] = mutate(flat[key])
+    np.savez(path, **flat)
+
+
+def test_corruption_detected_named_and_skipped(tmp_path):
+    d = str(tmp_path)
+    ck = Checkpointer(d, keep=10, async_save=False)
+    ck.save(0, _tree(0), block=True)
+    ck.save(1, _tree(1), block=True)
+
+    # bit-flip: CRC mismatch, naming step and key
+    _corrupt_array(d, 1, "w", lambda a: a + 1)
+    with pytest.raises(CheckpointCorruptError) as ei:
+        ck.verify(1)
+    assert ei.value.step == 1 and ei.value.key == "w"
+    assert "CRC32" in str(ei.value)
+    # an explicit step that fails verification raises...
+    with pytest.raises(CheckpointCorruptError):
+        ck.restore(step=1)
+    # ...but step=None falls back to the newest INTACT step
+    flat, step = ck.restore()
+    assert step == 0
+    assert np.array_equal(flat["ids"], _tree(0)["ids"])
+    assert ck.latest_intact_step() == 0
+
+    # shape mismatch is its own named failure
+    ck.save(2, _tree(2), block=True)
+    _corrupt_array(d, 2, "ids", lambda a: a[:2])
+    with pytest.raises(CheckpointCorruptError) as ei:
+        ck.verify(2)
+    assert ei.value.key == "ids" and "shape" in str(ei.value)
+
+    # file-level truncation: key is None
+    ck.save(3, _tree(3), block=True)
+    npz = os.path.join(d, "step_3", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    with pytest.raises(CheckpointCorruptError) as ei:
+        ck.verify(3)
+    assert ei.value.step == 3 and ei.value.key is None
+
+    # every step corrupt -> restore(step=None) raises, not loops
+    _corrupt_array(d, 0, "w", lambda a: a * 2)
+    with pytest.raises(CheckpointCorruptError, match="no intact step"):
+        ck.restore()
+
+
+def test_subprocess_kill_is_equivalent_to_injected_raise(tmp_path):
+    """The honest crash: a child process dies at an armed point via
+    os._exit (no atexit, no finally) mid-save; the parent recovers exactly
+    as the in-process matrix predicts."""
+    d = str(tmp_path)
+    Checkpointer(d, async_save=False).save(0, _tree(0), block=True)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    child = (
+        "import numpy as np\n"
+        "from repro.checkpoint.checkpointer import Checkpointer\n"
+        f"ck = Checkpointer({d!r}, async_save=False)\n"
+        "ck.save(1, {'w': np.ones((5, 7), np.float32),\n"
+        "            'ids': np.arange(1, 5)}, block=True)\n"
+    )
+    env = dict(os.environ, PYTHONPATH=src,
+               REPRO_CRASH_POINT="checkpointer.save.arrays_written",
+               REPRO_CRASH_MODE="exit")
+    proc = subprocess.run([sys.executable, "-c", child], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == faultinject.EXIT_CODE, proc.stderr
+    ck = Checkpointer(d, async_save=False)   # sweeps the orphan
+    assert not any(n.startswith(".tmp_step_") for n in os.listdir(d))
+    flat, step = ck.restore()
+    assert step == 0
+    assert np.array_equal(flat["ids"], _tree(0)["ids"])
+
+
+# ---------------------------------------------------------------------------
+# index engine: crash matrix over compact + every migration phase
+# ---------------------------------------------------------------------------
+
+
+def _build_engine(metric, journal, x):
+    eng = QueryEngine(P_OLD, metric=metric, cache_entries=0)
+    ids = eng.add_dense(x)
+    eng.remove(ids[1:3])
+    eng.save(journal, step=0, keep=20)       # durability baseline
+    return eng
+
+
+def _reference_final(metric, x):
+    """The never-crashed outcome: the same membership fresh-built at the
+    new spec (the migration bit-identity contract)."""
+    ref = QueryEngine(P_NEW, metric=metric, cache_entries=0)
+    ids = ref.add_dense(x)
+    ref.remove(ids[1:3])
+    return ref
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+@pytest.mark.parametrize("point", MIGRATE_POINTS + ("store.compact",))
+def test_engine_crash_matrix_no_acked_row_lost(tmp_path, point, metric):
+    """Kill the engine at every migration/compaction crash point, recover
+    from the journal directory only, finish the migration, and require the
+    final answers bit-identical to the never-crashed run — for both
+    metrics.  Every row acked before the baseline snapshot must survive
+    every crash."""
+    x = _rows(26, seed=hash(point) % 1000)
+    journal = str(tmp_path / "journal")
+    eng = _build_engine(metric, journal, x)
+    expected_ids = eng.ids().copy()
+
+    faultinject.record_hits(True)
+    faultinject.clear_hits()
+    try:
+        with faultinject.armed(point):
+            try:
+                if point == "store.compact":
+                    eng.compact()
+                else:
+                    eng.migrate(new_params=P_NEW, batch_rows=7,
+                                drive="manual", journal_dir=journal,
+                                journal_every=1, journal_keep=20)
+                    eng.migrate_all()
+                crashed = False
+            except faultinject.InjectedCrash as e:
+                assert e.point == point
+                crashed = True
+    finally:
+        hits = faultinject.hits()
+        faultinject.record_hits(False)
+        faultinject.clear_hits()
+    assert crashed, f"scenario never reached {point} (hits: {hits})"
+
+    # recover FROM DISK ONLY — the in-memory engine is the dead process
+    res = QueryEngine.restore(journal)
+    assert np.array_equal(np.sort(res.ids()), np.sort(expected_ids)), \
+        "acked rows lost across the crash"
+    if res.migrating:
+        res.migrate_all()
+    elif res.spec.version == 0:
+        res.migrate(new_params=P_NEW, drive="eager")
+    assert res.spec.version == 1 and res.d == P_NEW.sketch_dim
+
+    ref = _reference_final(metric, x)
+    q = _rows(4, seed=77)
+    a_ids, a_d = res.topk(q, 5)
+    b_ids, b_d = ref.topk(q, 5)
+    assert np.array_equal(a_ids, b_ids)
+    assert np.array_equal(a_d, b_d)
+    r = 30.0 if metric == "hamming" else 60.0
+    for a, b in zip(res.radius(q, r), ref.radius(q, r)):
+        assert np.array_equal(a, b)
+
+
+def test_mid_migration_acked_mutations_survive_crash(tmp_path):
+    """Rows acked AND journaled mid-migration (they landed in the new-spec
+    fresh tier, then a batch boundary journaled the whole engine) must
+    survive a crash at the next batch — the lazy tier routing exists
+    precisely so acked work never needs re-migration."""
+    x = _rows(30, seed=5)
+    late = _rows(4, seed=6)
+    journal = str(tmp_path / "journal")
+    eng = _build_engine("cham", journal, x)
+    eng.migrate(new_params=P_NEW, batch_rows=6, drive="manual",
+                journal_dir=journal, journal_every=1, journal_keep=20)
+    eng.migration_step()
+    late_ids = eng.add_dense(late)           # acked into the fresh tier
+    eng.migration_step()                     # batch boundary -> journaled
+    with faultinject.armed("migrate.batch.resketched"):
+        with pytest.raises(faultinject.InjectedCrash):
+            eng.migration_step()
+
+    res = QueryEngine.restore(journal)
+    assert set(late_ids.tolist()) <= set(res.ids().tolist()), \
+        "journaled acked mutation lost"
+    res.migrate_all()
+    # and they are served under the new spec, identically to a fresh build
+    ref = QueryEngine(P_NEW, metric="cham", cache_entries=0)
+    ids = ref.add_dense(np.concatenate([x, late]))
+    ref.remove(ids[1:3])
+    a_ids, a_d = res.topk(late[:2], 3)
+    b_ids, b_d = ref.topk(late[:2], 3)
+    assert np.array_equal(a_ids, b_ids) and np.array_equal(a_d, b_d)
+
+
+def test_compact_crash_leaves_serving_state_intact(tmp_path):
+    """The in-process view after a compaction crash still serves correctly
+    (the crash fires before any buffer is touched), and the on-disk
+    snapshot is unaffected."""
+    x = _rows(12, seed=8)
+    journal = str(tmp_path / "journal")
+    eng = _build_engine("cham", journal, x)
+    before = eng.topk(x[:2], 3)
+    with faultinject.armed("store.compact"):
+        with pytest.raises(faultinject.InjectedCrash):
+            eng.compact()
+    after = eng.topk(x[:2], 3)
+    assert np.array_equal(before[0], after[0])
+    assert np.array_equal(before[1], after[1])
+    res = QueryEngine.restore(journal)
+    r_ids, r_d = res.topk(x[:2], 3)
+    assert np.array_equal(before[0], r_ids)
+    assert np.array_equal(before[1], r_d)

@@ -149,6 +149,21 @@ def test_heartbeat_failure_detection(tmp_path):
     assert det.dead_hosts([0, 1], now=time.time() + 100) == [0, 1]
 
 
+def test_dead_hosts_tolerates_malformed_beat(tmp_path):
+    # a beat file that parses as JSON but lacks a numeric "time" must be
+    # treated as a dead host, never raise (regression: KeyError on "time")
+    import json
+
+    hb_dir = str(tmp_path)
+    HeartbeatWriter(hb_dir, 0).beat(5)
+    with open(f"{hb_dir}/heartbeat_1.json", "w") as f:
+        json.dump({"host": 1, "step": 5}, f)  # missing "time"
+    with open(f"{hb_dir}/heartbeat_2.json", "w") as f:
+        json.dump({"host": 2, "step": 5, "time": "soon"}, f)  # non-numeric
+    det = FailureDetector(hb_dir, timeout_s=1e9)
+    assert det.dead_hosts([0, 1, 2]) == [1, 2]
+
+
 def test_straggler_monitor():
     mon = StragglerMonitor(window=10, threshold=2.0)
     for _ in range(10):
