@@ -31,9 +31,11 @@ import time
 import numpy as np
 
 from benchmarks.common import emit
+from repro.cluster import ClusterIndex
 from repro.core import CabinParams
 from repro.core import packing
 from repro.core.kmode import kmode_packed, kmode_precomputed
+from repro.index import QueryEngine
 
 VOCAB = 32768
 D = 512
@@ -143,4 +145,31 @@ def bench_cluster(n_small: int = 4096, n_large: int = 65536, k: int = 16,
         assert speedup >= speedup_bar, (
             f"device clustering only {speedup:.2f}x the host oracle at "
             f"N={n_large} (bar {speedup_bar}x)")
+
+    # --- online assignment tail latency (the repro.cluster serving path) --
+    # Classification via ClusterIndex.assign_packed is a query op like
+    # topk/radius: its latency lands in the owning engine's flight recorder
+    # under op="assign".  Distinct query slices each iteration keep the
+    # centre engine's LRU out of the measurement.
+    eng = QueryEngine(CabinParams.create(VOCAB, D, seed=0), cache_entries=0)
+    eng.add_packed(sk[:n_small])
+    cidx = ClusterIndex(eng, k, n_iter=n_iter, seed=0)
+    qb = 64
+    cidx.assign_packed(sk[:qb])  # warm the assign graphs
+    h = eng.obs.histogram("engine_query_latency_ms", op="assign")
+    h.reset()
+    assign_iters = 12
+    t0 = time.perf_counter()
+    for i in range(assign_iters):
+        lab = cidx.assign_packed(sk[i * qb: (i + 1) * qb])
+    t_assign = time.perf_counter() - t0
+    assert lab.shape == (qb,) and (lab >= 0).all() and (lab < k).all()
+    summary["assign_rows_per_s"] = assign_iters * qb / t_assign
+    emit("cluster.assign", t_assign * 1e6 / (assign_iters * qb),
+         f"{assign_iters * qb / t_assign:.0f} rows/s;batch={qb}")
+    if h.count:  # absent under REPRO_OBS=0 (null histogram, count 0)
+        summary["p50_ms_assign"] = h.quantile(50)
+        summary["p99_ms_assign"] = h.quantile(99)
+        emit("cluster.assign_tail", 0.0,
+             f"p50={h.quantile(50):.3f}ms;p99={h.quantile(99):.3f}ms")
     return summary

@@ -84,6 +84,20 @@ def bench_index(n_small: int = 4096, n_large: int = 65536, k: int = 10,
         emit(f"index.query_n{n}", t_q * 1e6 / n_queries,
              f"qps={n_queries / t_q:.1f};k={k}")
 
+        # tail latency from the engine's own flight recorder: reset the
+        # per-op histogram AFTER warmup (compile-time outliers are not a
+        # serving claim) and run a measured window.  Under REPRO_OBS=0 the
+        # null histogram stays at count 0 and the keys are simply absent.
+        h = eng.obs.histogram("engine_query_latency_ms", op="topk")
+        h.reset()
+        for _ in range(12):
+            eng.topk((q_idx, q_val), k)
+        if h.count:
+            summary[f"p50_ms_topk_n{n}"] = h.quantile(50)
+            summary[f"p99_ms_topk_n{n}"] = h.quantile(99)
+            emit(f"index.query_tail_n{n}", 0.0,
+                 f"p50={h.quantile(50):.3f}ms;p99={h.quantile(99):.3f}ms")
+
     # --- incremental add vs full rebuild at n_large -----------------------
     t_rebuild, _ = timeit(lambda: _build(idx_l, val_l), repeat=1)
     params = CabinParams.create(VOCAB, D, seed=0)
@@ -152,9 +166,11 @@ def bench_mixed_traffic(n_small: int = 4096, n_large: int = 65536,
     idx_l, val_l = _sparse_rows(
         n_large + churn * (rounds + warm_rounds + 1), seed=1)
 
-    def mixed_loop(n: int, **engine_kwargs) -> float:
-        """Queries/s over `rounds` of (add churn, remove churn, query),
-        after one untimed merge cycle of warmup."""
+    def mixed_loop(n: int, **engine_kwargs) -> tuple[float, object]:
+        """(queries/s, topk latency histogram) over `rounds` of (add churn,
+        remove churn, query), after one untimed merge cycle of warmup.  The
+        histogram covers only the timed rounds (reset after warmup); under
+        REPRO_OBS=0 it is the null instrument with count 0."""
         engine_kwargs.setdefault("merge_ratio", merge_rows / n)
         eng = _build(idx_l[:n], val_l[:n], **engine_kwargs)
         fresh_lo, remove_lo = n, 0
@@ -172,19 +188,24 @@ def bench_mixed_traffic(n_small: int = 4096, n_large: int = 65536,
 
         for _ in range(warm_rounds):
             one_round()
+        h = eng.obs.histogram("engine_query_latency_ms", op="topk")
+        h.reset()
         t0 = time.perf_counter()
         for _ in range(rounds):
             one_round()
-        return rounds * q_batch / (time.perf_counter() - t0)
+        return rounds * q_batch / (time.perf_counter() - t0), h
 
     for n in (n_small, n_large):
-        qps = mixed_loop(n)
+        qps, h = mixed_loop(n)
         summary[f"qps_mixed_n{n}"] = qps
+        if h.count:
+            summary[f"p50_ms_topk_mixed_n{n}"] = h.quantile(50)
+            summary[f"p99_ms_topk_mixed_n{n}"] = h.quantile(99)
         emit(f"index.mixed_n{n}", 1e6 / qps,
              f"qps_mixed={qps:.1f};churn={churn};k={k}")
     # same traffic under the pre-tiered policy: the end-to-end cost of
     # putting a layout rebuild in front of every post-mutation query
-    qps_rb = mixed_loop(n_large, merge_ratio=0.0)
+    qps_rb, _ = mixed_loop(n_large, merge_ratio=0.0)
     summary[f"qps_mixed_rebuild_n{n_large}"] = qps_rb
     emit(f"index.mixed_rebuild_n{n_large}", 1e6 / qps_rb,
          f"qps_mixed={qps_rb:.1f}")
@@ -265,9 +286,14 @@ def bench_migration(n: int = 32768, d_new: int = 1024,
     eng2.migration_step()
     eng2.add_sparse(idx[:4], val[:4])  # populate the fresh tier too
     eng2.topk((q_idx, q_val), k)  # warm the three-tier merge graphs
+    h = eng2.obs.histogram("engine_query_latency_ms", op="topk")
+    h.reset()
     t_mid, (ids, _) = timeit(lambda: eng2.topk((q_idx, q_val), k), repeat=3)
     assert ids.shape == (q_batch, k)
     summary["qps_mid_migration"] = q_batch / t_mid
+    if h.count:
+        summary["p50_ms_topk_mid_migration"] = h.quantile(50)
+        summary["p99_ms_topk_mid_migration"] = h.quantile(99)
     emit("index.query_mid_migration", t_mid * 1e6 / q_batch,
          f"qps={q_batch / t_mid:.1f};k={k}")
 

@@ -1,0 +1,102 @@
+"""Observability overhead guard: flight recorder on vs REPRO_OBS=0.
+
+The repro.obs contract (DESIGN.md section 11) is that instrumentation is
+cheap enough to leave on in production — under 5% on the steady-state
+query path — and that REPRO_OBS=0 buys the rest back exactly (same compiled
+graphs, null instruments).  This script turns that claim into a CI gate:
+
+  * each mode runs in its OWN subprocess (REPRO_OBS is read at import
+    time; toggling it in-process would test the configure() path, not the
+    deployment switch), measuring steady-state topk throughput against a
+    live 4k-row store after warmup;
+  * each mode runs `repeats` times and the BEST run counts — the guard
+    compares the modes' speed-of-light, not their scheduler noise;
+  * overhead = (t_on / t_off - 1); fail above `--bar` percent (default 5).
+
+Usage: python benchmarks/obs_overhead.py [--bar 5.0] [--repeats 3]
+(The child mode `--measure` is internal: it prints one JSON line.)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+N_ROWS = 4096
+N_QUERIES = 64
+K = 10
+LOOP = 200
+
+
+def _measure() -> None:
+    """Child: steady-state us/query for the current REPRO_OBS setting."""
+    from benchmarks.bench_index import _build, _sparse_rows
+    from repro import obs
+
+    idx, val = _sparse_rows(N_ROWS)
+    q_idx, q_val = idx[:N_QUERIES], val[:N_QUERIES]
+    eng = _build(idx, val)
+    for _ in range(5):  # warm: compile + first-touch caches
+        eng.topk((q_idx, q_val), k=K)
+    t0 = time.perf_counter()
+    for _ in range(LOOP):
+        ids, _ = eng.topk((q_idx, q_val), k=K)
+    t = time.perf_counter() - t0
+    assert ids.shape == (N_QUERIES, K)
+    h = eng.obs.histogram("engine_query_latency_ms", op="topk")
+    # prove the switch took: instruments live iff obs is enabled
+    assert (h.count > 0) == obs.enabled(), (h.count, obs.enabled())
+    print(json.dumps({"us_per_query": t * 1e6 / (LOOP * N_QUERIES),
+                      "obs_enabled": obs.enabled()}))
+
+
+def _run_child(obs_on: bool) -> float:
+    env = dict(os.environ)
+    env["REPRO_OBS"] = "1" if obs_on else "0"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(_ROOT, "src"), _ROOT,
+                    env.get("PYTHONPATH")) if p)
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--measure"],
+        capture_output=True, text=True, env=env, cwd=_ROOT)
+    if out.returncode != 0:
+        raise SystemExit(
+            f"measurement child (REPRO_OBS={env['REPRO_OBS']}) failed:\n"
+            f"{out.stdout}\n{out.stderr}")
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["obs_enabled"] == obs_on
+    return float(rec["us_per_query"])
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    if "--measure" in args:
+        _measure()
+        return
+    bar = 5.0
+    repeats = 3
+    if "--bar" in args:
+        bar = float(args[args.index("--bar") + 1])
+    if "--repeats" in args:
+        repeats = int(args[args.index("--repeats") + 1])
+    t_on = min(_run_child(True) for _ in range(repeats))
+    t_off = min(_run_child(False) for _ in range(repeats))
+    overhead = (t_on / t_off - 1.0) * 100.0
+    print(f"obs on:  {t_on:.2f} us/query")
+    print(f"obs off: {t_off:.2f} us/query  (REPRO_OBS=0)")
+    print(f"overhead: {overhead:+.2f}%  (bar: {bar:.1f}%)")
+    if overhead > bar:
+        raise SystemExit(
+            f"observability overhead {overhead:.2f}% exceeds the "
+            f"{bar:.1f}% bar — the flight recorder is no longer "
+            "always-on cheap")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

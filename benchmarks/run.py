@@ -42,10 +42,28 @@ _SMOKE_KWARGS = {
 }
 
 
+def _git_rev() -> str | None:
+    """Short commit hash of the tree the numbers were measured on, so a
+    trajectory regression points at a PR, not a date range.  None outside
+    a git checkout (e.g. a source tarball) — absence is honest there."""
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
 def _record_trajectory(trajectory: dict) -> None:
     """Merge this run's suites into the committed record and append a
     timestamped entry to its `trajectory` list (older single-snapshot files
-    are upgraded in place; their snapshot seeds the history)."""
+    are upgraded in place; their snapshot seeds the history).  Each entry
+    carries the measurement context — backend, device count, git rev —
+    so a number can be attributed before it is compared."""
     import jax
 
     backend = jax.default_backend()
@@ -70,6 +88,8 @@ def _record_trajectory(trajectory: dict) -> None:
     record["trajectory"].append({
         "ts": time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime()),
         "backend": backend,
+        "device_count": jax.device_count(),
+        "git_rev": _git_rev(),
         "suites": trajectory,
     })
     with open("BENCH_kernels.json", "w") as f:

@@ -54,6 +54,7 @@ import os
 
 import numpy as np
 
+from repro import obs
 from repro.core.kmode import kmode_packed
 from repro.core.packing import pad_rows_pow2, padded_take
 from repro.index.engine import QueryEngine
@@ -108,9 +109,19 @@ class ClusterIndex:
         self.mutations_since_refit = 0
         self.n_refits = 0
         self._refit_pending = False
+        self._wire_obs()
         engine.subscribe(self._on_engine_event)
         if len(engine):
             self.refit()
+
+    def _wire_obs(self) -> None:
+        """Assignment is a query op like topk/radius: its latency lands in
+        the OWNING engine's `engine_query_latency_ms` histogram under
+        op="assign" (the private centre engine runs on the null registry —
+        its internal hits would pollute the real engine's counters)."""
+        self._h_assign = self.engine.obs.histogram(
+            "engine_query_latency_ms", op="assign")
+        self._c_refits = self.engine.obs.counter("cluster_refits_total")
 
     def detach(self) -> None:
         """Stop observing the engine.  The engine holds a strong reference
@@ -195,7 +206,9 @@ class ClusterIndex:
         engine's topk_packed(k=1) — LRU + shape bucketing for free, and the
         (value, id)-lex tie-break equals argmin's first minimum because
         centre ids are centre indices."""
-        ids, _ = self._centre_engine.topk_packed(sk, 1, n_valid=n_valid)
+        with self._h_assign.time(), obs.span("cluster.assign",
+                                             rows=int(n_valid)):
+            ids, _ = self._centre_engine.topk_packed(sk, 1, n_valid=n_valid)
         return self._ids_to_clusters(ids)
 
     def assign(self, queries) -> np.ndarray:
@@ -318,11 +331,12 @@ class ClusterIndex:
             self._weights = np.zeros(self.k, np.int64)
             self.mutations_since_refit = 0
             return np.zeros(0, np.int64)
-        res = kmode_packed(
-            mat[:n_alive], self.k, d=store.d,
-            n_iter=self.n_iter if n_iter is None else n_iter,
-            seed=self.seed, metric=self.engine.metric, block=self.block,
-            mode=self.engine.mode)
+        with obs.span("cluster.refit", rows=int(n_alive), k=self.k):
+            res = kmode_packed(
+                mat[:n_alive], self.k, d=store.d,
+                n_iter=self.n_iter if n_iter is None else n_iter,
+                seed=self.seed, metric=self.engine.metric, block=self.block,
+                mode=self.engine.mode)
         self._medoid_ids = ids[res.medoids]
         self._lab_ids = ids.copy()
         self._lab = res.labels
@@ -334,6 +348,7 @@ class ClusterIndex:
         self._capture_center_raw()
         self.mutations_since_refit = 0
         self.n_refits += 1
+        self._c_refits.inc()
         return res.labels.copy()
 
     def _capture_center_raw(self) -> None:
@@ -375,7 +390,8 @@ class ClusterIndex:
         self._centre_engine = QueryEngine(
             params if params is not None else self.engine.params,
             metric=self.engine.metric, block=self.block,
-            mode=self.engine.mode, keep_raw=False)
+            mode=self.engine.mode, keep_raw=False,
+            registry=obs.NULL_REGISTRY)
         self._centre_ids = self._centre_engine.add_packed(self._centers)
 
     # -- convenience mutation wrappers --------------------------------------
@@ -489,6 +505,7 @@ class ClusterIndex:
         self.mutations_since_refit = int(meta["mutations_since_refit"])
         self.n_refits = int(meta["n_refits"])
         self._refit_pending = False
+        self._wire_obs()
         if len(self._lab_ids) and not np.array_equal(self._lab_ids,
                                                      engine.ids()):
             # a desynced pair would corrupt the remove bookkeeping later;

@@ -627,7 +627,8 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
                      block: int = 2048, mode: str | None = None,
                      order_by: np.ndarray | None = None,
                      q_valid: int | None = None,
-                     alive: np.ndarray | None = None):
+                     alive: np.ndarray | None = None,
+                     stats_out: dict | None = None):
     """Progressive band-expansion top-k over weight-banded rows.
 
     `b` holds `n_valid` rows sorted by ascending prune score and cut into
@@ -669,6 +670,10 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
     n_live = n_valid if alive is None else int(
         np.count_nonzero(alive[:n_valid]))
     k = min(k, n_live)
+    if stats_out is not None:
+        # filled below; pre-set so early returns still report a full record
+        stats_out.update(n_bands=len(band_lo), bands_visited=0,
+                         rows_visited=0, early_stop=False)
     if q == 0 or k == 0:
         return np.zeros((q, 0), np.int64), np.zeros((q, 0), np.float32)
     q_scores = np.asarray(q_scores, np.float64)
@@ -735,7 +740,12 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
         kth = best_v[:, k - 1]
         if np.all(factor * gap[:, visit[ptr:]]
                   >= kth[:, None] + PRUNE_MARGIN):
+            if stats_out is not None:
+                stats_out["early_stop"] = True
             break
+    if stats_out is not None:
+        stats_out["bands_visited"] = ptr
+        stats_out["rows_visited"] = visited_rows
     return best_pos, best_v
 
 

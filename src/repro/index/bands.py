@@ -42,6 +42,7 @@ from repro.core.allpairs import (KBEST_KEY_PAD, PRUNE_MARGIN,
                                  prune_score_host)
 from repro.core.packing import padded_take
 from repro.index.store import SketchStore
+from repro.obs.registry import NULL_REGISTRY
 
 
 def merge_topk_parts(kk: int, parts: list[tuple[np.ndarray, np.ndarray]]
@@ -89,7 +90,17 @@ class BandedLayout:
     """
 
     def __init__(self, store: SketchStore, metric: str,
-                 band_rows: int = 1024):
+                 band_rows: int = 1024, registry=None):
+        # banding effectiveness counters: visited vs pruned per query, and
+        # how often the exactness certificate stopped the scan early.  The
+        # instruments are cached here once — under NULL_REGISTRY they are
+        # shared no-ops and the stats_out dict is never even built.
+        reg = NULL_REGISTRY if registry is None else registry
+        self._obs_off = reg.is_null
+        self._c_queries = reg.counter("index_banded_queries_total")
+        self._c_visited = reg.counter("index_bands_visited_total")
+        self._c_pruned = reg.counter("index_bands_pruned_total")
+        self._c_early = reg.counter("index_band_early_stops_total")
         self.metric = metric
         self.d = store.d
         self.band_rows = int(band_rows)
@@ -163,11 +174,19 @@ class BandedLayout:
                     np.zeros((q_valid, 0), np.float32))
         qs = prune_score_host(np.asarray(query_weights)[:q_valid], self.d,
                               self.metric)
+        st = None if self._obs_off else {}
         pos, vals = allpairs.topk_rows_banded(
             queries_padded, self.matrix, k, d=self.d, metric=self.metric,
             q_scores=qs, band_lo=self.band_lo, band_hi=self.band_hi,
             band_rows=self.band_rows, n_valid=self.n, order_by=self.ids,
-            block=block, mode=mode, q_valid=q_valid, alive=self._mask())
+            block=block, mode=mode, q_valid=q_valid, alive=self._mask(),
+            stats_out=st)
+        if st is not None:
+            self._c_queries.inc()
+            self._c_visited.inc(st["bands_visited"])
+            self._c_pruned.inc(st["n_bands"] - st["bands_visited"])
+            if st["early_stop"]:
+                self._c_early.inc()
         return self.ids[pos], vals
 
     def select(self, band_mask: np.ndarray
@@ -212,11 +231,13 @@ class TieredLayout:
     """
 
     def __init__(self, store: SketchStore, metric: str,
-                 band_rows: int = 1024, merge_ratio: float | None = 0.125):
+                 band_rows: int = 1024, merge_ratio: float | None = 0.125,
+                 registry=None):
         self.metric = metric
         self.d = store.d
         self.band_rows = int(band_rows)
         self.merge_ratio = merge_ratio
+        self.registry = NULL_REGISTRY if registry is None else registry
         self.n_merges = -1  # the initial build below is not a merge
         self._rebuild(store)
 
@@ -226,7 +247,8 @@ class TieredLayout:
         """Fold everything into one freshly sorted base tier (the O(N log N)
         path `sync` exists to avoid paying per mutation)."""
         self.base = BandedLayout(store, self.metric,
-                                 band_rows=self.band_rows)
+                                 band_rows=self.band_rows,
+                                 registry=self.registry)
         self._store = store
         # per-tier spec record: every row this layout serves was sketched
         # under it, and the cross-version merge keys the query sketch on it
@@ -373,6 +395,11 @@ class TieredLayout:
         out = []
         if self.base.n_alive:
             mask = self.base.candidate_bands(query_weights, radius)
+            if not self.registry.is_null:
+                kept = int(np.count_nonzero(mask))
+                self.base._c_queries.inc()
+                self.base._c_visited.inc(kept)
+                self.base._c_pruned.inc(self.base.n_bands - kept)
             sel, n_sel, sel_ids = self.base.select(mask)
             if n_sel:
                 out.append((sel, n_sel, sel_ids))

@@ -45,6 +45,7 @@ from collections import OrderedDict, deque
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import allpairs, packing, theory
 from repro.core.cabin import (CabinParams, sketch_dense_jit,
                               sketch_sparse_jit)
@@ -54,6 +55,25 @@ from repro.index.migrate import Migration, RawArchive
 from repro.index.store import SketchSpec, SketchStore
 
 _METRICS = ("cham", "hamming")
+
+
+def compile_cache_entries() -> int:
+    """Total jit-cache entries across the serving stack's compiled
+    reductions — the O(log N) graph-count discipline as a LIVE number.
+    The engine exports it as a gauge, and tests/test_obs.py pins that the
+    REPRO_OBS=0 path adds zero entries to it."""
+    from repro.core import cabin as _cabin
+    from repro.index import store as _store_mod
+
+    total = 0
+    for fn in (allpairs._threshold_pairs_impl, allpairs._banded_pairs_impl,
+               allpairs._argmin_rows_impl, allpairs._topk_rows_impl,
+               allpairs._rowsum_impl, _cabin.sketch_dense_jit,
+               _cabin.sketch_sparse_jit, _store_mod._append_rows):
+        size = getattr(fn, "_cache_size", None)
+        if callable(size):
+            total += size()
+    return total
 
 
 class QueryEngine:
@@ -92,7 +112,8 @@ class QueryEngine:
                  band_rows: int = 1024, cache_entries: int = 256,
                  merge_ratio: float | None = 0.125, keep_raw: bool = True,
                  auto_migrate: bool = False, drift_delta: float = 0.1,
-                 drift_window: int = 512, drift_pct: float = 95.0):
+                 drift_window: int = 512, drift_pct: float = 95.0,
+                 registry=None):
         if metric not in _METRICS:
             raise ValueError(f"metric must be one of {_METRICS}")
         if auto_migrate and not keep_raw:
@@ -120,6 +141,75 @@ class QueryEngine:
         self._cache_entries = cache_entries
         self.cache_hits = 0
         self.cache_misses = 0
+        # per-engine flight recorder (repro.obs): NULL_REGISTRY under
+        # REPRO_OBS=0, so every instrument below is a shared no-op.  Hot
+        # paths cache their instruments HERE, once — queries never pay a
+        # registry lookup.
+        self.obs = obs.new_registry() if registry is None else registry
+        self.store.set_registry(self.obs)
+        self._h_lat = {
+            op: self.obs.histogram("engine_query_latency_ms", op=op)
+            for op in ("topk", "radius", "pairwise")}
+        self._c_hits = self.obs.counter("engine_cache_hits_total")
+        self._c_misses = self.obs.counter("engine_cache_misses_total")
+        self._register_obs_gauges()
+
+    def _register_obs_gauges(self) -> None:
+        """Structural state as read-time callbacks: tier depths, cache
+        sizes, compile-graph count, density drift, migration progress —
+        always live, never a stale sample."""
+        reg = self.obs
+        reg.gauge_fn("engine_rows_alive", lambda: float(len(self)))
+        reg.gauge_fn("engine_store_size",
+                     lambda: float(self.store.size))
+        reg.gauge_fn("engine_store_capacity",
+                     lambda: float(self.store.capacity))
+        reg.gauge_fn("engine_lru_entries",
+                     lambda: float(len(self._cache)))
+        reg.gauge_fn("engine_tier_base_rows",
+                     lambda: float(self._tiered.base.n_alive
+                                   if self._tiered else 0))
+        reg.gauge_fn("engine_tier_delta_rows",
+                     lambda: float(self._tiered.delta_n
+                                   if self._tiered else 0))
+        reg.gauge_fn("engine_tier_merges",
+                     lambda: float(self._tiered.n_merges
+                                   if self._tiered else 0))
+        reg.gauge_fn("engine_compile_cache_entries",
+                     lambda: float(compile_cache_entries()))
+        reg.gauge_fn("engine_sketch_dim", lambda: float(self.d))
+        reg.gauge_fn("engine_observed_density_pct", self._observed_density)
+        reg.gauge_fn("engine_density_dim_needed", self._density_dim_needed)
+        reg.gauge_fn("engine_migration_progress", self._migration_progress)
+        reg.gauge_fn("engine_migration_cursor",
+                     lambda: float(self._mig.cursor) if self._mig else -1.0)
+
+    def _observed_density(self) -> float:
+        """The `drift_pct` percentile of per-row nnz over the drift window
+        — the live half of the density-drift gauge pair (the other half is
+        `engine_density_dim_needed`; when it exceeds `engine_sketch_dim`
+        the Theorem 1/2 accuracy bound no longer covers the data)."""
+        if not self._nnz_window:
+            return 0.0
+        return float(np.percentile(
+            np.fromiter(self._nnz_window, np.int64), self.drift_pct))
+
+    def _density_dim_needed(self) -> float:
+        if not self._nnz_window:
+            return 0.0
+        p = max(1, int(np.ceil(self._observed_density())))
+        return float(theory.sketch_dim(p, self.drift_delta))
+
+    def _migration_progress(self) -> float:
+        """Fraction of old-spec rows re-sketched: 1.0 when no migration is
+        in flight (the steady state IS fully migrated), monotone 0 -> 1
+        across batches, and exact at every crash/resume point (the
+        faultinject matrix in tests/test_obs.py pins this)."""
+        if self._mig is None:
+            return 1.0
+        done = self._mig.rows_migrated
+        total = done + len(self._mig.src)
+        return done / total if total else 1.0
 
     # -- mutation observers (engine level) ----------------------------------
 
@@ -194,8 +284,26 @@ class QueryEngine:
                 "rows_migrated": m.rows_migrated,
                 "rows_remaining": len(m.src),
                 "fresh_rows": len(m.fresh),
+                "progress": self._migration_progress(),
             }
+        lat = {}
+        for op, h in self._h_lat.items():
+            if h.count:
+                lat[op] = {"count": h.count, "p50": h.quantile(50),
+                           "p95": h.quantile(95), "p99": h.quantile(99)}
+        if lat:
+            out["latency_ms"] = lat
         return out
+
+    def render_prom(self) -> str:
+        """This engine's registry in Prometheus text exposition format —
+        point a scraper (or `curl`) at whatever endpoint serves it."""
+        return self.obs.render_prom()
+
+    def obs_snapshot(self) -> dict:
+        """Plain-dict snapshot of this engine's registry: every counter,
+        gauge (evaluated live), and histogram with p50/p95/p99."""
+        return self.obs.snapshot()
 
     # -- sketching (shape-bucketed) ----------------------------------------
 
@@ -381,6 +489,11 @@ class QueryEngine:
                         journal_dir=journal_dir, journal_every=journal_every,
                         journal_keep=journal_keep)
         self._mig = mig
+        # fresh holds REAL ingest (acked adds mid-migration) — it shares
+        # the engine's counters; dst holds re-sketched copies of existing
+        # rows, counted separately by the migration's own instruments so
+        # store_rows_added_total keeps meaning "rows ingested".
+        mig.fresh.set_registry(self.obs)
         self._attach_relay(mig.dst)
         self._attach_relay(mig.fresh)
         self._emit("migrate_start", mig.dst)
@@ -410,6 +523,7 @@ class QueryEngine:
         """Called by Migration._finish once every row is under the new
         spec: atomically (w.r.t. the Python API) swap the serving store."""
         self.store = mig.dst
+        self.store.set_registry(self.obs)
         self.params = mig.new_spec.params
         self.spec = mig.new_spec
         self._tiered = None
@@ -439,6 +553,7 @@ class QueryEngine:
         if key is not None and key in self._cache:
             self._cache.move_to_end(key)
             self.cache_hits += 1
+            self._c_hits.inc()
             return self._cache[key]
         return None
 
@@ -447,6 +562,7 @@ class QueryEngine:
         both hit and miss paths hand callers arrays they may freely
         mutate without corrupting later hits."""
         self.cache_misses += 1
+        self._c_misses.inc()
         if key is None:
             return
         if isinstance(value, tuple):
@@ -465,11 +581,12 @@ class QueryEngine:
         Raises ValueError for k < 0 (k = 0 is a valid empty query)."""
         if k < 0:
             raise ValueError(f"topk: k must be >= 0, got {k}")
-        self._drive()
-        if self._mig is not None:
-            return self._topk_migrating(queries, k)
-        sk, q = self._sketch(queries)
-        return self.topk_packed(sk, k, n_valid=q)
+        self._drive()  # migration pacing stays OUTSIDE the query timer
+        with self._h_lat["topk"].time(), obs.span("engine.topk", k=k):
+            if self._mig is not None:
+                return self._topk_migrating(queries, k)
+            sk, q = self._sketch(queries)
+            return self._topk_packed_impl(sk, k, q)
 
     def topk_packed(self, sk, k: int, n_valid: int | None = None
                     ) -> tuple[np.ndarray, np.ndarray]:
@@ -488,6 +605,11 @@ class QueryEngine:
             raise RuntimeError(
                 "topk_packed is unavailable mid-migration (packed queries "
                 "are spec-ambiguous); use topk() with raw rows")
+        with self._h_lat["topk"].time(), obs.span("engine.topk", k=k):
+            return self._topk_packed_impl(sk, k, n_valid)
+
+    def _topk_packed_impl(self, sk, k: int, n_valid: int | None
+                          ) -> tuple[np.ndarray, np.ndarray]:
         sk = jnp.asarray(sk)
         q = sk.shape[0] if n_valid is None else n_valid
         if not 0 <= q <= sk.shape[0]:
@@ -521,11 +643,12 @@ class QueryEngine:
         r <= 0 returns an empty id array for every query — an explicit
         contract, not an error (negative radii short-circuit before any
         layout or device work)."""
-        self._drive()
-        if self._mig is not None:
-            return self._radius_migrating(queries, r)
-        sk, q = self._sketch(queries)
-        return self.radius_packed(sk, r, n_valid=q)
+        self._drive()  # migration pacing stays OUTSIDE the query timer
+        with self._h_lat["radius"].time(), obs.span("engine.radius", r=r):
+            if self._mig is not None:
+                return self._radius_migrating(queries, r)
+            sk, q = self._sketch(queries)
+            return self._radius_packed_impl(sk, r, q)
 
     def radius_packed(self, sk, r: float, n_valid: int | None = None
                       ) -> list[np.ndarray]:
@@ -534,6 +657,11 @@ class QueryEngine:
             raise RuntimeError(
                 "radius_packed is unavailable mid-migration (packed queries "
                 "are spec-ambiguous); use radius() with raw rows")
+        with self._h_lat["radius"].time(), obs.span("engine.radius", r=r):
+            return self._radius_packed_impl(sk, r, n_valid)
+
+    def _radius_packed_impl(self, sk, r: float, n_valid: int | None
+                            ) -> list[np.ndarray]:
         sk = jnp.asarray(sk)
         q = sk.shape[0] if n_valid is None else n_valid
         if not 0 <= q <= sk.shape[0]:
@@ -663,6 +791,11 @@ class QueryEngine:
                 "pairwise is unavailable mid-migration: rows live under two "
                 "specs and a single distance matrix would mix sketch spaces; "
                 "drive the migration to completion first (migrate_all())")
+        with self._h_lat["pairwise"].time(), obs.span("engine.pairwise"):
+            return self._pairwise_impl(hamming_ops, queries, ids)
+
+    def _pairwise_impl(self, hamming_ops, queries, ids
+                       ) -> tuple[np.ndarray, np.ndarray]:
         sk, q = self._sketch(queries)
         view = self.store.gather_alive()
         # cheap stale-view guard BEFORE anything dereferences the matrix
@@ -720,7 +853,8 @@ class QueryEngine:
         if self._tiered is None:
             self._tiered = TieredLayout(self.store, self.metric,
                                         band_rows=self.band_rows,
-                                        merge_ratio=self.merge_ratio)
+                                        merge_ratio=self.merge_ratio,
+                                        registry=self.obs)
         return self._tiered.sync(self.store)
 
     _layout = sync_layout  # internal alias used by the query paths
@@ -736,6 +870,7 @@ class QueryEngine:
         """Install a restored serving store: reset the layout and wire the
         engine-level event relay (restore builds stores outside __init__)."""
         self.store = store
+        store.set_registry(self.obs)
         self._tiered = None
         self._attach_relay(store)
 

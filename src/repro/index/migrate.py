@@ -44,12 +44,17 @@ way.
 
 from __future__ import annotations
 
+import logging
+
 import numpy as np
 
+from repro import obs
 from repro.core.packing import pow2_bucket
 from repro.index.bands import TieredLayout
 from repro.index.store import SketchSpec, SketchStore
 from repro.runtime import faultinject
+
+_log = logging.getLogger("repro.index.migrate")
 
 _CP_START = faultinject.declare("migrate.start")
 _CP_RESKETCHED = faultinject.declare("migrate.batch.resketched")
@@ -221,6 +226,12 @@ class Migration:
         self._journal_step = self._next_journal_step()
         self._dst_tiered: TieredLayout | None = None
         self._fresh_tiered: TieredLayout | None = None
+        self._wire_obs()
+        _log.info(
+            "migration started: spec v%d -> v%d (d %d -> %d), %d rows to "
+            "re-sketch in batches of %d (drive=%s)",
+            self.old_spec.version, new_spec.version, self.old_spec.d,
+            new_spec.d, len(self.src), self.batch_rows, drive)
         if journal_dir is not None and self._journal_step == 0:
             # fresh journal dir: write the pre-migration engine as step 0,
             # so a crash before the first batch boundary still leaves a
@@ -257,7 +268,23 @@ class Migration:
         self._journal_step = self._next_journal_step()
         self._dst_tiered = None
         self._fresh_tiered = None
+        self._wire_obs()
+        _log.info(
+            "migration resumed: phase=%s cursor=%d, %d rows migrated, "
+            "%d remaining", self.phase, self.cursor, self.rows_migrated,
+            len(self.src))
         return self
+
+    def _wire_obs(self) -> None:
+        """Cache this migration's instruments off the owning engine's
+        registry: per-phase wall-time histograms plus the re-sketched row
+        counter (dst's store counters stay on the null registry so
+        store_rows_added_total keeps meaning "rows ingested")."""
+        reg = self.engine.obs
+        self._h_resketch = reg.histogram("migration_phase_ms",
+                                         phase="resketch")
+        self._h_fold = reg.histogram("migration_phase_ms", phase="fold")
+        self._c_resketched = reg.counter("migration_rows_resketched_total")
 
     def meta(self) -> dict:
         """The journal record `QueryEngine.save` embeds next to the store
@@ -296,19 +323,22 @@ class Migration:
         if len(take) == 0:
             self._finish()
             return 0
-        idx, val = self.engine.raw.batch(take)
-        sk, k = self.engine._sketch((idx, val),
-                                    params=self.new_spec.params)
-        faultinject.crash_point(_CP_RESKETCHED)
-        self.dst.add_with_ids(sk, take, n_valid=k)
-        # quiet tombstone: the rows MOVED, membership is unchanged — no
-        # "remove" event, but version/removed_count bump so the src layout
-        # resyncs its alive masks
-        self.src.remove(take, notify=False)
-        self.cursor = int(take[-1])
-        self.rows_migrated += len(take)
-        self.n_batches += 1
-        faultinject.crash_point(_CP_COMMITTED)
+        with self._h_resketch.time(), obs.span(
+                "migrate.batch", rows=len(take), cursor=int(take[-1])):
+            idx, val = self.engine.raw.batch(take)
+            sk, k = self.engine._sketch((idx, val),
+                                        params=self.new_spec.params)
+            faultinject.crash_point(_CP_RESKETCHED)
+            self.dst.add_with_ids(sk, take, n_valid=k)
+            # quiet tombstone: the rows MOVED, membership is unchanged — no
+            # "remove" event, but version/removed_count bump so the src
+            # layout resyncs its alive masks
+            self.src.remove(take, notify=False)
+            self.cursor = int(take[-1])
+            self.rows_migrated += len(take)
+            self.n_batches += 1
+            self._c_resketched.inc(len(take))
+            faultinject.crash_point(_CP_COMMITTED)
         self._journal()
         if len(self.src) == 0:
             self._finish()
@@ -322,14 +352,21 @@ class Migration:
     def _finish(self) -> None:
         faultinject.crash_point(_CP_FOLD)
         self.phase = "fold"
-        mat, n, ids = self.fresh.gather_alive()
-        if n:
-            self.dst.add_with_ids(mat, ids, n_valid=n)
-        # future ids must clear fresh's watermark even if its newest rows
-        # were removed before the fold
-        self.dst._next_id = max(self.dst._next_id, self.fresh._next_id)
+        _log.info("migration phase: resketch -> fold (%d fresh rows, "
+                  "%d migrated over %d batches)",
+                  len(self.fresh), self.rows_migrated, self.n_batches)
+        with self._h_fold.time(), obs.span("migrate.fold",
+                                           fresh_rows=len(self.fresh)):
+            mat, n, ids = self.fresh.gather_alive()
+            if n:
+                self.dst.add_with_ids(mat, ids, n_valid=n)
+            # future ids must clear fresh's watermark even if its newest
+            # rows were removed before the fold
+            self.dst._next_id = max(self.dst._next_id, self.fresh._next_id)
         self.phase = "done"
         self.engine._publish_migration(self)
+        _log.info("migration phase: fold -> done; published spec v%d (d=%d)",
+                  self.new_spec.version, self.new_spec.d)
         faultinject.crash_point(_CP_PUBLISHED)
         if self.journal_dir is not None:
             self.engine.save(self.journal_dir, step=self._journal_step,
@@ -365,14 +402,16 @@ class Migration:
                 self._dst_tiered = TieredLayout(
                     self.dst, self.engine.metric,
                     band_rows=self.engine.band_rows,
-                    merge_ratio=self.engine.merge_ratio)
+                    merge_ratio=self.engine.merge_ratio,
+                    registry=self.engine.obs)
             tiers.append((self._dst_tiered.sync(self.dst), self.new_spec))
         if len(self.fresh):
             if self._fresh_tiered is None:
                 self._fresh_tiered = TieredLayout(
                     self.fresh, self.engine.metric,
                     band_rows=self.engine.band_rows,
-                    merge_ratio=self.engine.merge_ratio)
+                    merge_ratio=self.engine.merge_ratio,
+                    registry=self.engine.obs)
             tiers.append((self._fresh_tiered.sync(self.fresh),
                           self.new_spec))
         return tiers

@@ -38,6 +38,8 @@ import jax.numpy as jnp
 from repro.core import packing
 from repro.core.cabin import CabinParams
 from repro.core.packing import pow2_bucket  # the shared bucketing rule
+from repro import obs
+from repro.obs.registry import NULL_REGISTRY
 from repro.runtime import faultinject
 
 _CP_COMPACT = faultinject.declare("store.compact")
@@ -176,6 +178,17 @@ class SketchStore:
         self._placement = None  # opt-in sharding callback (see `place`)
         self._gather_cache: tuple | None = None
         self._listeners: list = []  # mutation observers (see `subscribe`)
+        self.set_registry(None)
+
+    def set_registry(self, registry) -> None:
+        """Point the store's mutation counters at a MetricsRegistry (None
+        resets to the shared no-op registry).  The engine calls this with
+        its per-engine registry so ingest/tombstone/compaction volume shows
+        up next to the query histograms it drives."""
+        reg = NULL_REGISTRY if registry is None else registry
+        self._c_added = reg.counter("store_rows_added_total")
+        self._c_removed = reg.counter("store_rows_removed_total")
+        self._c_compactions = reg.counter("store_compactions_total")
 
     # -- introspection ------------------------------------------------------
 
@@ -372,6 +385,7 @@ class SketchStore:
         self._size += k
         self._n_alive += k
         self._next_id = max(self._next_id, int(new_ids[-1]) + 1)
+        self._c_added.inc(k)
         self._bump()
         if notify:
             self._notify("add", new_ids,
@@ -398,6 +412,7 @@ class SketchStore:
         self._alive[slots] = False
         self._n_alive -= len(ids)
         self._n_removed_total += len(ids)
+        self._c_removed.inc(len(ids))
         self._bump()
         if notify:
             self._notify("remove", ids, slots.astype(np.int64))
@@ -406,7 +421,13 @@ class SketchStore:
     def compact(self) -> None:
         """Drop tombstoned slots, preserving insertion order, and shrink the
         buffers to the smallest power-of-two capacity that fits."""
+        with obs.span("store.compact", size=self._size,
+                      n_alive=self._n_alive):
+            self._compact()
+
+    def _compact(self) -> None:
         faultinject.crash_point(_CP_COMPACT)
+        self._c_compactions.inc()
         slots = self.alive_slots()
         n = len(slots)
         cap = pow2_bucket(n)

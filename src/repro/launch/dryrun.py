@@ -22,6 +22,7 @@ Per cell this driver:
 import argparse
 import dataclasses
 import json
+import logging
 import time
 import traceback
 
@@ -40,6 +41,8 @@ from repro.models import transformer as T
 from repro.serve.engine import make_serve_step
 from repro.train import optimizer as opt
 from repro.train.train_step import make_train_step
+
+_log = logging.getLogger("repro.launch.dryrun")
 
 # ---------------------------------------------------------------------------
 # per-cell presets (baseline parallel/memory knobs; hillclimbing edits these
@@ -291,21 +294,21 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         })
         roof = rl.analyze(record, chips)
         record["roofline"] = roof.as_dict()
-        print(f"[ok] {cell_id}: compile={t_compile:.1f}s "
-              f"flops/dev={record['flops_per_device']:.3g} "
-              f"bytes/dev={record['bytes_per_device']:.3g} "
-              f"coll/dev={record['collective_traffic_bytes']:.3g}B "
-              f"dominant={roof.dominant}")
+        _log.info("[ok] %s: compile=%.1fs flops/dev=%.3g bytes/dev=%.3g "
+                  "coll/dev=%.3gB dominant=%s", cell_id, t_compile,
+                  record["flops_per_device"], record["bytes_per_device"],
+                  record["collective_traffic_bytes"], roof.dominant)
     except Exception as e:  # record failures — they are bugs to fix
         record.update({"status": "error", "error": repr(e),
                        "traceback": traceback.format_exc()[-4000:]})
-        print(f"[ERR] {cell_id}: {e!r}")
+        _log.error("[ERR] %s: %r", cell_id, e)
     with open(out_path, "w") as f:
         json.dump(record, f, indent=1)
     return record
 
 
 def main() -> None:
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all",
                     help="arch id or 'all'")
@@ -348,7 +351,7 @@ def main() -> None:
                 n_ok += st == "ok"
                 n_skip += st == "skipped"
                 n_err += st == "error"
-    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    _log.info("done: %d ok, %d skipped, %d errors", n_ok, n_skip, n_err)
     if n_err:
         raise SystemExit(1)
 

@@ -25,6 +25,7 @@ paper's point).
 import argparse
 import dataclasses
 import json
+import logging
 import time
 
 import jax
@@ -38,6 +39,8 @@ from repro.core.packing import pack_bits, popcount32, unpack_bits
 from repro.launch import roofline as rl
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh
+
+_log = logging.getLogger("repro.launch.dryrun_pipeline")
 
 N_DOCS = 65536
 MAX_NNZ = 1024
@@ -155,22 +158,23 @@ def run_variant(variant: str, multi_pod: bool, out_dir: str,
         })
         roof = rl.analyze(record, chips)
         record["roofline"] = roof.as_dict()
-        print(f"[ok] {cell_id}: compile={t_compile:.1f}s "
-              f"flops/dev={record['flops_per_device']:.3g} "
-              f"bytes/dev={record['bytes_per_device']:.3g} "
-              f"dominant={roof.dominant}")
+        _log.info("[ok] %s: compile=%.1fs flops/dev=%.3g bytes/dev=%.3g "
+                  "dominant=%s", cell_id, t_compile,
+                  record["flops_per_device"], record["bytes_per_device"],
+                  roof.dominant)
     except Exception as e:
         import traceback
 
         record.update({"status": "error", "error": repr(e),
                        "traceback": traceback.format_exc()[-3000:]})
-        print(f"[ERR] {cell_id}: {e!r}")
+        _log.error("[ERR] %s: %r", cell_id, e)
     with open(out_path, "w") as f:
         json.dump(record, f, indent=1)
     return record
 
 
 def main() -> None:
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
     ap = argparse.ArgumentParser()
     ap.add_argument("--variant", default="all",
                     choices=["all", "v0_unpacked", "v1_packed", "v2_matmul"])

@@ -9,8 +9,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import logging
 
 from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, load_records
+
+_log = logging.getLogger("repro.launch.report")
 
 V5E_HBM_BYTES = 16 * 1024**3
 
@@ -110,6 +113,7 @@ def generate(directory: str) -> str:
 
 
 def main() -> None:
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--out", default="experiments/roofline.md")
@@ -117,7 +121,7 @@ def main() -> None:
     text = generate(args.dir)
     with open(args.out, "w") as f:
         f.write(text)
-    print(f"wrote {args.out}")
+    _log.info("wrote %s", args.out)
 
 
 if __name__ == "__main__":

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import logging
 import tempfile
 
 import jax
@@ -30,8 +31,11 @@ from repro.models import transformer as T
 from repro.train import optimizer as opt
 from repro.train.train_step import make_train_step
 
+_log = logging.getLogger("repro.launch.train")
+
 
 def main() -> None:
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 16x16")
@@ -70,16 +74,17 @@ def main() -> None:
         pipe = BatchPipeline(PipelineConfig(
             vocab_size=cfg.vocab_size, seq_len=args.seq,
             global_batch=args.batch, dedup=args.dedup))
-        print(f"mesh={mesh.shape} params="
-              f"{T.count_params(params)/1e6:.1f}M arch={cfg.name}")
+        _log.info("mesh=%s params=%.1fM arch=%s", mesh.shape,
+                  T.count_params(params) / 1e6, cfg.name)
         for i in range(args.steps):
             batch = {k: jax.numpy.asarray(v) for k, v in next(pipe).items()}
             params, opt_state, metrics = step(params, opt_state, batch)
             if (i + 1) % 5 == 0 or i == 0:
-                print(f"step {i+1:4d} loss={float(metrics['loss']):.4f} "
-                      f"gnorm={float(metrics['grad_norm']):.3f}")
+                _log.info("step %4d loss=%.4f gnorm=%.3f", i + 1,
+                          float(metrics["loss"]),
+                          float(metrics["grad_norm"]))
         pipe.close()
-        print("done")
+        _log.info("done")
 
 
 if __name__ == "__main__":

@@ -52,6 +52,7 @@ _armed: str | None = None
 _armed_mode: str = "raise"
 _record = False  # hit recording is test-only: a server must not grow a log
 _hits: list[str] = []  # points crossed while recording was on, in order
+_observer = None  # repro.obs hook: every crossing becomes a trace instant
 
 
 class InjectedCrash(BaseException):
@@ -121,11 +122,23 @@ def clear_hits() -> None:
     del _hits[:]
 
 
+def set_observer(fn) -> None:
+    """Install `fn(name)` to run at every crash-point crossing (None to
+    remove).  The one consumer is repro.obs, which records crossings as
+    trace instant events; the disabled-path cost stays a single global-
+    is-None check.  The observer runs BEFORE any armed crash fires, so a
+    trace exported after recovery shows the point the process died at."""
+    global _observer
+    _observer = fn
+
+
 def crash_point(name: str) -> None:
     """Die here iff `name` is armed (programmatically or via env)."""
     global _armed
     if _record:
         _hits.append(name)
+    if _observer is not None:
+        _observer(name)
     if _armed is not None and name == _armed:
         _armed = None  # one arm, one crash
         if _armed_mode == "exit":

@@ -630,3 +630,60 @@ def test_ingest_documents_stream():
     idx_q, val_q = docs_to_categorical(docs[:6], vocab)
     ids, vals = eng2.topk((idx_q, val_q), 1)
     np.testing.assert_array_equal(ids[:, 0], got2[:6])
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**16),
+       st.lists(st.integers(0, 6), min_size=6, max_size=18))
+def test_lru_accounting_matches_shadow_model(seed, ops):
+    """The LRU's hit/miss accounting is EXACT against an independent shadow
+    model of its policy (key = (op, args, store version, query bytes);
+    capacity eviction in least-recent order; mutations invalidate via the
+    version in the key; sync_layout touches nothing) — both the engine's
+    python attrs and the repro.obs counter mirror, op by op."""
+    from collections import OrderedDict
+
+    rng = np.random.default_rng(seed)
+    cap = 3
+    eng = QueryEngine(P, cache_entries=cap, band_rows=16)
+    eng.add_dense(X[:24])
+    shadow: OrderedDict = OrderedDict()
+    hits = misses = 0
+
+    def probe(key):
+        nonlocal hits, misses
+        if key in shadow:
+            shadow.move_to_end(key)
+            hits += 1
+        else:
+            misses += 1
+            shadow[key] = True
+            if len(shadow) > cap:
+                shadow.popitem(last=False)
+
+    next_row = 24
+    for op in ops:
+        if op <= 2:  # topk on one of three fixed query batches
+            q = X[8 * op: 8 * op + 3]
+            eng.topk(q, 4)
+            probe(("topk", min(4, len(eng)), eng.store.version, op))
+        elif op == 3:  # radius (its own key space, same cache)
+            eng.radius(QUERIES, 50.0)
+            probe(("radius", 50.0, eng.store.version, "q"))
+        elif op == 4:  # add: version bump invalidates every live key
+            eng.add_dense(X[next_row % 64: next_row % 64 + 1])
+            next_row += 1
+        elif op == 5:  # remove one alive row (keep the store non-empty)
+            alive = eng.ids()
+            if len(alive) > 1:
+                i = int(rng.integers(len(alive)))
+                eng.remove(alive[i: i + 1])
+        else:  # sync_layout: maintenance, not traffic — no cache effect
+            eng.sync_layout()
+        assert (eng.cache_hits, eng.cache_misses) == (hits, misses)
+        assert len(eng._cache) == len(shadow)
+        if not eng.obs.is_null:  # the obs mirror counts the same events
+            snap = eng.obs_snapshot()
+            assert snap.get("engine_cache_hits_total", 0) == hits
+            assert snap.get("engine_cache_misses_total", 0) == misses
+            assert snap["engine_lru_entries"] == float(len(shadow))
