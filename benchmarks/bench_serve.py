@@ -1,0 +1,244 @@
+"""Open-loop Poisson load benchmark for the serving front door.
+
+Every QPS number the index benchmarks report is a synchronous one-caller
+loop — a closed-loop measurement that can never exhibit queueing
+collapse, because the caller politely waits for each answer before
+asking again.  Real traffic does not.  This suite measures what the
+front door (repro/serve/frontdoor.py) actually promises under overload:
+
+  * `sat_qps` — single-caller saturation throughput (the closed-loop
+    number everything else is expressed against);
+  * open-loop Poisson arrivals at 1x / 4x / 16x saturation, ~70%
+    interactive / 30% bulk: per-class p50/p99 end-to-end latency,
+    per-class shed rate, and answered counts.  Arrivals are submitted on
+    schedule whether or not earlier answers came back — the overload is
+    real, and the only reason p99 stays bounded is the bounded admission
+    queue + shed-bulk-first policy;
+  * exactness under load — every `partial=False` answer is compared
+    bit-for-bit against the synchronous engine's answer for the same
+    pooled query (the result cache is disabled: coalescing and slicing
+    are what is under test, not memoization).
+
+Asserted at >= 4x (disabled via `bars=False` at smoke sizes): shed-rate > 0,
+bulk shed first, interactive p99 under the derived SLO, zero bit
+mismatches, zero double answers.
+
+`--soak` runs the chaos variant: 4x overload with faultinject arming the
+front-door crash points on a cadence while traffic flows — the CI
+overload-soak job's entry point (no acked-request loss, no duplicate
+answers, shed > 0, p99 under SLO, bit-identity on non-partial answers).
+"""
+
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.bench_index import _build, _sparse_rows
+from benchmarks.common import emit
+from repro.runtime import faultinject
+from repro.serve import (CLASS_BULK, CLASS_INTERACTIVE, FrontDoor,
+                         RejectedError)
+
+N_POOL = 64  # distinct single-row queries cycled through by the load
+
+
+def _percentiles(lat_ms: list) -> tuple[float, float]:
+    if not lat_ms:
+        return float("nan"), float("nan")
+    a = np.asarray(lat_ms)
+    return float(np.percentile(a, 50)), float(np.percentile(a, 99))
+
+
+def _measure_saturation(eng, pool, k: int, calls: int = 32) -> float:
+    """Closed-loop single-caller throughput: one 1-row request at a
+    time, synchronous — the denominator for the overload multipliers."""
+    eng.topk(pool[0], k)  # warm the compile cache for the 1-row shape
+    t0 = time.perf_counter()
+    for i in range(calls):
+        eng.topk(pool[i % len(pool)], k)
+    return calls / (time.perf_counter() - t0)
+
+
+def _run_level(fd, pool, want, *, offered_qps: float, duration_s: float,
+               k: int, bulk_frac: float, seed: int, max_requests: int,
+               result_timeout_s: float = 120.0) -> dict:
+    """One open-loop level: Poisson arrivals at `offered_qps` for
+    `duration_s`, then drain.  Returns per-class latency/shed stats and
+    the bit-identity mismatch count."""
+    rng = np.random.default_rng(seed)
+    n_req = min(int(offered_qps * duration_s), max_requests)
+    handles: list = []  # (handle, class, pool index)
+    offered = {CLASS_INTERACTIVE: 0, CLASS_BULK: 0}
+    shed = {CLASS_INTERACTIVE: 0, CLASS_BULK: 0}
+    t_next = time.monotonic()
+    for i in range(n_req):
+        t_next += rng.exponential(1.0 / offered_qps)
+        now = time.monotonic()
+        if t_next > now:
+            time.sleep(t_next - now)
+        # (an arrival finding itself behind schedule submits immediately:
+        # open loop — the backlog is the load, not a measurement skip)
+        cls = CLASS_BULK if rng.random() < bulk_frac else CLASS_INTERACTIVE
+        qi = int(rng.integers(len(pool)))
+        offered[cls] += 1
+        try:
+            handles.append((fd.submit("topk", pool[qi], k=k, cls=cls), cls,
+                            qi))
+        except RejectedError:
+            shed[cls] += 1
+    lat = {CLASS_INTERACTIVE: [], CLASS_BULK: []}
+    mismatches = 0
+    partials = 0
+    errors = 0
+    for h, cls, qi in handles:
+        res = h.result(timeout=result_timeout_s)
+        lat[cls].append(res.latency_ms)
+        if res.error is not None:
+            errors += 1
+        elif res.partial:
+            partials += 1
+        else:
+            ids_x, d_x = want[qi]
+            if not (np.array_equal(res.ids, ids_x)
+                    and np.array_equal(res.dists, d_x)):
+                mismatches += 1
+    out = {"offered_qps": offered_qps, "n_offered": n_req,
+           "n_answered": len(handles), "mismatches": mismatches,
+           "partials": partials, "errors": errors}
+    for cls in (CLASS_INTERACTIVE, CLASS_BULK):
+        p50, p99 = _percentiles(lat[cls])
+        denom = max(1, offered[cls])
+        out[f"p50_ms_{cls}"] = p50
+        out[f"p99_ms_{cls}"] = p99
+        out[f"shed_rate_{cls}"] = shed[cls] / denom
+    return out
+
+
+def bench_serve(n: int = 65536, k: int = 10, duration_s: float = 3.0,
+                levels: tuple = (1, 4, 16), bulk_frac: float = 0.3,
+                interactive_limit: int = 64, bulk_limit: int = 64,
+                max_batch_rows: int = 64, max_requests: int = 8000,
+                slo_factor: float = 5.0, bars: bool = True,
+                seed: int = 0) -> dict:
+    idx, val = _sparse_rows(n)
+    eng = _build(idx, val)  # cache_entries=0: no memoization under test
+    q_idx, q_val = _sparse_rows(N_POOL, seed=777)
+    pool = [(q_idx[i:i + 1], q_val[i:i + 1]) for i in range(N_POOL)]
+    want = [eng.topk(q, k) for q in pool]  # synchronous ground truth
+
+    sat = _measure_saturation(eng, pool, k)
+    emit("serve.sat_qps", 1e6 / sat, f"{sat:.0f} qps closed-loop")
+    summary: dict = {"sat_qps": sat}
+    # bounded queue + drain at >= sat implies a worst-case wait of
+    # (queue + one batch in flight) / sat; slo_factor covers batching
+    # jitter and the estimator warming up.  THIS is the bounded-p99 claim:
+    # the SLO does not grow with the offered rate.
+    slo_ms = slo_factor * 1e3 * (interactive_limit + max_batch_rows) / sat
+    summary["interactive_slo_ms"] = slo_ms
+
+    for level in levels:
+        fd = FrontDoor(eng, interactive_limit=interactive_limit,
+                       bulk_limit=bulk_limit, max_batch_rows=max_batch_rows,
+                       max_wait_ms=1.0)
+        try:
+            stats = _run_level(
+                fd, pool, want, offered_qps=sat * level,
+                duration_s=duration_s, k=k, bulk_frac=bulk_frac,
+                seed=seed + level, max_requests=max_requests)
+            assert fd.double_answers == 0, "request answered twice"
+        finally:
+            fd.close()
+        for key, v in stats.items():
+            summary[f"x{level}_{key}"] = v
+        emit(f"serve.x{level}", 0.0,
+             f"p99i={stats['p99_ms_interactive']:.1f}ms;"
+             f"p99b={stats['p99_ms_bulk']:.1f}ms;"
+             f"shed_i={stats['shed_rate_interactive']:.3f};"
+             f"shed_b={stats['shed_rate_bulk']:.3f}")
+        assert stats["mismatches"] == 0, \
+            "non-partial answer differed from the synchronous engine"
+        assert stats["errors"] == 0
+        if bars and level >= 4:
+            assert stats["shed_rate_bulk"] > 0, \
+                f"{level}x overload shed nothing — queue is not bounded?"
+            assert (stats["shed_rate_bulk"]
+                    >= stats["shed_rate_interactive"]), \
+                "bulk must be shed before interactive"
+            assert stats["p99_ms_interactive"] <= slo_ms, (
+                f"interactive p99 {stats['p99_ms_interactive']:.1f}ms "
+                f"breached the {slo_ms:.1f}ms SLO at {level}x")
+    return summary
+
+
+def soak(n: int = 8192, k: int = 10, duration_s: float = 4.0,
+         level: float = 4.0, chaos_period_s: float = 0.1) -> dict:
+    """Overload + chaos: 4x Poisson load while faultinject arms the
+    front-door crash points on a cadence.  Asserts the full robustness
+    contract; used by the CI overload-soak job."""
+    idx, val = _sparse_rows(n)
+    eng = _build(idx, val)
+    q_idx, q_val = _sparse_rows(N_POOL, seed=777)
+    pool = [(q_idx[i:i + 1], q_val[i:i + 1]) for i in range(N_POOL)]
+    want = [eng.topk(q, k) for q in pool]
+    sat = _measure_saturation(eng, pool, k)
+    slo_ms = 5.0 * 1e3 * (64 + 64) / sat
+
+    stop = threading.Event()
+
+    def chaos():
+        points = ["frontdoor.flush", "frontdoor.publish"]
+        i = 0
+        while not stop.is_set():
+            faultinject.arm(points[i % len(points)])
+            i += 1
+            stop.wait(chaos_period_s)
+        faultinject.disarm()
+
+    fd = FrontDoor(eng, interactive_limit=64, bulk_limit=64,
+                   max_batch_rows=64, max_wait_ms=1.0, max_retries=5,
+                   backoff_ms=0.5)
+    chaos_thread = threading.Thread(target=chaos)
+    chaos_thread.start()
+    try:
+        stats = _run_level(fd, pool, want, offered_qps=sat * level,
+                           duration_s=duration_s, k=k, bulk_frac=0.3,
+                           seed=3, max_requests=6000)
+    finally:
+        stop.set()
+        chaos_thread.join()
+        fd.close()
+    stats["sat_qps"] = sat
+    stats["answered"] = fd.answered
+    stats["double_answers"] = fd.double_answers
+    # the contract the chaos run must uphold:
+    assert fd.double_answers == 0, "a request was answered twice"
+    assert stats["mismatches"] == 0, \
+        "non-partial answer differed from the synchronous engine"
+    assert stats["errors"] == 0, \
+        f"{stats['errors']} requests exhausted retries under chaos"
+    assert stats["shed_rate_bulk"] > 0, "4x overload must shed bulk"
+    assert (stats["shed_rate_bulk"] >= stats["shed_rate_interactive"]), \
+        "bulk must be shed before interactive"
+    assert stats["p99_ms_interactive"] <= slo_ms, (
+        f"interactive p99 {stats['p99_ms_interactive']:.1f}ms breached "
+        f"the {slo_ms:.1f}ms SLO under chaos")
+    emit("serve.soak", 0.0,
+         f"answered={stats['n_answered']};retriesOK;"
+         f"p99i={stats['p99_ms_interactive']:.1f}ms;"
+         f"shed_b={stats['shed_rate_bulk']:.3f}")
+    return stats
+
+
+if __name__ == "__main__":
+    if "--soak" in sys.argv[1:]:
+        out = soak()
+        print("# soak passed:", {k: round(v, 3) if isinstance(v, float)
+                                 else v for k, v in out.items()})
+    else:
+        out = bench_serve()
+        print("# bench_serve:", {k: round(v, 3) if isinstance(v, float)
+                                 else v for k, v in out.items()})

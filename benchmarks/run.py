@@ -21,7 +21,8 @@ import traceback
 # suites whose results feed the BENCH_kernels.json perf trajectory
 _TRAJECTORY_SUITES = ("kernel_packed", "kernel_cham", "kernel_sketch",
                       "kernel_sparse_sketch", "dedup", "dedup_streaming",
-                      "index", "index_mixed", "index_migrate", "cluster")
+                      "index", "index_mixed", "index_migrate", "cluster",
+                      "serve")
 
 # tiny-size overrides for --smoke: exercise every trajectory suite's wiring
 # (sketch -> kernels -> engine -> index) in seconds on a bare CPU runner
@@ -39,6 +40,8 @@ _SMOKE_KWARGS = {
     "index_migrate": dict(n=512, d_new=256, batch_rows=128, q_batch=4),
     "cluster": dict(n_small=256, n_large=1024, k=4, n_iter=2,
                     oracle_iters=1, batch_rows=256, speedup_bar=None),
+    "serve": dict(n=2048, duration_s=0.4, levels=(1, 4), max_requests=400,
+                  bars=False),
 }
 
 
@@ -98,7 +101,7 @@ def _record_trajectory(trajectory: dict) -> None:
 
 def main() -> None:
     from benchmarks import bench_cluster, bench_dedup, bench_index, \
-        bench_kernels, bench_paper
+        bench_kernels, bench_paper, bench_serve
 
     suites = [
         ("fig2_table3", bench_paper.fig2_table3_reduction_speed),
@@ -118,6 +121,7 @@ def main() -> None:
         ("index_mixed", bench_index.bench_mixed_traffic),
         ("index_migrate", bench_index.bench_migration),
         ("cluster", bench_cluster.bench_cluster),
+        ("serve", bench_serve.bench_serve),
     ]
     only = None
     smoke = "--smoke" in sys.argv[1:]

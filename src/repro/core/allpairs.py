@@ -628,7 +628,8 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
                      order_by: np.ndarray | None = None,
                      q_valid: int | None = None,
                      alive: np.ndarray | None = None,
-                     stats_out: dict | None = None):
+                     stats_out: dict | None = None,
+                     deadline=None):
     """Progressive band-expansion top-k over weight-banded rows.
 
     `b` holds `n_valid` rows sorted by ascending prune score and cut into
@@ -662,8 +663,21 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
     the certificate under-prunes but stays sound, and the result equals
     `topk_rows` over just the alive rows in key order.
 
+    `deadline` (any object with an `expired` property — repro.serve's
+    Deadline) turns the walk into a budgeted one: between rounds, an
+    expired deadline stops band expansion where the certificate check
+    would have continued it.  The first round always completes (a
+    budgeted call returns the gap-zero bands' candidates at minimum),
+    and `stats_out` reports `partial=True` with `cert_gap` = how far
+    the certificate was from closing (max over queries and unvisited
+    bands of `kth + PRUNE_MARGIN - prune_factor * gap`, 0 when it holds,
+    inf when fewer than k rows were seen) — the serving layer's
+    graceful-degradation contract.  Without a deadline (or when the walk
+    finishes before expiry) results are exact and `partial` stays False.
+
     Returns (positions (Q, k) int64 into b's rows, distances (Q, k) f32) —
     bit-identical to `topk_rows` over the same rows arranged in key order.
+    Positions can be -1 (column unfilled) only in a partial result.
     """
     a = jnp.asarray(a)
     q = a.shape[0] if q_valid is None else q_valid
@@ -673,7 +687,8 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
     if stats_out is not None:
         # filled below; pre-set so early returns still report a full record
         stats_out.update(n_bands=len(band_lo), bands_visited=0,
-                         rows_visited=0, early_stop=False)
+                         rows_visited=0, early_stop=False,
+                         partial=False, cert_gap=0.0)
     if q == 0 or k == 0:
         return np.zeros((q, 0), np.int64), np.zeros((q, 0), np.float32)
     q_scores = np.asarray(q_scores, np.float64)
@@ -738,10 +753,20 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
         if ptr >= n_bands:
             break
         kth = best_v[:, k - 1]
-        if np.all(factor * gap[:, visit[ptr:]]
-                  >= kth[:, None] + PRUNE_MARGIN):
+        bound = factor * gap[:, visit[ptr:]]
+        if np.all(bound >= kth[:, None] + PRUNE_MARGIN):
             if stats_out is not None:
                 stats_out["early_stop"] = True
+            break
+        if deadline is not None and deadline.expired:
+            # budget exhausted before the certificate closed: stop here
+            # and report the residual gap — the distance the kth bound
+            # would have to move for the partial answer to be provably
+            # exact (inf when fewer than k candidates were even seen)
+            if stats_out is not None:
+                stats_out["partial"] = True
+                stats_out["cert_gap"] = float(np.max(np.maximum(
+                    kth[:, None] + PRUNE_MARGIN - bound, 0.0)))
             break
     if stats_out is not None:
         stats_out["bands_visited"] = ptr

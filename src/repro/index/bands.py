@@ -156,7 +156,9 @@ class BandedLayout:
 
     def topk(self, queries_padded: jnp.ndarray, query_weights: np.ndarray,
              k: int, *, q_valid: int, block: int = 2048,
-             mode: str | None = None) -> tuple[np.ndarray, np.ndarray]:
+             mode: str | None = None, deadline=None,
+             info_out: dict | None = None
+             ) -> tuple[np.ndarray, np.ndarray]:
         """Progressive band-expansion k-NN: (ids (Q, k'), dists (Q, k')),
         k' = min(k, n_alive), ascending by (distance, id) — exactly what
         core.allpairs.topk_rows returns over the alive membership in id
@@ -168,25 +170,46 @@ class BandedLayout:
         every (query, unvisited band) pair — see allpairs.topk_rows_banded
         for the exactness argument.  `queries_padded` is the pow2-padded
         packed query batch (first `q_valid` rows real); `query_weights` its
-        host sketch weights, used for band planning only."""
+        host sketch weights, used for band planning only.
+
+        `deadline` bounds the band walk (allpairs budgeted mode); when it
+        fires, `info_out` (if given) reports partial=True + the residual
+        cert_gap, and unfilled id columns carry KBEST_KEY_PAD so the tier
+        merge keeps real candidates ahead of them.  Exact calls leave
+        info_out with partial=False, cert_gap=0.0."""
+        if info_out is not None:
+            info_out.update(partial=False, cert_gap=0.0)
         if self._n_alive == 0 or k <= 0 or q_valid == 0:
             return (np.zeros((q_valid, 0), np.int64),
                     np.zeros((q_valid, 0), np.float32))
         qs = prune_score_host(np.asarray(query_weights)[:q_valid], self.d,
                               self.metric)
-        st = None if self._obs_off else {}
+        st = None if (self._obs_off and info_out is None
+                      and deadline is None) else {}
         pos, vals = allpairs.topk_rows_banded(
             queries_padded, self.matrix, k, d=self.d, metric=self.metric,
             q_scores=qs, band_lo=self.band_lo, band_hi=self.band_hi,
             band_rows=self.band_rows, n_valid=self.n, order_by=self.ids,
             block=block, mode=mode, q_valid=q_valid, alive=self._mask(),
-            stats_out=st)
-        if st is not None:
+            stats_out=st, deadline=deadline)
+        if st is not None and not self._obs_off:
             self._c_queries.inc()
             self._c_visited.inc(st["bands_visited"])
             self._c_pruned.inc(st["n_bands"] - st["bands_visited"])
             if st["early_stop"]:
                 self._c_early.inc()
+        if info_out is not None and st is not None:
+            info_out.update(partial=st["partial"],
+                            cert_gap=st["cert_gap"],
+                            bands_visited=st["bands_visited"],
+                            rows_visited=st["rows_visited"])
+        # a budget-stopped walk can leave columns unfilled (pos == -1);
+        # map them to the KBEST pad id instead of wrapping through ids[-1]
+        if st is not None and st["partial"]:
+            ids = np.full(pos.shape, KBEST_KEY_PAD, np.int64)
+            real = pos >= 0
+            ids[real] = self.ids[pos[real]]
+            return ids, vals
         return self.ids[pos], vals
 
     def select(self, band_mask: np.ndarray
@@ -350,11 +373,20 @@ class TieredLayout:
 
     def topk(self, queries_padded: jnp.ndarray, query_weights: np.ndarray,
              k: int, *, q_valid: int, block: int = 2048,
-             mode: str | None = None) -> tuple[np.ndarray, np.ndarray]:
+             mode: str | None = None, deadline=None,
+             info_out: dict | None = None
+             ) -> tuple[np.ndarray, np.ndarray]:
         """Cross-tier k-NN: (ids (Q, k'), dists (Q, k')), k' = min(k,
         n_alive), ascending by (distance, id) — bit-identical to
         core.allpairs.topk_rows over the full alive membership in id
-        order."""
+        order.
+
+        `deadline`/`info_out` budget the BASE tier's band walk only (the
+        delta tier is a brute-force scan, already O(delta) and exact); a
+        partial base merged with the exact delta is reported partial with
+        the base's cert_gap."""
+        if info_out is not None:
+            info_out.update(partial=False, cert_gap=0.0)
         kk = min(k, self.n_alive)
         if kk <= 0 or q_valid == 0:
             return (np.zeros((q_valid, 0), np.int64),
@@ -363,7 +395,8 @@ class TieredLayout:
         if self.base.n_alive:
             parts.append(self.base.topk(
                 queries_padded, query_weights, kk, q_valid=q_valid,
-                block=block, mode=mode))
+                block=block, mode=mode, deadline=deadline,
+                info_out=info_out))
         if self.delta_n:
             # pad_k keeps k == kk even while the delta holds fewer rows:
             # k is a static jit arg, so letting it track the delta size
@@ -380,8 +413,9 @@ class TieredLayout:
         # exact (value, id)-lexicographic merge of the per-tier k-best
         # lists — merge_topk_parts wraps allpairs.kbest_lex_merge, THE same
         # rule as topk_rows_banded's chunk merge.  Tier memberships are
-        # disjoint, so kk real candidates always exist and no pad survives
-        # the cut.
+        # disjoint, so on an exact (non-partial) walk kk real candidates
+        # always exist and no pad survives the cut; only a budget-stopped
+        # base can leave KBEST_KEY_PAD columns in the merged result.
         return merge_topk_parts(kk, parts)
 
     def radius_tiers(self, query_weights: np.ndarray, radius: float

@@ -588,6 +588,38 @@ class QueryEngine:
             sk, q = self._sketch(queries)
             return self._topk_packed_impl(sk, k, q)
 
+    def topk_budgeted(self, queries, k: int, deadline=None
+                      ) -> tuple[np.ndarray, np.ndarray, dict]:
+        """`topk` under a latency budget: (ids, dists, info), where info
+        carries {"partial", "cert_gap"}.  `deadline` is any object with an
+        `expired` property (repro.serve.Deadline); when it fires before the
+        band walk's exactness certificate closes, the walk stops, the best
+        candidates seen so far come back with info["partial"]=True, and
+        info["cert_gap"] is the residual certificate gap (DESIGN.md 8.4) —
+        how far the k-th bound would have to move for the answer to be
+        provably exact.  With deadline=None (or when the walk finishes in
+        budget) the result is bit-identical to `topk` and partial is False.
+
+        Unfilled slots in a partial answer carry id -1 and distance inf
+        (fewer than k candidates were reachable in budget).  Mid-migration,
+        queries fall back to the exact dual-version path — a migration
+        already bounds its own per-batch work, so budgets do not compound.
+        """
+        if k < 0:
+            raise ValueError(f"topk: k must be >= 0, got {k}")
+        self._drive()  # migration pacing stays OUTSIDE the query timer
+        info: dict = {"partial": False, "cert_gap": 0.0}
+        with self._h_lat["topk"].time(), obs.span("engine.topk", k=k):
+            if self._mig is not None:
+                ids, dists = self._topk_migrating(queries, k)
+                return ids, dists, info
+            sk, q = self._sketch(queries)
+            ids, dists = self._topk_packed_impl(sk, k, q, deadline=deadline,
+                                                info_out=info)
+            if info["partial"]:
+                ids = np.where(ids == allpairs.KBEST_KEY_PAD, -1, ids)
+            return ids, dists, info
+
     def topk_packed(self, sk, k: int, n_valid: int | None = None
                     ) -> tuple[np.ndarray, np.ndarray]:
         """Served through the tiered layout (TieredLayout.topk): the base
@@ -608,8 +640,11 @@ class QueryEngine:
         with self._h_lat["topk"].time(), obs.span("engine.topk", k=k):
             return self._topk_packed_impl(sk, k, n_valid)
 
-    def _topk_packed_impl(self, sk, k: int, n_valid: int | None
+    def _topk_packed_impl(self, sk, k: int, n_valid: int | None,
+                          deadline=None, info_out: dict | None = None
                           ) -> tuple[np.ndarray, np.ndarray]:
+        if info_out is not None:
+            info_out.update(partial=False, cert_gap=0.0)
         sk = jnp.asarray(sk)
         q = sk.shape[0] if n_valid is None else n_valid
         if not 0 <= q <= sk.shape[0]:
@@ -624,11 +659,17 @@ class QueryEngine:
             key = ("topk", kk, self.store.version, q_host.tobytes())
             hit = self._cached(key)
             if hit is not None:
+                # cached answers are always exact: partial results never
+                # enter the LRU (below), so a budgeted call served from
+                # cache is a free upgrade to the full answer
                 return hit[0].copy(), hit[1].copy()
         layout = self._layout()
         q_weights = packing.np_popcount_rows(q_host)
         out = layout.topk(pad_rows_pow2(sk), q_weights, kk, q_valid=q,
-                          block=self.block, mode=self.mode)
+                          block=self.block, mode=self.mode,
+                          deadline=deadline, info_out=info_out)
+        if info_out is not None and info_out.get("partial"):
+            key = None  # a partial answer must not shadow the exact one
         self._remember(key, out)
         return out
 
@@ -797,6 +838,25 @@ class QueryEngine:
     def _pairwise_impl(self, hamming_ops, queries, ids
                        ) -> tuple[np.ndarray, np.ndarray]:
         sk, q = self._sketch(queries)
+        # empty-traffic fast paths: an empty store or a 0-row query batch
+        # answers from host metadata alone — well-typed empty matrices,
+        # no device gather and no kernel call on degenerate pow2-padded
+        # shapes.  Explicit ids still get full validation (duplicates,
+        # membership) so the contract does not weaken at q == 0.
+        if q == 0 or (ids is None and len(self.store) == 0):
+            all_ids = self.store.ids()
+            if ids is None:
+                sel_ids = all_ids
+            else:
+                sel_ids = np.atleast_1d(np.asarray(ids, np.int64))
+                if len(np.unique(sel_ids)) != len(sel_ids):
+                    raise ValueError("pairwise: duplicate ids in batch")
+                m = len(all_ids)
+                pos = np.searchsorted(all_ids, sel_ids)
+                if m == 0 or (pos >= m).any() or (
+                        all_ids[np.minimum(pos, m - 1)] != sel_ids).any():
+                    raise KeyError("pairwise: id not in store")
+            return sel_ids, np.zeros((q, len(sel_ids)), np.float32)
         view = self.store.gather_alive()
         # cheap stale-view guard BEFORE anything dereferences the matrix
         # (the id-subset padded_take below, then the kernel call): a view

@@ -55,6 +55,26 @@ def _bucket_exp(v: float) -> int:
     return e - 1 if m == 0.5 else e
 
 
+def _quantile(buckets: dict, count: int, mn: float, mx: float,
+              p: float) -> float:
+    """Quantile over an already-copied histogram state (see
+    Histogram.state) — lock-free, so exporters can compute p50/p95/p99
+    from one consistent copy instead of re-locking per quantile."""
+    if count == 0:
+        return math.nan
+    target = max(1.0, (p / 100.0) * count)
+    cum = 0
+    for e in sorted(buckets):
+        n = buckets[e]
+        lo, hi = 2.0 ** (e - 1), 2.0 ** e
+        if cum + n >= target:
+            frac = (target - cum) / n
+            est = lo + frac * (hi - lo)
+            return min(max(est, mn), mx)
+        cum += n
+    return mx
+
+
 class Counter:
     """Monotone counter.  `value` is a float (Prometheus convention); inc
     with ints to keep it exact for accounting counters."""
@@ -130,20 +150,20 @@ class Histogram:
         (linear interpolation inside the crossing bucket, clamped to the
         observed min/max so degenerate histograms stay sensible).  NaN when
         empty."""
+        buckets, count, _, mn, mx = self.state()
+        return _quantile(buckets, count, mn, mx, p)
+
+    def state(self) -> tuple:
+        """Consistent copy of (buckets, count, sum, min, max) taken under
+        the lock — the one safe way to READ a histogram that other threads
+        are concurrently observing into.  Iterating `.buckets` directly can
+        see the dict resize mid-iteration (RuntimeError) or pair a bucket
+        sum with a count from a different instant; every reader in this
+        module (`quantile`, `snapshot`, `render_prom`, `merge_from`) goes
+        through here."""
         with self._lock:
-            if self.count == 0:
-                return math.nan
-            target = max(1.0, (p / 100.0) * self.count)
-            cum = 0
-            for e in sorted(self.buckets):
-                n = self.buckets[e]
-                lo, hi = 2.0 ** (e - 1), 2.0 ** e
-                if cum + n >= target:
-                    frac = (target - cum) / n
-                    est = lo + frac * (hi - lo)
-                    return min(max(est, self.min), self.max)
-                cum += n
-            return self.max
+            return (dict(self.buckets), self.count, self.sum,
+                    self.min, self.max)
 
     def reset(self) -> None:
         """Zero the histogram — for measurement windows (benchmarks reset
@@ -158,13 +178,17 @@ class Histogram:
             self.max = -math.inf
 
     def merge_from(self, other: "Histogram") -> None:
+        # copy other's state under ITS lock first, then fold under ours —
+        # sequential lock holds, never nested, so merging a registry into
+        # itself or cross-merging two registries cannot deadlock
+        buckets, count, total, mn, mx = other.state()
         with self._lock:
-            for e, n in other.buckets.items():
+            for e, n in buckets.items():
                 self.buckets[e] = self.buckets.get(e, 0) + n
-            self.count += other.count
-            self.sum += other.sum
-            self.min = min(self.min, other.min)
-            self.max = max(self.max, other.max)
+            self.count += count
+            self.sum += total
+            self.min = min(self.min, mn)
+            self.max = max(self.max, mx)
 
 
 class _HistTimer:
@@ -277,12 +301,14 @@ class MetricsRegistry:
             elif isinstance(m, Gauge):
                 val = m.value
             else:
+                buckets, count, total, mn, mx = m.state()
                 val = {
-                    "count": m.count, "sum": m.sum,
-                    "min": None if m.count == 0 else m.min,
-                    "max": None if m.count == 0 else m.max,
-                    "p50": m.quantile(50), "p95": m.quantile(95),
-                    "p99": m.quantile(99),
+                    "count": count, "sum": total,
+                    "min": None if count == 0 else mn,
+                    "max": None if count == 0 else mx,
+                    "p50": _quantile(buckets, count, mn, mx, 50),
+                    "p95": _quantile(buckets, count, mn, mx, 95),
+                    "p99": _quantile(buckets, count, mn, mx, 99),
                 }
             if not labels:
                 out[name] = val
@@ -323,16 +349,17 @@ class MetricsRegistry:
                 if name not in typed:
                     lines.append(f"# TYPE {name} histogram")
                     typed.add(name)
+                buckets, count, total, _, _ = m.state()
                 cum = 0
-                for e in sorted(m.buckets):
-                    cum += m.buckets[e]
+                for e in sorted(buckets):
+                    cum += buckets[e]
                     edge = f'le="{2.0 ** e:g}"'
                     lines.append(
                         f"{name}_bucket{labstr(labels, edge)} {cum}")
                 inf_edge = labstr(labels, 'le="+Inf"')
-                lines.append(f"{name}_bucket{inf_edge} {m.count}")
-                lines.append(f"{name}_sum{labstr(labels)} {m.sum:g}")
-                lines.append(f"{name}_count{labstr(labels)} {m.count}")
+                lines.append(f"{name}_bucket{inf_edge} {count}")
+                lines.append(f"{name}_sum{labstr(labels)} {total:g}")
+                lines.append(f"{name}_count{labstr(labels)} {count}")
         return "\n".join(lines) + ("\n" if lines else "")
 
 
@@ -383,6 +410,9 @@ class _NullHistogram:
 
     def quantile(self, p):
         return math.nan
+
+    def state(self):
+        return {}, 0, 0.0, math.inf, -math.inf
 
     def reset(self) -> None:
         pass

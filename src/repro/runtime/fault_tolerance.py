@@ -32,12 +32,27 @@ import os
 import time
 from dataclasses import dataclass, field
 
+from repro.runtime import faultinject
+
+# between writing the .tmp beat and publishing it with os.replace — a
+# crash here orphans the .tmp file (the published beat, if any, stays
+# intact; FailureDetector never reads .tmp)
+_CP_HB_TMP = faultinject.declare("heartbeat.tmp_written")
+
 
 class HeartbeatWriter:
     def __init__(self, directory: str, host_id: int):
         self.path = os.path.join(directory, f"heartbeat_{host_id}.json")
         os.makedirs(directory, exist_ok=True)
         self.host_id = host_id
+        # sweep OUR orphaned staging file from a previous incarnation that
+        # died between write and publish (mirrors Checkpointer's
+        # .tmp_step_* sweep).  Only this host's .tmp: a peer may be
+        # mid-beat on the shared directory right now.
+        try:
+            os.remove(self.path + ".tmp")
+        except OSError:
+            pass
 
     def beat(self, step: int, extra: dict | None = None) -> None:
         payload = {"host": self.host_id, "step": step, "time": time.time(),
@@ -45,6 +60,7 @@ class HeartbeatWriter:
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(payload, f)
+        faultinject.crash_point(_CP_HB_TMP)
         os.replace(tmp, self.path)
 
 

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import contextlib
 import os
+import threading
 
 EXIT_CODE = 17  # distinguishes an injected kill from any real failure
 
@@ -50,6 +51,12 @@ _ENV_MODE = "REPRO_CRASH_MODE"
 _registry: set[str] = set()
 _armed: str | None = None
 _armed_mode: str = "raise"
+# serializes the disarm-and-fire transition: with the front door's real
+# threads, several callers can cross the same armed point concurrently,
+# and "one arm, one crash" must mean exactly one of them dies.  The
+# disarmed fast path in crash_point stays a lock-free global-is-None
+# check; the lock is only taken once a hit looks live.
+_fire_lock = threading.Lock()
 _record = False  # hit recording is test-only: a server must not grow a log
 _hits: list[str] = []  # points crossed while recording was on, in order
 _observer = None  # repro.obs hook: every crossing becomes a trace instant
@@ -85,12 +92,14 @@ def arm(name: str, mode: str = "raise") -> None:
                          f"registered: {registered_points()}")
     if mode not in ("raise", "exit"):
         raise ValueError(f"mode must be 'raise' or 'exit', got {mode!r}")
-    _armed, _armed_mode = name, mode
+    with _fire_lock:
+        _armed, _armed_mode = name, mode
 
 
 def disarm() -> None:
     global _armed
-    _armed = None
+    with _fire_lock:
+        _armed = None
 
 
 @contextlib.contextmanager
@@ -140,8 +149,12 @@ def crash_point(name: str) -> None:
     if _observer is not None:
         _observer(name)
     if _armed is not None and name == _armed:
-        _armed = None  # one arm, one crash
-        if _armed_mode == "exit":
+        with _fire_lock:
+            if _armed != name:
+                return  # another thread won the race and already fired
+            _armed = None  # one arm, one crash
+            mode = _armed_mode
+        if mode == "exit":
             os._exit(EXIT_CODE)
         raise InjectedCrash(name)
 

@@ -1,1 +1,19 @@
-"""Serving substrate."""
+"""Serving substrate.
+
+`frontdoor` is the overload-tolerant facade over the index
+`QueryEngine` (admission control, deadline-aware micro-batching,
+graceful degradation — DESIGN.md section 12); `engine` is the LM
+decode serving engine.
+"""
+
+from repro.serve.admission import (CLASS_BULK, CLASS_INTERACTIVE,
+                                   AdmissionQueue, RejectedError)
+from repro.serve.deadline import Deadline, ServiceEstimator
+from repro.serve.frontdoor import (FrontDoor, FrontDoorClosed, Request,
+                                   ServeResult)
+
+__all__ = [
+    "AdmissionQueue", "CLASS_BULK", "CLASS_INTERACTIVE", "Deadline",
+    "FrontDoor", "FrontDoorClosed", "RejectedError", "Request",
+    "ServeResult", "ServiceEstimator",
+]

@@ -350,3 +350,84 @@ def test_compact_crash_leaves_serving_state_intact(tmp_path):
     r_ids, r_d = res.topk(x[:2], 3)
     assert np.array_equal(before[0], r_ids)
     assert np.array_equal(before[1], r_d)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat durability (the writer's own .tmp staging file)
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_crash_orphans_tmp_and_init_sweeps_it(tmp_path):
+    """A crash between writing the .tmp beat and os.replace leaves an
+    orphan .tmp; the published beat stays intact (the detector keeps
+    reading the LAST good beat), and the next incarnation's init sweeps
+    its own orphan — but never a peer's in-flight staging file."""
+    from repro.runtime.fault_tolerance import FailureDetector, HeartbeatWriter
+
+    d = str(tmp_path)
+    hb = HeartbeatWriter(d, host_id=0)
+    hb.beat(1)
+    with faultinject.armed("heartbeat.tmp_written"):
+        with pytest.raises(faultinject.InjectedCrash):
+            hb.beat(2)
+    tmp = os.path.join(d, "heartbeat_0.json.tmp")
+    assert os.path.exists(tmp), "crash should strand the staging file"
+    det = FailureDetector(d)
+    assert det.read_all()[0]["step"] == 1  # last PUBLISHED beat survives
+
+    peer_tmp = os.path.join(d, "heartbeat_1.json.tmp")
+    with open(peer_tmp, "w") as f:
+        f.write("{")  # peer mid-beat on the shared directory
+    hb2 = HeartbeatWriter(d, host_id=0)  # restart: sweeps only its own
+    assert not os.path.exists(tmp)
+    assert os.path.exists(peer_tmp)
+    hb2.beat(3)
+    assert det.read_all()[0]["step"] == 3
+
+
+def test_heartbeat_point_registered():
+    import repro.runtime.fault_tolerance  # noqa: F401 - declares on import
+
+    assert "heartbeat.tmp_written" in faultinject.registered_points()
+
+
+# ---------------------------------------------------------------------------
+# front-door points + armed-point atomicity under real threads
+# ---------------------------------------------------------------------------
+
+
+def test_frontdoor_points_registered():
+    import repro.serve.frontdoor  # noqa: F401 - declares on import
+
+    pts = faultinject.registered_points()
+    assert {"frontdoor.enqueue", "frontdoor.flush",
+            "frontdoor.publish"} <= set(pts)
+
+
+def test_one_arm_one_crash_is_atomic_across_threads():
+    """With the front door's real threads, several callers can cross an
+    armed point concurrently; exactly ONE must die."""
+    import threading
+
+    n = 16
+    crashes = []
+    barrier = threading.Barrier(n)
+
+    def worker():
+        barrier.wait()
+        for _ in range(50):
+            try:
+                faultinject.crash_point("store.compact")
+            except faultinject.InjectedCrash:
+                crashes.append(1)
+
+    for _ in range(20):  # repeat: the race needs opportunities
+        faultinject.arm("store.compact")
+        threads = [threading.Thread(target=worker) for _ in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(crashes) == 1, "one arm must mean exactly one crash"
+        del crashes[:]
+    faultinject.disarm()

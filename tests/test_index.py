@@ -288,6 +288,43 @@ def test_empty_and_clamped_queries():
     assert eng.radius(X[:0], 5.0) == []
 
 
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_empty_traffic_is_well_typed_both_metrics(metric):
+    """API-boundary hardening: n=0 stores and 0-row query batches answer
+    as explicit host-side fast paths with well-typed empties — topk,
+    radius AND pairwise — instead of riding pow2 padding of degenerate
+    shapes through the kernels.  Validation does not weaken at q=0."""
+    eng = QueryEngine(P, metric=metric)
+    q0, q2 = X[:0], QUERIES[:2]
+    # empty engine, live queries
+    ids, vals = eng.topk(q2, 5)
+    assert ids.shape == (2, 0) and ids.dtype == np.int64
+    assert vals.shape == (2, 0) and vals.dtype == np.float32
+    assert [len(h) for h in eng.radius(q2, 10.0)] == [0, 0]
+    pids, pd = eng.pairwise(q2)
+    assert pids.shape == (0,) and pd.shape == (2, 0)
+    assert pd.dtype == np.float32
+    with pytest.raises(KeyError):  # explicit ids on an empty store
+        eng.pairwise(q2, ids=[0])
+    # empty engine, empty batch
+    pids, pd = eng.pairwise(q0)
+    assert pids.shape == (0,) and pd.shape == (0, 0)
+    # populated engine, 0-row batch
+    stored = eng.add_dense(X[:6])
+    ids, vals = eng.topk(q0, 5)
+    assert ids.shape == (0, 0) and vals.shape == (0, 0)
+    assert eng.radius(q0, 10.0) == []
+    pids, pd = eng.pairwise(q0)
+    np.testing.assert_array_equal(pids, np.sort(stored))
+    assert pd.shape == (0, 6) and pd.dtype == np.float32
+    pids, pd = eng.pairwise(q0, ids=stored[:2])
+    assert pd.shape == (0, 2) and len(pids) == 2
+    with pytest.raises(ValueError):  # duplicate ids still a caller bug
+        eng.pairwise(q0, ids=[stored[0], stored[0]])
+    with pytest.raises(KeyError):  # membership still enforced at q=0
+        eng.pairwise(q0, ids=[10 ** 9])
+
+
 def test_result_cache_hits_and_invalidates():
     eng = QueryEngine(P, cache_entries=4)
     eng.add_dense(X[:32])

@@ -378,3 +378,76 @@ def test_migration_progress_gauge_exact_at_resume(tmp_path, point):
     assert not res.migrating
     assert progress(res) == 1.0
     assert res.obs_snapshot()["engine_migration_cursor"] == -1.0
+
+
+# ---------------------------------------------------------------------------
+# thread safety: the front door's real threads vs exporters
+# ---------------------------------------------------------------------------
+
+
+def test_registry_reads_are_safe_under_concurrent_writes():
+    """Writers hammer a histogram + counter while readers continuously
+    render/snapshot/merge.  Pre-fix, snapshot and render_prom iterated
+    live bucket dicts without the instrument lock ("dictionary changed
+    size during iteration" under a concurrent observe); now every reader
+    goes through Histogram.state().  Final totals must also be exact —
+    no update may be lost to a read."""
+    import threading
+
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_ms")
+    c = reg.counter("events_total")
+    n_writers, per_writer = 4, 3000
+    stop = threading.Event()
+    errors = []
+
+    def writer(seed):
+        rng = np.random.default_rng(seed)
+        vals = rng.random(per_writer) * 1e4
+        for v in vals:
+            h.observe(float(v))
+            c.inc()
+
+    def reader():
+        sink = MetricsRegistry()
+        while not stop.is_set():
+            try:
+                reg.render_prom()
+                snap = reg.snapshot()
+                hs = snap["lat_ms"]
+                # a torn read would let count drift from the bucket sum
+                assert hs["count"] >= 0
+                h.quantile(99)
+                sink.merge(reg)
+            except Exception as e:  # pragma: no cover - the regression
+                errors.append(e)
+                return
+
+    writers = [threading.Thread(target=writer, args=(s,))
+               for s in range(n_writers)]
+    readers = [threading.Thread(target=reader) for _ in range(3)]
+    for t in readers + writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not errors, f"exporter raced a writer: {errors[:1]}"
+    assert c.value == n_writers * per_writer
+    buckets, count, total, mn, mx = h.state()
+    assert count == n_writers * per_writer
+    assert sum(buckets.values()) == count
+    assert math.isfinite(total) and mn >= 0.0 and mx <= 1e4
+
+
+def test_histogram_state_is_a_consistent_copy():
+    h = Histogram()
+    for v in (1.0, 3.0, 100.0):
+        h.observe(v)
+    buckets, count, total, mn, mx = h.state()
+    assert count == 3 and total == pytest.approx(104.0)
+    assert (mn, mx) == (1.0, 100.0)
+    buckets[99] = 10**6  # mutating the copy must not touch the histogram
+    assert h.state()[0] != buckets
+    assert h.count == 3
