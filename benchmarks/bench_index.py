@@ -24,7 +24,13 @@ categorical rows (vocab 32768, ~64 nnz/row — BoW-document-shaped):
     draining the whole corpus to a wider sketch, and topk QPS measured
     mid-flight (cross-version serving over src/dst/fresh tiers) vs after
     publish, so the serving tax of an in-flight migration is a recorded
-    number rather than folklore.
+    number rather than folklore;
+  * sharded serving (`bench_sharded`) — topk QPS with the engine's
+    partition layer spread across every visible device (one shard per
+    device; `run.py --device-count N` makes N virtual CPU devices for
+    reproducible many-device numbers on one host), with the sharded
+    answer asserted bit-identical to the unsharded engine's.  Emits
+    `qps_sharded` + `device_count` into the trajectory.
 """
 
 from __future__ import annotations
@@ -247,6 +253,46 @@ def bench_mixed_traffic(n_small: int = 4096, n_large: int = 65536,
         assert speedup >= speedup_bar, (
             f"layout sync after add only {speedup:.1f}x faster than the "
             f"rebuild path (bar {speedup_bar}x)")
+    return summary
+
+
+def bench_sharded(n: int = 65536, k: int = 10, n_queries: int = 64,
+                  n_shards: int | None = None) -> dict:
+    """Sharded topk QPS vs the unsharded engine on the same corpus.
+
+    With > 1 visible device the engine shards one partition group per
+    device of a 1-D data mesh; on a single device it falls back to
+    `n_shards` logical shards (default 8) so the cross-shard merge path is
+    always exercised.  The sharded answer must be bit-identical to the
+    unsharded one — the partition layer's core contract — so this bench is
+    also a parity check at bench scale."""
+    import jax
+
+    devs = jax.devices()
+    summary: dict = {"n": n, "device_count": len(devs)}
+    idx, val = _sparse_rows(n, seed=3)
+    q = (idx[:n_queries], val[:n_queries])
+
+    eng = _build(idx, val)
+    eng.topk(q, k)  # warm the query graphs
+    t_un, (ids_ref, d_ref) = timeit(lambda: eng.topk(q, k), repeat=3)
+    summary["qps_unsharded"] = n_queries / t_un
+
+    sh = _build(idx, val)
+    if len(devs) > 1:
+        sh.shard(jax.make_mesh((len(devs),), ("data",)))
+    else:
+        sh.shard(n_shards=n_shards or 8)
+    sh.topk(q, k)  # warm: builds the per-shard layouts + merge graphs
+    t_sh, (ids_sh, d_sh) = timeit(lambda: sh.topk(q, k), repeat=3)
+    assert np.array_equal(ids_ref, ids_sh) and np.array_equal(d_ref, d_sh), \
+        "sharded topk diverged from the unsharded engine"
+    summary["n_shards"] = sh.stats()["n_shards"]
+    summary["qps_sharded"] = n_queries / t_sh
+    summary["sharded_over_unsharded"] = t_sh / t_un
+    emit("index.query_sharded", t_sh * 1e6 / n_queries,
+         f"qps={n_queries / t_sh:.1f};shards={summary['n_shards']};"
+         f"devices={len(devs)}")
     return summary
 
 

@@ -8,7 +8,11 @@ file itself, not just in its git history).
 ``--suites a,b,c`` filters by substring (e.g. ``--suites kernel,dedup``
 re-records just those suites).  ``--smoke`` runs the trajectory suites at
 tiny sizes as a wiring check — failures still abort loudly, but nothing is
-written to BENCH_kernels.json (smoke numbers are not perf claims)."""
+written to BENCH_kernels.json (smoke numbers are not perf claims).
+``--device-count N`` re-execs the driver with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` when the visible
+device count differs, so many-device benches (index_sharded) are
+reproducible from one flag on any single-host CPU box."""
 
 from __future__ import annotations
 
@@ -21,8 +25,8 @@ import traceback
 # suites whose results feed the BENCH_kernels.json perf trajectory
 _TRAJECTORY_SUITES = ("kernel_packed", "kernel_cham", "kernel_sketch",
                       "kernel_sparse_sketch", "dedup", "dedup_streaming",
-                      "index", "index_mixed", "index_migrate", "cluster",
-                      "serve")
+                      "index", "index_mixed", "index_migrate",
+                      "index_sharded", "cluster", "serve")
 
 # tiny-size overrides for --smoke: exercise every trajectory suite's wiring
 # (sketch -> kernels -> engine -> index) in seconds on a bare CPU runner
@@ -38,6 +42,7 @@ _SMOKE_KWARGS = {
     "index_mixed": dict(n_small=256, n_large=1024, q_batch=4, rounds=3,
                         churn=16, speedup_bar=None),
     "index_migrate": dict(n=512, d_new=256, batch_rows=128, q_batch=4),
+    "index_sharded": dict(n=1024, n_queries=8, n_shards=4),
     "cluster": dict(n_small=256, n_large=1024, k=4, n_iter=2,
                     oracle_iters=1, batch_rows=256, speedup_bar=None),
     "serve": dict(n=2048, duration_s=0.4, levels=(1, 4), max_requests=400,
@@ -99,7 +104,44 @@ def _record_trajectory(trajectory: dict) -> None:
         json.dump(record, f, indent=1, default=str)
 
 
+def _ensure_device_count(argv: list[str]) -> None:
+    """`--device-count N`: re-exec with XLA_FLAGS forcing N virtual host
+    devices when the visible count differs.  Must run BEFORE anything
+    imports jax for itself — the backend binds the device count at first
+    import, so the only way to change it is a fresh process.  The env
+    sentinel stops a re-exec loop when the platform ignores the flag
+    (e.g. a real GPU backend): one attempt, then proceed honestly with
+    whatever jax.device_count() says."""
+    n = None
+    for i, arg in enumerate(argv):
+        if arg == "--device-count":
+            if i + 1 >= len(argv):
+                raise SystemExit("usage: run.py --device-count N")
+            n = int(argv[i + 1])
+        elif arg.startswith("--device-count="):
+            n = int(arg.split("=", 1)[1])
+    if n is None or n < 1:
+        if n is not None:
+            raise SystemExit(f"--device-count must be >= 1, got {n}")
+        return
+    if os.environ.get("_REPRO_BENCH_DEVICES") == str(n):
+        return  # already re-exec'd once for this count
+    import jax
+
+    if jax.device_count() == n:
+        return
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if not f.startswith("--xla_force_host_platform_device_count")]
+    flags.append(f"--xla_force_host_platform_device_count={n}")
+    env = dict(os.environ,
+               XLA_FLAGS=" ".join(flags),
+               _REPRO_BENCH_DEVICES=str(n))
+    sys.stdout.flush()
+    os.execve(sys.executable, [sys.executable] + sys.argv, env)
+
+
 def main() -> None:
+    _ensure_device_count(sys.argv[1:])
     from benchmarks import bench_cluster, bench_dedup, bench_index, \
         bench_kernels, bench_paper, bench_serve
 
@@ -120,6 +162,7 @@ def main() -> None:
         ("index", bench_index.bench_index),
         ("index_mixed", bench_index.bench_mixed_traffic),
         ("index_migrate", bench_index.bench_migration),
+        ("index_sharded", bench_index.bench_sharded),
         ("cluster", bench_cluster.bench_cluster),
         ("serve", bench_serve.bench_serve),
     ]

@@ -11,6 +11,12 @@ to their nearest centre the moment they land, removes decrement the cluster
 bookkeeping, and compaction is a no-op (labels are keyed by external id,
 which compaction preserves).
 
+The data engine's layout topology is invisible here: a `shard(mesh)`-ed
+engine emits the same mutation events and answers the same bits
+(DESIGN.md section 13), so ClusterIndex works unchanged on a sharded
+engine — assignment queries go to the private centres engine, which
+stays unsharded (k rows never need scale-out).
+
 Three disciplines, all inherited rather than reinvented:
 
   * Assignment IS a k-NN query.  Centres live in a private k-row

@@ -317,7 +317,10 @@ def kbest_lex_merge(k: int, values: np.ndarray, keys: np.ndarray,
     merge share it, which is what makes their bit-identity with a single
     `topk_rows` scan structural rather than by convention.  Pad candidate
     lists short of k with (np.inf, KBEST_KEY_PAD) entries; they sort after
-    any real candidate and survive only if fewer than k real ones exist."""
+    any real candidate and survive only if fewer than k real ones exist.
+    k must be >= 0 (k = 0 is a valid empty reduction)."""
+    if k < 0:
+        raise ValueError(f"kbest_lex_merge: k must be >= 0, got {k}")
     order = np.lexsort((keys, values), axis=-1)[:, :k]
 
     def take(a: np.ndarray) -> np.ndarray:
@@ -629,7 +632,8 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
                      q_valid: int | None = None,
                      alive: np.ndarray | None = None,
                      stats_out: dict | None = None,
-                     deadline=None):
+                     deadline=None,
+                     init_kth: np.ndarray | None = None):
     """Progressive band-expansion top-k over weight-banded rows.
 
     `b` holds `n_valid` rows sorted by ascending prune score and cut into
@@ -675,9 +679,23 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
     graceful-degradation contract.  Without a deadline (or when the walk
     finishes before expiry) results are exact and `partial` stays False.
 
+    `init_kth` (f32, one entry per valid query) is a cross-partition upper
+    bound on the GLOBAL k-th best value — the running bound a
+    `repro.index.partition.PartitionSet` accumulates while walking sibling
+    partitions.  The certificate then prunes against
+    `min(local kth, init_kth)`: any band it discards holds only rows
+    strictly farther than the global k-th neighbour, so the rows this walk
+    returns are still a SUFFICIENT SET for the cross-partition
+    (value, key)-lex merge — the merged answer stays bit-identical to one
+    scan over the union.  With a finite bound the walk may stop before k
+    local candidates exist (including before visiting any band at all);
+    unfilled columns carry position -1 / value inf even in exact
+    (non-partial) results, and merge away against any real candidate.
+
     Returns (positions (Q, k) int64 into b's rows, distances (Q, k) f32) —
     bit-identical to `topk_rows` over the same rows arranged in key order.
-    Positions can be -1 (column unfilled) only in a partial result.
+    Positions can be -1 (column unfilled) only in a partial result or
+    under an `init_kth` bound.
     """
     a = jnp.asarray(a)
     q = a.shape[0] if q_valid is None else q_valid
@@ -697,6 +715,14 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
     # per-(query, band) weight-bound gaps; visit priority = nearest first
     gap = np.maximum(np.maximum(band_lo[None, :] - q_scores[:, None],
                                 q_scores[:, None] - band_hi[None, :]), 0.0)
+    if init_kth is not None:
+        init_kth = np.asarray(init_kth, np.float32)[:q]
+        if np.all(factor * gap >= init_kth[:, None] + PRUNE_MARGIN):
+            # every band is already outside the cross-partition bound:
+            # nothing here can enter the merged top-k, skip the walk
+            if stats_out is not None:
+                stats_out["early_stop"] = True
+            return np.zeros((q, 0), np.int64), np.zeros((q, 0), np.float32)
     band_gap = gap.min(axis=0)
     visit = np.argsort(band_gap, kind="stable")
 
@@ -753,6 +779,8 @@ def topk_rows_banded(a, b, k: int, *, d: int, q_scores: np.ndarray,
         if ptr >= n_bands:
             break
         kth = best_v[:, k - 1]
+        if init_kth is not None:
+            kth = np.minimum(kth, init_kth)
         bound = factor * gap[:, visit[ptr:]]
         if np.all(bound >= kth[:, None] + PRUNE_MARGIN):
             if stats_out is not None:

@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import re
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -73,6 +75,18 @@ def shard_map(f, *, mesh: Mesh, in_specs, out_specs, check_vma: bool = False):
 def mesh_axis_names() -> tuple[str, ...]:
     m = current_mesh()
     return tuple(m.axis_names) if m is not None else ()
+
+
+def mesh_devices(mesh: Mesh) -> list:
+    """The mesh's devices as a flat list in mesh order — the per-shard
+    placement the index partition layer keys on (shard s lives on
+    ``mesh_devices(mesh)[s]``).  Abstract meshes (jax >= 0.5's
+    get_abstract_mesh) carry no concrete devices; fall back to the process
+    device list, which is what an abstract mesh of the whole host means."""
+    devs = getattr(mesh, "devices", None)
+    if devs is not None:
+        return [d for d in np.asarray(devs).flat]
+    return list(jax.devices())[: mesh.size]
 
 
 def dp_axes() -> tuple[str, ...]:

@@ -9,8 +9,11 @@ Public API:
     SketchStore        — pow2-capacity device buffers; add / remove(tomb-
                          stone) / compact without per-call recompiles
     BandedLayout       — weight-banded snapshot; radius-query band pruning
-    TieredLayout       — LSM-style base + delta tiers; O(delta) sync after
-                         mutations instead of per-version rebuilds
+    Partition          — one serving unit: slot subset x device x layout
+                         kind (sorted-banded | brute-delta) x spec
+    PartitionSet       — per-shard base+delta partition groups; O(delta)
+                         sync, shard-local merge policy, global k-th bound
+                         (TieredLayout is its n_shards=1 alias)
     QueryEngine        — add_dense / add_sparse / topk / radius / pairwise,
                          save / restore, shard, migrate
     SketchSpec         — versioned (dims, seeds) sketch-space identity
@@ -18,14 +21,16 @@ Public API:
                          section 10); RawArchive is its raw-row store
     ingest_documents   — data.pipeline document stream -> engine
 
-Results are bit-identical to the batch engine on the same membership; see
-tests/test_index.py for the pinned contracts, and tests/test_migrate.py /
-tests/test_faultinject.py for the drift-migration and crash-safety ones.
+Results are bit-identical to the batch engine on the same membership — at
+every shard count; see tests/test_index.py and tests/test_partition.py for
+the pinned contracts, and tests/test_migrate.py / tests/test_faultinject.py
+for the drift-migration and crash-safety ones.
 """
 
-from repro.index.bands import (BandedLayout, TieredLayout,  # noqa: F401
-                               merge_topk_parts)
+from repro.index.bands import BandedLayout  # noqa: F401
 from repro.index.engine import QueryEngine  # noqa: F401
 from repro.index.ingest import ingest_documents  # noqa: F401
 from repro.index.migrate import Migration, RawArchive  # noqa: F401
+from repro.index.partition import (Partition, PartitionSet,  # noqa: F401
+                                   TieredLayout, merge_topk_parts)
 from repro.index.store import SketchSpec, SketchStore  # noqa: F401

@@ -11,66 +11,36 @@ bands on host — before a single distance tile, device gather, or compile is
 touched — and a k-NN query expands outward through the bands nearest the
 query, stopping at the exactness certificate (DESIGN.md sections 8.2/8.4).
 
-Two layers live here (DESIGN.md section 8.5):
+This module holds ONE layer: `BandedLayout`, an immutable weight-sorted
+banded snapshot of a slot set, plus a refreshable ALIVE mask so tombstones
+thread through without invalidating the sort or the device matrix.  A
+layout can cover any slot subset (a shard's membership, not just the whole
+store) and commit its matrix to a specific device — it is the
+``sorted-banded`` partition kind of `repro.index.partition` (DESIGN.md
+section 13), where the incremental tiering, sharding, and cross-partition
+merge logic live (`PartitionSet`, historically `TieredLayout`, plus
+`merge_topk_parts` — both re-exported here for back-compat).
 
-  * `BandedLayout` — an immutable weight-sorted banded snapshot of a slot
-    set, plus a refreshable ALIVE mask so tombstones thread through without
-    invalidating the sort or the device matrix.
-  * `TieredLayout` — the LSM-style incremental layout the engine serves
-    from: a big sorted base tier that survives mutations, a small unsorted
-    delta tier holding fresh adds (scanned brute-force — the sketches are
-    tiny, so a few thousand delta rows cost less than one band gather), and
-    a size-ratio merge policy folding delta back into base.  `sync` absorbs
-    a mutation in O(delta) instead of the O(N log N) host sort + O(N)
-    device gather a fresh build pays.
-
-Every prune in both layers is sound (the weight bound holds with
-PRUNE_MARGIN slack for float noise), and the cross-tier merge is the same
-(value, id)-lexicographic k-best used inside `topk_rows_banded`, so results
-are bit-identical to a fresh batch build of the same membership — tiering
-is a pure serving optimisation with zero bit-identity risk.
+Every prune is sound (the weight bound holds with PRUNE_MARGIN slack for
+float noise), and the cross-partition merge is the same (value, id)-
+lexicographic k-best used inside `topk_rows_banded`, so results are
+bit-identical to a fresh batch build of the same membership — banding,
+tiering, and sharding are pure serving optimisations with zero
+bit-identity risk.
 """
 
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import allpairs
-from repro.core.allpairs import (KBEST_KEY_PAD, PRUNE_MARGIN,
-                                 kbest_lex_merge, prune_factor,
+from repro.core.allpairs import (KBEST_KEY_PAD, PRUNE_MARGIN, prune_factor,
                                  prune_score_host)
 from repro.core.packing import padded_take
 from repro.index.store import SketchStore
 from repro.obs.registry import NULL_REGISTRY
-
-
-def merge_topk_parts(kk: int, parts: list[tuple[np.ndarray, np.ndarray]]
-                     ) -> tuple[np.ndarray, np.ndarray]:
-    """Merge per-partition k-best lists into THE exact (value, id)-lex
-    k-best: `parts` is a list of (ids (Q, <=kk), vals (Q, <=kk)) answers
-    over DISJOINT row partitions, each already exact over its partition.
-    Shared by TieredLayout's base+delta merge and the migration's
-    cross-spec (old store / new store / fresh store) merge — one rule, so
-    partitioned serving is bit-identical to a single scan by construction.
-    Short lists are padded with (KBEST_KEY_PAD, inf), which sorts after any
-    real candidate; pads survive only when the union holds < kk rows."""
-    if len(parts) == 1:
-        return parts[0]  # a lone partition is already the exact k'-best
-
-    def pad_cols(ids: np.ndarray, vals: np.ndarray):
-        have = ids.shape[1]
-        if have == kk:
-            return ids, vals
-        padw = ((0, 0), (0, kk - have))
-        return (np.pad(ids, padw, constant_values=KBEST_KEY_PAD),
-                np.pad(vals, padw, constant_values=np.inf))
-
-    padded = [pad_cols(i, v) for i, v in parts]
-    vals, ids = kbest_lex_merge(
-        kk, np.concatenate([v for _, v in padded], axis=1),
-        np.concatenate([i for i, _ in padded], axis=1))
-    return ids, vals
 
 
 class BandedLayout:
@@ -79,7 +49,10 @@ class BandedLayout:
     Rows are sorted by (sketch weight, id) — a total, history-independent
     order — then cut into bands of `band_rows` consecutive rows.  The device
     matrix holds the sorted rows padded to a power of two; `ids` maps sorted
-    positions back to external ids and `slots` back to store slots.
+    positions back to external ids and `slots` back to store slots.  The
+    snapshot can cover any slot SUBSET (`slots` — a shard's membership; the
+    default is the whole alive store) and commit its matrix to a `device`,
+    so the distance tiles against it run where its rows live.
 
     The snapshot itself never mutates; later tombstones are threaded
     through `refresh_alive`, which re-reads the store's host bitmap at the
@@ -90,7 +63,8 @@ class BandedLayout:
     """
 
     def __init__(self, store: SketchStore, metric: str,
-                 band_rows: int = 1024, registry=None):
+                 band_rows: int = 1024, registry=None,
+                 slots: np.ndarray | None = None, device=None):
         # banding effectiveness counters: visited vs pruned per query, and
         # how often the exactness certificate stopped the scan early.  The
         # instruments are cached here once — under NULL_REGISTRY they are
@@ -105,16 +79,22 @@ class BandedLayout:
         self.d = store.d
         self.band_rows = int(band_rows)
         self.version = store.version
-        slots = store.alive_slots()
+        self.device = device
+        if slots is None:
+            slots = store.alive_slots()
         weights = store.weights_at(slots)
         # stable sort over id-ordered rows => total order (weight, id):
-        # incremental and fresh builds of the same membership agree exactly.
+        # incremental and fresh builds of the same membership agree exactly,
+        # and so do sharded and unsharded builds of the same shard subset
+        # (slots arrive in ascending id order either way).
         order = np.argsort(weights, kind="stable")
         self.n = len(slots)
         self.slots = slots[order]
         self.ids = store.ids_at(slots)[order]
         w_sorted = weights[order]
         self.matrix = padded_take(store.sk_buf, self.slots)
+        if device is not None:
+            self.matrix = jax.device_put(self.matrix, device)
         self.alive = np.ones(self.n, bool)
         self._n_alive = self.n
         self.n_bands = -(-self.n // self.band_rows) if self.n else 0
@@ -157,7 +137,8 @@ class BandedLayout:
     def topk(self, queries_padded: jnp.ndarray, query_weights: np.ndarray,
              k: int, *, q_valid: int, block: int = 2048,
              mode: str | None = None, deadline=None,
-             info_out: dict | None = None
+             info_out: dict | None = None,
+             init_kth: np.ndarray | None = None
              ) -> tuple[np.ndarray, np.ndarray]:
         """Progressive band-expansion k-NN: (ids (Q, k'), dists (Q, k')),
         k' = min(k, n_alive), ascending by (distance, id) — exactly what
@@ -172,10 +153,13 @@ class BandedLayout:
         packed query batch (first `q_valid` rows real); `query_weights` its
         host sketch weights, used for band planning only.
 
-        `deadline` bounds the band walk (allpairs budgeted mode); when it
-        fires, `info_out` (if given) reports partial=True + the residual
-        cert_gap, and unfilled id columns carry KBEST_KEY_PAD so the tier
-        merge keeps real candidates ahead of them.  Exact calls leave
+        `init_kth` seeds the certificate with a cross-partition k-th bound
+        (per query, length >= q_valid): rows pruned under it are provably
+        outside the GLOBAL merged top-k, so this layout returns a
+        sufficient — not necessarily full — k-best whose unfilled columns
+        carry KBEST_KEY_PAD and merge away.  `deadline` bounds the band
+        walk (allpairs budgeted mode); when it fires, `info_out` (if given)
+        reports partial=True + the residual cert_gap.  Exact calls leave
         info_out with partial=False, cert_gap=0.0."""
         if info_out is not None:
             info_out.update(partial=False, cert_gap=0.0)
@@ -191,7 +175,7 @@ class BandedLayout:
             q_scores=qs, band_lo=self.band_lo, band_hi=self.band_hi,
             band_rows=self.band_rows, n_valid=self.n, order_by=self.ids,
             block=block, mode=mode, q_valid=q_valid, alive=self._mask(),
-            stats_out=st, deadline=deadline)
+            stats_out=st, deadline=deadline, init_kth=init_kth)
         if st is not None and not self._obs_off:
             self._c_queries.inc()
             self._c_visited.inc(st["bands_visited"])
@@ -203,9 +187,11 @@ class BandedLayout:
                             cert_gap=st["cert_gap"],
                             bands_visited=st["bands_visited"],
                             rows_visited=st["rows_visited"])
-        # a budget-stopped walk can leave columns unfilled (pos == -1);
-        # map them to the KBEST pad id instead of wrapping through ids[-1]
-        if st is not None and st["partial"]:
+        # a budget-stopped walk — or a cross-partition bound proving rows
+        # here can't enter the merged top-k — can leave columns unfilled
+        # (pos == -1); map them to the KBEST pad id instead of wrapping
+        # through ids[-1]
+        if (pos < 0).any():
             ids = np.full(pos.shape, KBEST_KEY_PAD, np.int64)
             real = pos >= 0
             ids[real] = self.ids[pos[real]]
@@ -232,211 +218,13 @@ class BandedLayout:
         return padded_take(self.matrix, rows), len(rows), self.ids[rows]
 
 
-class TieredLayout:
-    """LSM-style incremental layout: sorted base tier + unsorted delta tier.
-
-    The engine's serving structure (DESIGN.md section 8.5).  The base tier
-    is a `BandedLayout` over the membership at the last merge; fresh adds
-    accumulate as a DELTA of store slots served brute-force by the plain
-    batch reductions; removes flip per-tier alive masks.  `sync` advances
-    the layout across any version range of the same slot epoch in O(delta)
-    — compaction (an epoch bump) or the size-ratio merge policy fold the
-    tiers back into one sorted base.
-
-    Exactness: the base tier returns the exact (value, id)-lex k-best over
-    its alive rows (the banded certificate), the delta tier's rows are laid
-    out in ascending id order so `topk_rows`' lower-column tie-break IS the
-    id tie-break, and the two k-best lists merge by (value, id) — the same
-    lexicographic merge `topk_rows_banded` uses across chunks.  Tier
-    membership partitions the alive set, so the merged answer is
-    bit-identical to a fresh batch build (tests/test_index.py pins this
-    across tier boundaries, merges, and cache hits).
-    """
-
-    def __init__(self, store: SketchStore, metric: str,
-                 band_rows: int = 1024, merge_ratio: float | None = 0.125,
-                 registry=None):
-        self.metric = metric
-        self.d = store.d
-        self.band_rows = int(band_rows)
-        self.merge_ratio = merge_ratio
-        self.registry = NULL_REGISTRY if registry is None else registry
-        self.n_merges = -1  # the initial build below is not a merge
-        self._rebuild(store)
-
-    # -- construction / synchronisation ------------------------------------
-
-    def _rebuild(self, store: SketchStore) -> None:
-        """Fold everything into one freshly sorted base tier (the O(N log N)
-        path `sync` exists to avoid paying per mutation)."""
-        self.base = BandedLayout(store, self.metric,
-                                 band_rows=self.band_rows,
-                                 registry=self.registry)
-        self._store = store
-        # per-tier spec record: every row this layout serves was sketched
-        # under it, and the cross-version merge keys the query sketch on it
-        self.spec = store.spec
-        self.delta_slots = np.zeros(0, np.int64)
-        self.delta_n = 0
-        self.delta_ids = np.zeros(0, np.int64)
-        self._delta_cache: jnp.ndarray | None = None
-        st = store.stamp()
-        self.version, self.epoch, self.seen_size = (
-            st.version, st.epoch, st.size)
-        self.seen_removed = store.removed_count
-        self.n_merges += 1
-
-    def _refresh_delta(self, store: SketchStore,
-                       mask: np.ndarray | None = None) -> None:
-        """Drop tombstoned delta slots (they never resurrect; `mask` is
-        the alive bitmap the sync already read, when it read one) and
-        invalidate the gathered view only if the slot set changed —
-        O(delta) host filter, NO device work: the gather is deferred to
-        the next query, so a burst of mutations between two queries pays
-        for one gather, not one per mutation."""
-        changed = False
-        if mask is not None and not mask.all():
-            self.delta_slots = self.delta_slots[mask]
-            changed = True
-        new_n = len(self.delta_slots)
-        if changed or new_n != self.delta_n:  # shrank, or grew via adds
-            self._delta_cache = None
-        self.delta_n = new_n
-        self.delta_ids = store.ids_at(self.delta_slots)
-
-    @property
-    def delta_matrix(self) -> jnp.ndarray | None:
-        """The delta tier's pow2-padded device matrix, gathered lazily at
-        first use after a sync.  jnp.take copies, so the view survives
-        later donated appends to the store buffer (unlike gather_alive's
-        append-only fast path)."""
-        if self._delta_cache is None and self.delta_n:
-            self._delta_cache = padded_take(self._store.sk_buf,
-                                            self.delta_slots)
-        return self._delta_cache
-
-    def sync(self, store: SketchStore) -> "TieredLayout":
-        """Advance to the store's current (version, epoch) — THE entry the
-        engine calls before serving.  Version unchanged: free.  Adds within
-        the epoch: extend the delta tier (O(delta)).  Removes: refresh the
-        per-tier alive masks (O(n) host bitmap reads).  Epoch change
-        (compaction) or the merge policy tripping: full rebuild."""
-        st = store.stamp()
-        self._store = store
-        if (st.version, st.epoch) == (self.version, self.epoch):
-            return self
-        if st.epoch != self.epoch or self.merge_ratio == 0:
-            # epoch bump (compaction renumbered slots), or merge_ratio=0:
-            # the pre-tiered rebuild-per-version baseline, which rebuilt
-            # on EVERY mutation — removes included
-            self._rebuild(store)
-            return self
-        added = st.size > self.seen_size
-        if added:
-            self.delta_slots = np.concatenate(
-                [self.delta_slots, store.tail_slots(self.seen_size)])
-            self.seen_size = st.size
-        removed = store.removed_count != self.seen_removed
-        delta_mask = None
-        if removed:
-            # only a version range that actually contains removes pays the
-            # O(n) host bitmap re-read — append-heavy traffic skips it
-            self.base.refresh_alive(store)
-            self.seen_removed = store.removed_count
-            delta_mask = store.alive_at(self.delta_slots)
-            live_delta = int(np.count_nonzero(delta_mask))
-        else:
-            live_delta = len(self.delta_slots)  # filtered at the last sync
-        dead_base = self.base.n - self.base.n_alive
-        # merge policy: fold when the delta outgrows its share of the base
-        # (brute-force delta scans stop being cheap), or when tombstones
-        # outnumber alive base rows (the sorted matrix is mostly dead
-        # weight).  None never auto-folds (the caller manages folding via
-        # compact()).
-        if (self.merge_ratio is not None
-                and (live_delta > self.merge_ratio * max(self.base.n_alive, 1)
-                     or dead_base > max(self.base.n_alive, 1))):
-            self._rebuild(store)
-            return self
-        if added or removed:
-            self._refresh_delta(store, delta_mask)
-        self.version = st.version
-        return self
-
-    # -- introspection ------------------------------------------------------
-
-    @property
-    def n_alive(self) -> int:
-        return self.base.n_alive + self.delta_n
-
-    # -- serving ------------------------------------------------------------
-
-    def topk(self, queries_padded: jnp.ndarray, query_weights: np.ndarray,
-             k: int, *, q_valid: int, block: int = 2048,
-             mode: str | None = None, deadline=None,
-             info_out: dict | None = None
-             ) -> tuple[np.ndarray, np.ndarray]:
-        """Cross-tier k-NN: (ids (Q, k'), dists (Q, k')), k' = min(k,
-        n_alive), ascending by (distance, id) — bit-identical to
-        core.allpairs.topk_rows over the full alive membership in id
-        order.
-
-        `deadline`/`info_out` budget the BASE tier's band walk only (the
-        delta tier is a brute-force scan, already O(delta) and exact); a
-        partial base merged with the exact delta is reported partial with
-        the base's cert_gap."""
-        if info_out is not None:
-            info_out.update(partial=False, cert_gap=0.0)
-        kk = min(k, self.n_alive)
-        if kk <= 0 or q_valid == 0:
-            return (np.zeros((q_valid, 0), np.int64),
-                    np.zeros((q_valid, 0), np.float32))
-        parts: list[tuple[np.ndarray, np.ndarray]] = []
-        if self.base.n_alive:
-            parts.append(self.base.topk(
-                queries_padded, query_weights, kk, q_valid=q_valid,
-                block=block, mode=mode, deadline=deadline,
-                info_out=info_out))
-        if self.delta_n:
-            # pad_k keeps k == kk even while the delta holds fewer rows:
-            # k is a static jit arg, so letting it track the delta size
-            # would recompile on every add (tail pads merge away below)
-            pos, vals = allpairs.topk_rows(
-                queries_padded, self.delta_matrix, kk, d=self.d,
-                metric=self.metric, block=block, mode=mode,
-                m_valid=self.delta_n, pad_k=True)
-            pos, vals = pos[:q_valid], vals[:q_valid]
-            ids = np.full(pos.shape, KBEST_KEY_PAD, np.int64)
-            real = pos >= 0
-            ids[real] = self.delta_ids[pos[real]]
-            parts.append((ids, vals))
-        # exact (value, id)-lexicographic merge of the per-tier k-best
-        # lists — merge_topk_parts wraps allpairs.kbest_lex_merge, THE same
-        # rule as topk_rows_banded's chunk merge.  Tier memberships are
-        # disjoint, so on an exact (non-partial) walk kk real candidates
-        # always exist and no pad survives the cut; only a budget-stopped
-        # base can leave KBEST_KEY_PAD columns in the merged result.
-        return merge_topk_parts(kk, parts)
-
-    def radius_tiers(self, query_weights: np.ndarray, radius: float
-                     ) -> list[tuple[jnp.ndarray, int, np.ndarray]]:
-        """Per-tier (matrix, n_selected, ids) selections for a radius
-        query: the base tier after the band prune, the delta tier whole
-        (it is small by the merge policy — brute-force is the prune).
-        Tier memberships partition the alive set, so the per-tier
-        `threshold_pairs` hits union to exactly the batch engine's answer
-        on the full membership."""
-        out = []
-        if self.base.n_alive:
-            mask = self.base.candidate_bands(query_weights, radius)
-            if not self.registry.is_null:
-                kept = int(np.count_nonzero(mask))
-                self.base._c_queries.inc()
-                self.base._c_visited.inc(kept)
-                self.base._c_pruned.inc(self.base.n_bands - kept)
-            sel, n_sel, sel_ids = self.base.select(mask)
-            if n_sel:
-                out.append((sel, n_sel, sel_ids))
-        if self.delta_n:
-            out.append((self.delta_matrix, self.delta_n, self.delta_ids))
-        return out
+def __getattr__(name: str):
+    # back-compat lazy re-exports: the LSM tier layer moved to
+    # repro.index.partition (TieredLayout is PartitionSet's n_shards=1
+    # face, merge_topk_parts is the shared cross-partition merge rule).
+    # PEP 562 indirection instead of a top-level import keeps
+    # bands -> partition -> bands from becoming an import cycle.
+    if name in ("TieredLayout", "merge_topk_parts"):
+        from repro.index import partition
+        return getattr(partition, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -15,27 +15,33 @@ Serving disciplines (DESIGN.md section 8.3):
     request mixes.  Padding rows are all-zero categorical vectors, whose
     sketches are all-zero and which every reduction masks out — they can
     never contaminate a result.
-  * Tiered serving.  Queries serve through a TieredLayout (DESIGN.md 8.5):
-    a big weight-sorted base tier that SURVIVES mutations, a small delta
-    tier of fresh adds scanned brute-force, and per-tier alive masks for
-    removes.  `_layout()` syncs the layout across the version RANGE since
-    it was built — a mutation costs the next query O(delta), not the
-    O(N log N) rebuild the old version-equality invalidation paid.
-  * Bit-identity.  `topk` serves through the base tier's progressive band
-    expansion (allpairs.topk_rows_banded — nearest bands first, stop at the
-    exactness certificate) merged with the delta tier by (value, id), and
-    `radius` through threshold_pairs per tier; both are bit-identical to
+  * Partitioned serving.  Queries serve through a PartitionSet
+    (repro.index.partition, DESIGN.md 8.5/13): per shard, a big
+    weight-sorted base partition that SURVIVES mutations, a small
+    brute-delta partition of fresh adds, and per-partition alive masks for
+    removes.  `_layout()` syncs the set across the version RANGE since it
+    was built — a mutation costs the next query O(delta), not the
+    O(N log N) rebuild the old version-equality invalidation paid.  All of
+    that discipline lives in partition.py; the engine only sketches,
+    routes, and caches.
+  * Bit-identity.  `topk` serves through each base partition's progressive
+    band expansion (allpairs.topk_rows_banded — nearest bands first, stop
+    at the exactness certificate, seeded with the cross-partition running
+    k-th bound) merged with the deltas by (value, id), and `radius`
+    through threshold_pairs per partition; both are bit-identical to
     running the batch engine on a freshly built matrix of the same vectors
-    — across any interleaving of add/remove/compact, after checkpoint
-    restore, and under both metrics.  Ties in topk resolve to the lower
-    id, matching topk_rows' stable merge.
+    — across any interleaving of add/remove/compact, at every shard count,
+    after checkpoint restore, and under both metrics.  Ties in topk
+    resolve to the lower id, matching topk_rows' stable merge.
   * LRU result cache.  Results are memoised on (op, args, store version,
     query-sketch bytes); any mutation bumps the version, so stale hits are
     impossible by construction.
 
 Persistence snapshots flow through checkpoint.Checkpointer (flat-tree save
-of the store buffers + hash seeds + metadata), and `shard` opt-in places the
-store rows across the data axes of a mesh via distributed.sharding.
+of the store buffers + hash seeds + metadata), and `shard` opt-in re-homes
+the serving layout as one PartitionSet per mesh device — rows routed by
+``id % n_shards``, per-shard matrices placed per device, answers merged
+cross-shard (see `shard`).
 """
 
 from __future__ import annotations
@@ -50,8 +56,10 @@ from repro.core import allpairs, packing, theory
 from repro.core.cabin import (CabinParams, sketch_dense_jit,
                               sketch_sparse_jit)
 from repro.core.packing import pad_rows_pow2, pow2_bucket
-from repro.index.bands import BandedLayout, TieredLayout, merge_topk_parts
+from repro.index import partition
+from repro.index.bands import BandedLayout
 from repro.index.migrate import Migration, RawArchive
+from repro.index.partition import PartitionSet
 from repro.index.store import SketchSpec, SketchStore
 
 _METRICS = ("cham", "hamming")
@@ -136,7 +144,9 @@ class QueryEngine:
         self._subs: list = []
         self.store = SketchStore(params.sketch_dim, spec=self.spec)
         self._attach_relay(self.store)
-        self._tiered: TieredLayout | None = None
+        self._n_shards = 1
+        self._devices: list | None = None
+        self._tiered: PartitionSet | None = None
         self._cache: OrderedDict[tuple, tuple] = OrderedDict()
         self._cache_entries = cache_entries
         self.cache_hits = 0
@@ -167,7 +177,7 @@ class QueryEngine:
         reg.gauge_fn("engine_lru_entries",
                      lambda: float(len(self._cache)))
         reg.gauge_fn("engine_tier_base_rows",
-                     lambda: float(self._tiered.base.n_alive
+                     lambda: float(self._tiered.base_alive
                                    if self._tiered else 0))
         reg.gauge_fn("engine_tier_delta_rows",
                      lambda: float(self._tiered.delta_n
@@ -175,6 +185,8 @@ class QueryEngine:
         reg.gauge_fn("engine_tier_merges",
                      lambda: float(self._tiered.n_merges
                                    if self._tiered else 0))
+        reg.gauge_fn("engine_shards",
+                     lambda: float(self._n_shards))
         reg.gauge_fn("engine_compile_cache_entries",
                      lambda: float(compile_cache_entries()))
         reg.gauge_fn("engine_sketch_dim", lambda: float(self.d))
@@ -269,11 +281,12 @@ class QueryEngine:
             "spec_version": self.spec.version,
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
-            "n_bands": t.base.n_bands if t else None,
-            "base_rows": t.base.n if t else None,
-            "base_alive": t.base.n_alive if t else None,
+            "n_bands": t.n_bands if t else None,
+            "base_rows": t.base_rows if t else None,
+            "base_alive": t.base_alive if t else None,
             "delta_rows": t.delta_n if t else None,
             "tier_merges": t.n_merges if t else None,
+            "n_shards": self._n_shards,
         }
         if self._mig is not None:
             m = self._mig
@@ -622,15 +635,17 @@ class QueryEngine:
 
     def topk_packed(self, sk, k: int, n_valid: int | None = None
                     ) -> tuple[np.ndarray, np.ndarray]:
-        """Served through the tiered layout (TieredLayout.topk): the base
-        tier's progressive band expansion visits bands nearest-first and
-        stops at the exactness certificate, the delta tier of fresh adds is
-        scanned brute-force, and the two merge by (value, id) — so a query
-        touches O(answer neighbourhood + delta) rows, not O(N), while
-        returning bit-identical results to topk_rows over the alive
-        membership.  The LRU is consulted on the query-sketch bytes BEFORE
-        the layout or any device gather is touched: a cache hit costs O(1)
-        host work regardless of store size."""
+        """Served through the partition layer (PartitionSet.topk): each
+        shard's base partition runs a progressive band expansion that
+        visits bands nearest-first and stops at the exactness certificate
+        (seeded with the cross-partition running k-th bound), the delta
+        partitions of fresh adds are scanned brute-force, and everything
+        merges by (value, id) — so a query touches O(answer neighbourhood
+        + delta) rows, not O(N), while returning bit-identical results to
+        topk_rows over the alive membership at every shard count.  The LRU
+        is consulted on the query-sketch bytes BEFORE the layout or any
+        device gather is touched: a cache hit costs O(1) host work
+        regardless of store size."""
         if k < 0:
             raise ValueError(f"topk: k must be >= 0, got {k}")
         if self._mig is not None:
@@ -723,20 +738,13 @@ class QueryEngine:
         if len(self.store):
             layout = self._layout()
             q_weights = packing.np_popcount_rows(q_host)
-            # tier memberships partition the alive set: per-tier hits union
-            # to exactly the batch engine's answer on the full membership
-            for sel, n_sel, sel_ids in layout.radius_tiers(q_weights, r):
-                pairs = allpairs.threshold_pairs(
-                    pad_rows_pow2(sk), sel, d=self.d, threshold=r,
-                    metric=self.metric, block=min(self.block, 256),
-                    mode=self.mode, n_valid=q, m_valid=n_sel)
-                # one sort/group pass instead of a pairs scan per query
-                by_q = pairs[np.argsort(pairs[:, 0], kind="stable")]
-                splits = np.searchsorted(by_q[:, 0], np.arange(q + 1))
-                for qi in range(q):
-                    seg = sel_ids[by_q[splits[qi]: splits[qi + 1], 1]]
-                    if seg.size:
-                        hits[qi].append(seg)
+            # partition memberships partition the alive set: per-partition
+            # hits union to exactly the batch engine's answer on the full
+            # membership (partition.radius_hits — the one collection pass)
+            partition.radius_hits(
+                layout, pad_rows_pow2(sk), q_weights, q, r,
+                metric=self.metric, block=min(self.block, 256),
+                mode=self.mode, hits=hits)
         out = [np.sort(np.concatenate(h)) if h else np.zeros(0, np.int64)
                for h in hits]
         self._remember(key, out)
@@ -758,13 +766,14 @@ class QueryEngine:
     def _topk_migrating(self, queries, k: int
                         ) -> tuple[np.ndarray, np.ndarray]:
         """topk across the migration's live tiers (old-spec remainder,
-        new-spec migrated rows, new-spec fresh mutations).  Tier
-        memberships partition the alive ids, each per-tier answer is exact
-        over its partition, and `merge_topk_parts` keeps the global
-        (value, id)-lex order — so the result equals merging per-store
-        reference answers, each under its own spec.  The LRU is bypassed:
-        mid-migration versions span three stores and the window is
-        transient."""
+        new-spec migrated rows, new-spec fresh mutations) — each tier a
+        whole PartitionSet, sharded or not, under its own spec.  Tier
+        memberships partition the alive ids and the cross-set merge is
+        partition.topk_across_tiers (the same (value, id)-lex rule, with
+        the running k-th bound threaded across sets) — so the result
+        equals merging per-store reference answers, each under its own
+        spec.  The LRU is bypassed: mid-migration versions span three
+        stores and the window is transient."""
         tiers = self._mig.serving_tiers()
         kk = min(k, len(self))
         if not tiers or kk == 0:
@@ -774,14 +783,14 @@ class QueryEngine:
         q = next(iter(sketched.values()))[1]
         if q == 0:
             return (np.zeros((0, 0), np.int64), np.zeros((0, 0), np.float32))
-        parts = []
+        staged = []
         for layout, spec in tiers:
             sk, _ = sketched[spec.version]
             q_host = np.asarray(sk[:q])
-            parts.append(layout.topk(
-                pad_rows_pow2(sk), packing.np_popcount_rows(q_host), kk,
-                q_valid=q, block=self.block, mode=self.mode))
-        return merge_topk_parts(kk, parts)
+            staged.append((layout, pad_rows_pow2(sk),
+                           packing.np_popcount_rows(q_host)))
+        return partition.topk_across_tiers(kk, staged, q_valid=q,
+                                           block=self.block, mode=self.mode)
 
     def _radius_migrating(self, queries, r: float) -> list[np.ndarray]:
         """radius across the migration's live tiers — per-tier hits union
@@ -801,18 +810,10 @@ class QueryEngine:
         for layout, spec in tiers:
             sk, _ = sketched[spec.version]
             q_host = np.asarray(sk[:q])
-            q_weights = packing.np_popcount_rows(q_host)
-            for sel, n_sel, sel_ids in layout.radius_tiers(q_weights, r):
-                pairs = allpairs.threshold_pairs(
-                    pad_rows_pow2(sk), sel, d=layout.d, threshold=r,
-                    metric=self.metric, block=min(self.block, 256),
-                    mode=self.mode, n_valid=q, m_valid=n_sel)
-                by_q = pairs[np.argsort(pairs[:, 0], kind="stable")]
-                splits = np.searchsorted(by_q[:, 0], np.arange(q + 1))
-                for qi in range(q):
-                    seg = sel_ids[by_q[splits[qi]: splits[qi + 1], 1]]
-                    if seg.size:
-                        hits[qi].append(seg)
+            partition.radius_hits(
+                layout, pad_rows_pow2(sk), packing.np_popcount_rows(q_host),
+                q, r, metric=self.metric, block=min(self.block, 256),
+                mode=self.mode, hits=hits)
         return [np.sort(np.concatenate(h)) if h else np.zeros(0, np.int64)
                 for h in hits]
 
@@ -902,26 +903,37 @@ class QueryEngine:
 
         return ClusterIndex(self, k, **kwargs)
 
-    def sync_layout(self) -> TieredLayout:
-        """Sync the serving layout to the store's current version and
-        return it — the maintenance the next query would otherwise pay
-        inline.  Validity is a version RANGE, not version equality: within
-        a slot epoch the sync absorbs adds into the delta tier and removes
-        into the alive masks in O(delta); only compaction (epoch bump) or
-        the merge policy pays a rebuild.  Calling this after an ingest
-        burst keeps tail latency flat; queries call it implicitly."""
+    def _new_layout(self, store: SketchStore, role: str = "serve"
+                    ) -> PartitionSet:
+        """Build a PartitionSet over `store` under this engine's serving
+        config (band rows, merge policy, registry) AND its shard topology —
+        the one layout factory every serving structure goes through, so a
+        sharded engine's migration tiers are sharded too."""
+        return PartitionSet(store, self.metric, band_rows=self.band_rows,
+                            merge_ratio=self.merge_ratio, registry=self.obs,
+                            n_shards=self._n_shards, devices=self._devices,
+                            role=role)
+
+    def sync_layout(self) -> PartitionSet:
+        """Sync the serving layout (a PartitionSet — one (base, delta)
+        group per shard) to the store's current version and return it —
+        the maintenance the next query would otherwise pay inline.
+        Validity is a version RANGE, not version equality: within a slot
+        epoch the sync absorbs adds into the per-shard delta partitions
+        and removes into the alive masks in O(delta); only compaction
+        (epoch bump) or the per-shard merge policy pays a rebuild.
+        Calling this after an ingest burst keeps tail latency flat;
+        queries call it implicitly."""
         if self._tiered is None:
-            self._tiered = TieredLayout(self.store, self.metric,
-                                        band_rows=self.band_rows,
-                                        merge_ratio=self.merge_ratio,
-                                        registry=self.obs)
+            self._tiered = self._new_layout(self.store)
         return self._tiered.sync(self.store)
 
     _layout = sync_layout  # internal alias used by the query paths
 
     def _banded_layout(self) -> BandedLayout:
-        """The synced layout's BASE tier (introspection + tests; serving
-        goes through `_layout`, which also covers the delta tier)."""
+        """The synced layout's BASE partition (single-shard introspection +
+        tests; serving goes through `_layout`, which also covers the delta
+        partitions and all shards)."""
         return self._layout().base
 
     # -- persistence --------------------------------------------------------
@@ -945,7 +957,11 @@ class QueryEngine:
         from repro.checkpoint.checkpointer import Checkpointer
 
         ckpt = Checkpointer(directory, keep=keep, async_save=False)
-        tree: dict = {"store": self.store.state_tree()}
+        # one snapshot subtree per backing store (partition.snapshot_subtrees
+        # — layouts are derived state; a restored engine, sharded or not,
+        # rebuilds them from the stores alone)
+        tree = partition.snapshot_subtrees(self.store, raw=self.raw,
+                                           migration=self._mig)
         meta = {
             "format": "repro.index.v2",
             "metric": self.metric,
@@ -953,11 +969,7 @@ class QueryEngine:
             "store_meta": self.store.state_meta(),
             "keep_raw": self.raw is not None,
         }
-        if self.raw is not None:
-            tree["raw"] = self.raw.state_tree()
         if self._mig is not None:
-            tree["mig_dst"] = self._mig.dst.state_tree()
-            tree["mig_fresh"] = self._mig.fresh.state_tree()
             meta["migration"] = self._mig.meta()
         ckpt.save(step, tree, extra_meta=meta, block=True)
 
@@ -1036,16 +1048,43 @@ class QueryEngine:
 
     # -- placement ----------------------------------------------------------
 
-    def shard(self, mesh=None) -> None:
-        """Opt-in: place the store's row buffers across the data-parallel
-        axes of `mesh` (default: the ambient mesh).  Query math is
-        unchanged — the tiled reductions run under GSPMD with the rows
-        split across devices; integer pair statistics keep results
-        bit-identical to the unsharded engine."""
+    def shard(self, mesh=None, *, n_shards: int | None = None) -> None:
+        """Opt-in scale-out: re-home the serving layout as one partition
+        group per device of `mesh` (default: the ambient mesh), or as
+        `n_shards` logical shards on the default device (no mesh needed —
+        what single-device tests and CI exercise).  Rows route by
+        ``id % n_shards`` — deterministic and stable across compaction —
+        each shard keeps its own base+delta partitions with its matrices
+        committed to its device, per-shard band walks share the global
+        running k-th bound, and answers merge by (value, id) cross-shard.
+        Every query stays bit-identical to the unsharded engine on the
+        same history (partition.py's exactness argument); ClusterIndex,
+        migrations, and the serving front door work unchanged.  Calling
+        shard() again (or with a different mesh) re-shards; in-flight
+        migrations pick the new topology up on their next layout build."""
         from repro.distributed import sharding as shd
 
-        mesh = mesh if mesh is not None else shd.current_mesh()
-        if mesh is None:
-            raise ValueError("shard() needs a mesh (none active)")
-        self.store.place(
-            lambda shape: shd.batch_sharding_for(mesh, shape))
+        if n_shards is not None:
+            if mesh is not None:
+                raise ValueError("shard(): pass a mesh OR n_shards")
+            if int(n_shards) < 1:
+                raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+            devices = None
+            n = int(n_shards)
+        else:
+            mesh = mesh if mesh is not None else shd.current_mesh()
+            if mesh is None:
+                raise ValueError("shard() needs a mesh (none active)")
+            devices = shd.mesh_devices(mesh)
+            n = len(devices)
+        self._n_shards = n
+        self._devices = devices
+        # layouts are derived: drop them (serving and migration tiers) and
+        # let the next query rebuild under the new topology.  Cached
+        # RESULTS stay valid — answers are placement-independent — but the
+        # cache is cleared anyway so a re-shard behaves like the fresh
+        # engine it is equivalent to.
+        self._tiered = None
+        if self._mig is not None:
+            self._mig.invalidate_serving_tiers()
+        self._cache.clear()

@@ -36,8 +36,11 @@ halves (DESIGN.md section 10):
 
 Mid-migration serving stays EXACT: the three stores partition the alive
 membership, each serves its own exact (value, id)-lex k-best through its
-own TieredLayout (the query is sketched once per spec), and
-`bands.merge_topk_parts` — the same rule as the base/delta tier merge —
+own PartitionSet (repro.index.partition — built by `engine._new_layout`,
+so a SHARDED engine's migration tiers are sharded with the same topology;
+the query is sketched once per spec), and `partition.topk_across_tiers` —
+the same (value, id)-lex rule as the base/delta and cross-shard merges,
+with the global running k-th bound threaded across the spec tiers —
 combines them.  Radius queries union per-store threshold scans the same
 way.
 """
@@ -50,7 +53,6 @@ import numpy as np
 
 from repro import obs
 from repro.core.packing import pow2_bucket
-from repro.index.bands import TieredLayout
 from repro.index.store import SketchSpec, SketchStore
 from repro.runtime import faultinject
 
@@ -224,8 +226,8 @@ class Migration:
         self.rows_migrated = 0
         self.n_batches = 0
         self._journal_step = self._next_journal_step()
-        self._dst_tiered: TieredLayout | None = None
-        self._fresh_tiered: TieredLayout | None = None
+        self._dst_tiered = None
+        self._fresh_tiered = None
         self._wire_obs()
         _log.info(
             "migration started: spec v%d -> v%d (d %d -> %d), %d rows to "
@@ -390,31 +392,35 @@ class Migration:
 
     # -- cross-version serving helpers (used by QueryEngine) ----------------
 
-    def serving_tiers(self) -> list[tuple[TieredLayout, SketchSpec]]:
+    def serving_tiers(self) -> list:
         """(layout, spec) per non-empty store — the partition a
         mid-migration query serves over.  src serves through the engine's
-        own layout (old spec); dst and fresh through layouts owned here."""
+        own layout (old spec); dst and fresh through PartitionSets owned
+        here, built by the engine's one layout factory (`_new_layout`) so
+        they inherit its band rows, merge policy, AND shard topology — a
+        sharded engine stays sharded, and exact, mid-migration."""
         tiers = []
         if len(self.src):
             tiers.append((self.engine._layout(), self.old_spec))
         if len(self.dst):
             if self._dst_tiered is None:
-                self._dst_tiered = TieredLayout(
-                    self.dst, self.engine.metric,
-                    band_rows=self.engine.band_rows,
-                    merge_ratio=self.engine.merge_ratio,
-                    registry=self.engine.obs)
+                self._dst_tiered = self.engine._new_layout(
+                    self.dst, role="migrate-dst")
             tiers.append((self._dst_tiered.sync(self.dst), self.new_spec))
         if len(self.fresh):
             if self._fresh_tiered is None:
-                self._fresh_tiered = TieredLayout(
-                    self.fresh, self.engine.metric,
-                    band_rows=self.engine.band_rows,
-                    merge_ratio=self.engine.merge_ratio,
-                    registry=self.engine.obs)
+                self._fresh_tiered = self.engine._new_layout(
+                    self.fresh, role="migrate-fresh")
             tiers.append((self._fresh_tiered.sync(self.fresh),
                           self.new_spec))
         return tiers
+
+    def invalidate_serving_tiers(self) -> None:
+        """Drop the dst/fresh layouts (derived state) so the next query
+        rebuilds them — called by `QueryEngine.shard` on a topology
+        change."""
+        self._dst_tiered = None
+        self._fresh_tiered = None
 
     def store_of(self, id_: int) -> SketchStore:
         """Which store currently serves `id_` (KeyError if none)."""

@@ -258,6 +258,19 @@ class SketchStore:
         """Slots of alive rows, in slot (= insertion = id) order."""
         return np.flatnonzero(self._alive[: self._size])
 
+    def route_slots(self, slots: np.ndarray, n_shards: int
+                    ) -> list[np.ndarray]:
+        """Split `slots` by shard assignment — THE row-routing rule is
+        ``id % n_shards``: deterministic, history-independent (the same
+        membership shards identically no matter how it was built), and
+        stable across compaction (ids survive, slots don't).  Within each
+        shard the incoming ascending-id order is preserved, which is what
+        keeps sharded and unsharded layout builds bit-comparable."""
+        if int(n_shards) == 1:
+            return [slots]
+        shard = self._ids[slots] % int(n_shards)
+        return [slots[shard == s] for s in range(int(n_shards))]
+
     def ids(self) -> np.ndarray:
         """External ids of alive rows, ascending."""
         return self._ids[self.alive_slots()]

@@ -31,6 +31,11 @@ traffic (DESIGN.md section 12):
     request is answered exactly once (no loss, no double answers) even
     when the chaos harness kills a flush mid-flight.
 
+The front door is layout-agnostic: a `shard(mesh)`-ed engine (DESIGN.md
+section 13) serves the same bits through the same `topk_packed` /
+`radius_packed` entry points, so coalescing, admission, deadlines, and
+the partial-answer contract all work unchanged over a sharded engine.
+
 Threading model: callers admit from any thread; ONE dispatcher thread
 owns the engine's query path (the engine itself stays single-threaded —
 the front door is the serialization point).  Engine mutations

@@ -62,6 +62,7 @@ def test_registry_covers_every_durability_path():
         "migrate.batch.committed", "migrate.fold", "migrate.published",
     }
     assert "store.compact" in pts
+    assert "shard.rebalance" in pts
 
 
 def test_arm_fires_once_then_disarms():
@@ -298,6 +299,43 @@ def test_engine_crash_matrix_no_acked_row_lost(tmp_path, point, metric):
     assert np.array_equal(a_d, b_d)
     r = 30.0 if metric == "hamming" else 60.0
     for a, b in zip(res.radius(q, r), ref.radius(q, r)):
+        assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_crash_matrix_shard_rebalance(tmp_path, metric):
+    """The sharded-layout row of the crash matrix: kill the engine inside
+    its partition rebuild (shard.rebalance fires before any group is
+    swapped), recover from the journal directory only, and require answers
+    bit-identical to the never-crashed unsharded reference — the layout is
+    derived state, so a rebalance crash can never lose an acked row."""
+    x = _rows(26, seed=4)
+    journal = str(tmp_path / "journal")
+    eng = _build_engine(metric, journal, x)
+    q = _rows(4, seed=77)
+    want_ids, want_d = eng.topk(q, 5)
+
+    eng.shard(n_shards=4)
+    faultinject.record_hits(True)
+    faultinject.clear_hits()
+    try:
+        with faultinject.armed("shard.rebalance"):
+            with pytest.raises(faultinject.InjectedCrash) as ei:
+                eng.topk(q, 5)  # first sharded query triggers the rebuild
+        assert ei.value.point == "shard.rebalance"
+    finally:
+        faultinject.record_hits(False)
+        faultinject.clear_hits()
+
+    # recover FROM DISK ONLY — the in-memory engine is the dead process
+    res = QueryEngine.restore(journal)
+    a_ids, a_d = res.topk(q, 5)
+    assert np.array_equal(a_ids, want_ids) and np.array_equal(a_d, want_d)
+    # the crashed process itself can also just retry: nothing was mutated
+    b_ids, b_d = eng.topk(q, 5)
+    assert np.array_equal(b_ids, want_ids) and np.array_equal(b_d, want_d)
+    r = 30.0 if metric == "hamming" else 60.0
+    for a, b in zip(eng.radius(q, r), res.radius(q, r)):
         assert np.array_equal(a, b)
 
 
