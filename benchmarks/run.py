@@ -26,7 +26,7 @@ import traceback
 _TRAJECTORY_SUITES = ("kernel_packed", "kernel_cham", "kernel_sketch",
                       "kernel_sparse_sketch", "dedup", "dedup_streaming",
                       "index", "index_mixed", "index_migrate",
-                      "index_sharded", "cluster", "serve")
+                      "index_sharded", "index_bulk", "cluster", "serve")
 
 # tiny-size overrides for --smoke: exercise every trajectory suite's wiring
 # (sketch -> kernels -> engine -> index) in seconds on a bare CPU runner
@@ -43,6 +43,7 @@ _SMOKE_KWARGS = {
                         churn=16, speedup_bar=None),
     "index_migrate": dict(n=512, d_new=256, batch_rows=128, q_batch=4),
     "index_sharded": dict(n=1024, n_queries=8, n_shards=4),
+    "index_bulk": dict(n_docs=256, n_shards=4, window=32, mean_len=48),
     "cluster": dict(n_small=256, n_large=1024, k=4, n_iter=2,
                     oracle_iters=1, batch_rows=256, speedup_bar=None),
     "serve": dict(n=2048, duration_s=0.4, levels=(1, 4), max_requests=400,
@@ -163,6 +164,7 @@ def main() -> None:
         ("index_mixed", bench_index.bench_mixed_traffic),
         ("index_migrate", bench_index.bench_migration),
         ("index_sharded", bench_index.bench_sharded),
+        ("index_bulk", bench_index.bench_bulk_ingest),
         ("cluster", bench_cluster.bench_cluster),
         ("serve", bench_serve.bench_serve),
     ]

@@ -64,6 +64,7 @@ from repro import obs
 from repro.core.kmode import kmode_packed
 from repro.core.packing import pad_rows_pow2, padded_take
 from repro.index.engine import QueryEngine
+from repro.index.mergeable import MergeIncompatible
 
 
 class ClusterIndex:
@@ -267,6 +268,26 @@ class ClusterIndex:
             self._lab = np.concatenate([self._lab, lab])
             self._counts += self._bincount(lab)
             self._weights += self._bincount(lab, store.weights_at(slots))
+        elif event == "merge":
+            # another store's alive rows just landed (SketchStore.merge);
+            # their ids may interleave with the sidecar's, so labels insert
+            # at their sorted positions instead of concatenating.  Counts
+            # and weights are sums — the Mergeable discipline.  These
+            # incremental labels are arrival-moment assignments like any
+            # add's; ClusterIndex.merge refits afterwards to re-seed the
+            # centres from the union membership.
+            if len(ids) == 0:
+                return
+            if self._centers is None:
+                self.refit()  # bootstrap covers the merged rows too
+                return
+            sk = padded_take(store.sk_buf, slots)
+            lab = self._assign_packed(sk, n_valid=len(ids))
+            pos = np.searchsorted(self._lab_ids, ids)
+            self._lab_ids = np.insert(self._lab_ids, pos, ids)
+            self._lab = np.insert(self._lab, pos, lab)
+            self._counts += self._bincount(lab)
+            self._weights += self._bincount(lab, store.weights_at(slots))
         elif event == "remove":
             pos = np.searchsorted(self._lab_ids, ids)
             lab = self._lab[pos]
@@ -420,6 +441,35 @@ class ClusterIndex:
 
     def compact(self) -> None:
         self.engine.compact()
+
+    # -- merge (the Mergeable contract, repro.index.mergeable) --------------
+
+    def merge(self, other: "ClusterIndex") -> "ClusterIndex":
+        """Absorb another ClusterIndex (and its engine) and return self.
+
+        The engines merge first — id-disjoint membership union, validated
+        before anything mutates — which streams the absorbed rows through
+        the "merge" event (counts/weights arrive as sums, labels as
+        arrival-moment assignments).  Then the centres are re-seeded from
+        the UNION membership via the existing `refit` path: refit is
+        deterministic in the membership, so a merged index ends bit-equal
+        to a sequentially built index of the same rows after its own
+        refit(), regardless of shard split or merge order.  `other` is
+        detached from its engine and must be discarded."""
+        if other is self:
+            raise MergeIncompatible(
+                "ClusterIndex.merge: cannot merge an index with itself")
+        if (other.k, other.seed, other.n_iter) != (self.k, self.seed,
+                                                   self.n_iter):
+            raise MergeIncompatible(
+                "ClusterIndex.merge: clustering configs differ "
+                f"(k/seed/n_iter {self.k}/{self.seed}/{self.n_iter} vs "
+                f"{other.k}/{other.seed}/{other.n_iter}) — refits of the "
+                "merged membership would not be comparable")
+        other.detach()
+        self.engine.merge(other.engine)
+        self.refit()
+        return self
 
     # -- persistence --------------------------------------------------------
 

@@ -20,6 +20,12 @@ Public API:
     Migration          — in-flight lazy re-sketch state machine (DESIGN.md
                          section 10); RawArchive is its raw-row store
     ingest_documents   — data.pipeline document stream -> engine
+    bulk_ingest        — merge-tree parallel bulk load: N workers sketch
+                         shards in parallel, log-depth combine
+                         (index/merge_tree.py, DESIGN.md section 14)
+    Mergeable          — the shared combine contract (mergeable.py):
+                         associative, id-disjoint, spec-checked merge();
+                         MergeIncompatible is its refusal error
 
 Results are bit-identical to the batch engine on the same membership — at
 every shard count; see tests/test_index.py and tests/test_partition.py for
@@ -30,6 +36,10 @@ for the drift-migration and crash-safety ones.
 from repro.index.bands import BandedLayout  # noqa: F401
 from repro.index.engine import QueryEngine  # noqa: F401
 from repro.index.ingest import ingest_documents  # noqa: F401
+from repro.index.merge_tree import bulk_ingest, merge_tree  # noqa: F401
+from repro.index.mergeable import (Mergeable,  # noqa: F401
+                                   MergeIncompatible, check_id_disjoint,
+                                   check_spec_compatible)
 from repro.index.migrate import Migration, RawArchive  # noqa: F401
 from repro.index.partition import (Partition, PartitionSet,  # noqa: F401
                                    TieredLayout, merge_topk_parts)

@@ -58,6 +58,7 @@ from repro.core.cabin import (CabinParams, sketch_dense_jit,
 from repro.core.packing import pad_rows_pow2, pow2_bucket
 from repro.index import partition
 from repro.index.bands import BandedLayout
+from repro.index.mergeable import MergeIncompatible, check_spec_compatible
 from repro.index.migrate import Migration, RawArchive
 from repro.index.partition import PartitionSet
 from repro.index.store import SketchSpec, SketchStore
@@ -404,15 +405,19 @@ class QueryEngine:
                 np.count_nonzero(np.asarray(values), axis=1))
         return ids
 
-    def add_packed(self, packed, raw=None) -> np.ndarray:
+    def add_packed(self, packed, raw=None,
+                   spec: SketchSpec | None = None) -> np.ndarray:
         """Ingest pre-sketched packed rows (k, w).  The rows MUST come from
         this engine's CURRENT CabinParams — used by streaming ingest after
-        an in-window dedup pass already paid for the sketches.  `raw` is
-        the rows' (indices, values) COO pair; pass it to keep the rows
-        re-sketchable (without it they cannot survive a `migrate()`).
-        While a migration is in flight the packed rows are spec-ambiguous:
-        with `raw` the engine re-sketches them under the live spec, without
-        it the call raises."""
+        an in-window dedup pass already paid for the sketches.  `spec`
+        (optional) names the SketchSpec the rows were sketched under; a
+        mismatch raises MergeIncompatible naming both specs, which is the
+        only way to catch wrong hash seeds — they are undetectable from
+        the bits alone.  `raw` is the rows' (indices, values) COO pair;
+        pass it to keep the rows re-sketchable (without it they cannot
+        survive a `migrate()`).  While a migration is in flight the packed
+        rows are spec-ambiguous: with `raw` the engine re-sketches them
+        under the live spec, without it the call raises."""
         self._drive()
         if self._mig is not None:
             if raw is None:
@@ -422,8 +427,8 @@ class QueryEngine:
                     "rows must land in the new-spec tier")
             return self.add_sparse(*raw)
         packed = jnp.asarray(packed)
-        ids = self.store.add(pad_rows_pow2(packed),
-                             n_valid=packed.shape[0])
+        ids = self.store.add_packed(pad_rows_pow2(packed), spec,
+                                    n_valid=packed.shape[0])
         if raw is not None and self.raw is not None and len(ids):
             self.raw.put(ids, *raw)
         return ids
@@ -455,6 +460,67 @@ class QueryEngine:
         if self._mig is not None:
             self._mig.dst.compact()
             self._mig.fresh.compact()
+
+    # -- merge (the Mergeable contract, repro.index.mergeable) --------------
+
+    def merge(self, other: "QueryEngine") -> "QueryEngine":
+        """Absorb `other`'s membership into this engine and return self —
+        the engine face of the Mergeable contract (DESIGN.md section 14)
+        and the combine step of `index.merge_tree.bulk_ingest`.
+
+        Requirements, all validated before anything mutates: same metric,
+        same sketch spec (cross-spec merge fails loudly through the same
+        compatibility check the spec-migration machinery uses — migrate
+        one engine to the other's spec first), matching keep_raw, disjoint
+        external ids, and NO migration in flight on either side (a
+        mid-migration membership spans two sketch spaces).
+
+        What merges: the store (device buffers, through `SketchStore.merge`
+        — the ``merge.combine`` crash point fires there, before any
+        mutation), the raw archive, the density-drift window, the serving
+        layout (merged rows absorbed as shard-routed delta when the id
+        ranges don't interleave), and the obs registries (counters sum,
+        histograms union — `MetricsRegistry.merge`).  The LRU clears: its
+        keys version a membership that just changed.  Store subscribers
+        see ONE "merge" event carrying the absorbed alive rows.  `other`
+        is left readable but must be discarded — its ids are absorbed, so
+        a re-merge raises the disjointness check."""
+        if other is self:
+            raise MergeIncompatible(
+                "QueryEngine.merge: cannot merge an engine with itself")
+        if self._mig is not None or other._mig is not None:
+            raise RuntimeError(
+                "QueryEngine.merge: a spec migration is in flight; drive "
+                "it to completion (migrate_all()) on both engines before "
+                "merging — a mid-migration membership spans two sketch "
+                "spaces")
+        if other.metric != self.metric:
+            raise MergeIncompatible(
+                f"QueryEngine.merge: metric mismatch ({self.metric!r} vs "
+                f"{other.metric!r}) — cached results and layouts would "
+                "not be comparable")
+        check_spec_compatible(other.spec, self.spec,
+                              what="QueryEngine.merge")
+        if (self.raw is None) != (other.raw is None):
+            raise MergeIncompatible(
+                "QueryEngine.merge: keep_raw mismatch — merging a raw-less "
+                "engine would leave part of the membership un-migratable")
+        with obs.span("engine.merge", rows=len(other)):
+            self.store.merge(other.store)
+            if self.raw is not None:
+                self.raw.merge(other.raw)
+            self._nnz_window.extend(other._nnz_window)
+            self.cache_hits += other.cache_hits
+            self.cache_misses += other.cache_misses
+            # counters sum, histograms union; callback gauges freeze to
+            # their merge-time values — re-register ours so the live
+            # structural windows stay live
+            self.obs.merge(other.obs)
+            self._register_obs_gauges()
+            if self._tiered is not None:
+                self._tiered.merge(other._tiered)
+            self._cache.clear()
+        return self
 
     # -- spec migration ------------------------------------------------------
 

@@ -7,6 +7,15 @@ optionally near-dedup'd WITHIN the window against the engine's own sketch
 space, and appended.  Because the window's sketches are computed once and
 reused for both the dedup pass and the store append (`add_packed`), turning
 dedup on costs only the candidate scan, not a second sketching pass.
+
+This loop is one SEQUENTIAL writer — but no longer the only build story:
+a document's sketch is a pure function of (document, spec) and everything
+above the sketches is Mergeable (repro.index.mergeable), so
+`index.merge_tree.bulk_ingest` runs N copies of this exact loop over
+document shards in parallel and tree-merges the private engines into one,
+bit-identical to the sequential build (dedup off; see merge_tree.py for
+the dedup-window caveat).  Use this module directly for a trickle, the
+merge tree for "load the corpus".
 """
 
 from __future__ import annotations

@@ -1,0 +1,114 @@
+"""The Mergeable contract: one combine discipline for every index layer.
+
+BinSketch sketches are OR-mergeable by construction — a sketch of A ∪ B is
+the bitwise OR of the sketches of A and B — and the streaming literature
+("Binary Coding in Stream", PAPERS.md) treats that mergeability as THE
+property that turns a sketch into a distributed-systems primitive: build
+partial summaries anywhere, combine them in any tree shape, serve the
+result as if it had been built sequentially.  Before this module each
+layer above the sketch grew its own private notion of "combine two
+states" (obs.MetricsRegistry.merge) or none at all; this module is the
+shared contract they all implement (DESIGN.md section 14):
+
+  * `Mergeable` — the protocol: ``merge(other) -> self`` absorbs `other`'s
+    state into `self` and returns `self`.  `other` is never mutated, but
+    it must be DISCARDED after a successful merge: re-merging it raises
+    the id-disjointness check (double-absorption is the classic
+    merge-tree corruption, and ids are how we make it impossible).
+  * associativity — ``a.merge(b).merge(c)`` equals ``a.merge(b.merge(c))``
+    bit-for-bit, which is what lets `index.merge_tree.bulk_ingest` reduce
+    N worker shards in log depth and any order.
+  * id-disjointness — merge inputs must cover disjoint external-id sets
+    (`check_id_disjoint`).  Disjoint ids are what make the merged slot
+    order well-defined (slot order == id order survives the merge) and
+    what make a merge idempotence bug loud instead of silent.
+  * spec compatibility — packed bits are meaningless across sketch specs
+    (different dims or hash seeds), and a seed mismatch is UNDETECTABLE
+    from the bits alone: same shapes, silently wrong distances.  Every
+    merge therefore starts with `check_spec_compatible`, the same guard
+    the spec-migration machinery (index/migrate.py) runs on its own
+    tiers — cross-spec merge fails loudly, naming both specs, with the
+    fix (migrate one side) in the message.
+
+Implementations, bottom-up: `SketchStore.merge` (device buffer combine),
+`RawArchive.merge` (raw-row locator union), `PartitionSet.merge` (derived
+layout re-sync; merged rows absorbed as shard-routed delta),
+`QueryEngine.merge` (store + archive + drift window + obs registries),
+`ClusterIndex.merge` (engines merge, centres re-seed from the union via
+refit), `obs.MetricsRegistry.merge` (the pre-existing exemplar).
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+
+class MergeIncompatible(ValueError):
+    """Two states cannot be merged: spec mismatch, overlapping ids, or
+    differing serving configuration.  A ValueError because the caller
+    passed an unusable operand — nothing about either input was mutated."""
+
+
+def _fmt_spec(spec) -> str:
+    """One-line spec identity for error messages: version + dims + seeds
+    (SketchSpec.meta() when available, repr otherwise — None included)."""
+    meta = getattr(spec, "meta", None)
+    if callable(meta):
+        m = meta()
+        return (f"spec(v{m['version']}, n_dims={m['n_dims']}, "
+                f"d={m['sketch_dim']}, psi_seed={m['psi_seed']}, "
+                f"pi_seed={m['pi_seed']})")
+    return repr(spec)
+
+
+def check_spec_compatible(a, b, *, what: str, hint: str | None = None) -> None:
+    """Raise MergeIncompatible unless `a` and `b` are the SAME sketch-space
+    identity (SketchSpec equality: version AND CabinParams — dims and both
+    hash seeds).  `what` names the operation for the message; `hint` adds
+    a remedy line.  None specs are compatible only with None (a spec-less
+    store merging into a spec'd one would launder unknown bits into a
+    known space)."""
+    if a == b:
+        return
+    msg = (f"{what}: incompatible sketch specs — {_fmt_spec(a)} vs "
+           f"{_fmt_spec(b)}.  Packed rows are only comparable under one "
+           "spec; a hash-seed mismatch is undetectable from the bits "
+           "alone and would silently corrupt every distance.")
+    if hint is None and getattr(a, "params", 0) != getattr(b, "params", 1):
+        hint = ("Re-sketch one side under the other's spec "
+                "(QueryEngine.migrate) before merging")
+    if hint:
+        msg += f"  {hint}."
+    raise MergeIncompatible(msg)
+
+
+def check_id_disjoint(a_ids: np.ndarray, b_ids: np.ndarray, *,
+                      what: str) -> None:
+    """Raise MergeIncompatible if the two (ascending) external-id sets
+    overlap.  Overlap means the inputs are not independent partial builds
+    — most often one of them was already merged (the Mergeable contract
+    says discard `other` after absorbing it)."""
+    common = np.intersect1d(np.asarray(a_ids, np.int64),
+                            np.asarray(b_ids, np.int64))
+    if len(common):
+        raise MergeIncompatible(
+            f"{what}: merge inputs share {len(common)} external id(s) "
+            f"(e.g. id {int(common[0])}) — inputs must be id-disjoint "
+            "independent builds.  Re-merging an already-absorbed input is "
+            "the usual cause; discard an input after a successful merge.")
+
+
+@runtime_checkable
+class Mergeable(Protocol):
+    """Associative, id-disjoint, spec-checked combine (module docstring).
+
+    ``a.merge(b)`` absorbs `b` into `a` and returns `a`; `b` is left
+    readable but must be discarded (its ids are now absorbed — a second
+    merge raises).  Implementations validate BEFORE mutating anything, so
+    a refused (or faultinject-killed) merge leaves both inputs intact and
+    the call re-runnable."""
+
+    def merge(self, other):  # pragma: no cover - protocol signature only
+        ...

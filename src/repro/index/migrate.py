@@ -53,6 +53,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.packing import pow2_bucket
+from repro.index.mergeable import MergeIncompatible, check_spec_compatible
 from repro.index.store import SketchSpec, SketchStore
 from repro.runtime import faultinject
 
@@ -115,6 +116,29 @@ class RawArchive:
     def drop(self, ids) -> None:
         for id_ in np.atleast_1d(np.asarray(ids, np.int64)).tolist():
             self._loc.pop(id_, None)
+
+    def merge(self, other: "RawArchive") -> "RawArchive":
+        """Absorb `other`'s rows and return self (the Mergeable contract,
+        repro.index.mergeable): locators union under a block offset, the
+        blocks themselves are shared by reference — archives are
+        append-only and rows immutable, so sharing is safe and the merge
+        is O(rows) host dict work with zero copying.  Inputs must be
+        id-disjoint (validated before any mutation); discard `other`
+        after success."""
+        if other is self:
+            raise MergeIncompatible(
+                "RawArchive.merge: cannot merge an archive with itself")
+        common = self._loc.keys() & other._loc.keys()
+        if common:
+            raise MergeIncompatible(
+                f"RawArchive.merge: merge inputs share {len(common)} "
+                f"external id(s) (e.g. id {min(common)}) — inputs must be "
+                "id-disjoint independent builds")
+        base = len(self._blocks)
+        self._blocks.extend(other._blocks)
+        for id_, (b, r) in other._loc.items():
+            self._loc[id_] = (b + base, r)
+        return self
 
     def missing(self, ids) -> np.ndarray:
         """Subset of `ids` with no archived raw row — the rows a migration
@@ -263,6 +287,11 @@ class Migration:
         self.journal_keep = int(mmeta.get("journal_keep", 3))
         self.dst = dst
         self.fresh = fresh
+        # the same compatibility guard merges run (repro.index.mergeable):
+        # a journal that pairs tiers from different sketch specs would
+        # corrupt every distance the fold produces — refuse it loudly
+        check_spec_compatible(fresh.spec, dst.spec,
+                              what="Migration.resume (fresh vs dst tier)")
         self.phase = mmeta["phase"]
         self.cursor = int(mmeta["cursor"])
         self.rows_migrated = int(mmeta["rows_migrated"])
@@ -359,6 +388,11 @@ class Migration:
                   len(self.fresh), self.rows_migrated, self.n_batches)
         with self._h_fold.time(), obs.span("migrate.fold",
                                            fresh_rows=len(self.fresh)):
+            # cross-spec guard shared with SketchStore.merge: the fold is
+            # a merge of the fresh tier into dst, and it obeys the same
+            # compatibility contract (repro.index.mergeable)
+            check_spec_compatible(self.fresh.spec, self.dst.spec,
+                                  what="migration fold (fresh -> dst)")
             mat, n, ids = self.fresh.gather_alive()
             if n:
                 self.dst.add_with_ids(mat, ids, n_valid=n)

@@ -62,6 +62,7 @@ from repro.core import allpairs
 from repro.core.allpairs import KBEST_KEY_PAD, kbest_lex_merge
 from repro.core.packing import padded_take
 from repro.index.bands import BandedLayout
+from repro.index.mergeable import MergeIncompatible, check_spec_compatible
 from repro.index.store import SketchStore
 from repro.obs.registry import NULL_REGISTRY
 from repro.runtime import faultinject
@@ -398,6 +399,37 @@ class PartitionSet:
             if added or removed:
                 g.delta.refresh(store, delta_mask)
         self.version = st.version
+        return self
+
+    # -- merge (the Mergeable contract, repro.index.mergeable) --------------
+
+    def merge(self, other: "PartitionSet | None" = None) -> "PartitionSet":
+        """Absorb the backing store's just-merged rows and return self —
+        the layout half of the Mergeable contract, called by
+        `QueryEngine.merge` AFTER `SketchStore.merge` committed.
+
+        Layouts are DERIVED state, so the merge IS a sync against the
+        already-merged store: an append-path store merge arrives as
+        ordinary tail slots, re-routed by ``id % n_shards`` into each
+        shard's brute-delta partition (shard-local absorption — no base
+        rebuild, sibling shards untouched until their own fold policy
+        trips); an interleave-path merge bumped the store epoch, so the
+        set rebuilds, exactly as after a compaction.  `other` (the
+        discarded set of the absorbed store, when one exists) is only
+        VALIDATED — metric/spec compatibility — never read: its
+        partitions index a store that no longer serves.  Gauges re-point
+        at the live groups afterwards (a registry merge may have frozen
+        them to snapshot values)."""
+        if other is not None:
+            if other.metric != self.metric:
+                raise MergeIncompatible(
+                    f"PartitionSet.merge: metric mismatch "
+                    f"({self.metric!r} vs {other.metric!r})")
+            if self.spec is not None or other.spec is not None:
+                check_spec_compatible(other.spec, self.spec,
+                                      what="PartitionSet.merge")
+        self.sync(self._store)
+        self._register_gauges()
         return self
 
     # -- introspection ------------------------------------------------------

@@ -24,6 +24,13 @@ rebuild.  SketchStore is that collection, designed around two invariants
 Host mirrors (ids, alive bitmap, weights) ride along for planning work that
 is latency-bound rather than bandwidth-bound: band layout, capacity checks,
 and id translation all happen on host without touching the device buffers.
+
+Stores are MERGEABLE (repro.index.mergeable, DESIGN.md section 14): the
+collection is no longer single-writer-only.  N workers may build private
+stores in parallel and `merge` combines them — id-disjoint, spec-checked,
+and through the same jitted append graph as `add` when the inputs' id
+ranges don't interleave (the merge-tree bulk-load case), so a combine
+costs one device concat, not a recompile or a re-sketch.
 """
 
 from __future__ import annotations
@@ -39,10 +46,13 @@ from repro.core import packing
 from repro.core.cabin import CabinParams
 from repro.core.packing import pow2_bucket  # the shared bucketing rule
 from repro import obs
+from repro.index.mergeable import (MergeIncompatible, check_id_disjoint,
+                                   check_spec_compatible)
 from repro.obs.registry import NULL_REGISTRY
 from repro.runtime import faultinject
 
 _CP_COMPACT = faultinject.declare("store.compact")
+_CP_MERGE = faultinject.declare("merge.combine")
 
 
 @dataclass(frozen=True)
@@ -189,6 +199,7 @@ class SketchStore:
         self._c_added = reg.counter("store_rows_added_total")
         self._c_removed = reg.counter("store_rows_removed_total")
         self._c_compactions = reg.counter("store_compactions_total")
+        self._c_merges = reg.counter("store_merges_total")
 
     # -- introspection ------------------------------------------------------
 
@@ -294,8 +305,11 @@ class SketchStore:
         them.  Events: "add" (ids/slots of the appended rows — the slots
         are valid immediately, so the callback may gather the new sketches
         before any later append donates the buffer), "remove" (ids/slots
-        tombstoned), "compact" (empty arrays; slot identity changed — read
-        fresh state from the store).  Callbacks run synchronously inside
+        tombstoned), "merge" (ids/slots of another store's ALIVE rows just
+        absorbed by `merge` — same freshness guarantee as "add"; absorbed
+        tombstones fire no event), "compact" (empty arrays; slot identity
+        changed — read fresh state from the store).  Callbacks run
+        synchronously inside
         the mutation, in subscription order; they must not mutate the
         store re-entrantly.  Pair with `unsubscribe` when the observer is
         discarded — the store holds a strong reference."""
@@ -363,11 +377,28 @@ class SketchStore:
                 f"store's last id ({floor}); got head {ids[:4]}")
         return self._append(packed, k, ids, notify=notify)
 
+    def add_packed(self, packed, spec: SketchSpec | None,
+                   n_valid: int | None = None) -> np.ndarray:
+        """Spec-checked `add`: the caller names the SketchSpec its packed
+        rows were sketched under, and a mismatch with the store's spec
+        raises MergeIncompatible naming BOTH specs — before any device
+        work.  The check exists because a wrong `d` only fails later as an
+        opaque jax shape error, and wrong hash seeds never fail at all
+        (same shapes, silently corrupt distances).  `spec=None` asserts
+        nothing beyond the width check (the trusting legacy path)."""
+        if spec is not None:
+            check_spec_compatible(spec, self.spec,
+                                  what="SketchStore.add_packed")
+        return self.add(packed, n_valid=n_valid)
+
     def _check_batch(self, packed, n_valid) -> tuple[jnp.ndarray, int]:
         packed = jnp.asarray(packed)
         if packed.ndim != 2 or packed.shape[1] != self.w:
+            whose = "" if self.spec is None else \
+                f" (store spec: d={self.spec.d}, v{self.spec.version})"
             raise ValueError(
-                f"expected (k, {self.w}) packed rows, got {packed.shape}")
+                f"expected (k, {self.w}) packed rows, got "
+                f"{packed.shape}{whose}")
         k = packed.shape[0] if n_valid is None else int(n_valid)
         if not 0 <= k <= packed.shape[0]:
             raise ValueError(
@@ -458,6 +489,123 @@ class SketchStore:
         self._epoch += 1  # slots renumbered: layouts must rebuild, not sync
         self._bump()
         self._notify("compact", np.zeros(0, np.int64), np.zeros(0, np.int64))
+
+    # -- merge (the Mergeable contract, repro.index.mergeable) --------------
+
+    def merge(self, other: "SketchStore") -> "SketchStore":
+        """Absorb `other`'s slots (alive AND tombstoned) into this store
+        and return self — the device-level half of the Mergeable contract
+        (DESIGN.md section 14).  Inputs must share a spec and cover
+        disjoint external ids; validation runs BEFORE any mutation, so a
+        refused (or faultinject-killed — the ``merge.combine`` crash
+        point) merge leaves both stores intact and re-runnable.  `other`
+        is never mutated but must be discarded after success: its ids are
+        absorbed, and a re-merge raises the disjointness check.
+
+        Two paths, both preserving slot order == id order:
+
+          * append (other's smallest id above self's largest — every
+            merge-tree combine, where workers build disjoint ascending id
+            ranges): other's used slots ride the SAME jitted
+            `_append_rows` graph as `add` — one device concat, no
+            recompile, and NO epoch bump, so an existing PartitionSet
+            absorbs the merged rows as ordinary shard-routed delta slots.
+          * interleave (id ranges overlap without colliding): the merged
+            order is the sorted-id merge of the two slot sequences, built
+            via one concatenated gather; slot identity changes, so the
+            epoch bumps and layouts rebuild (same contract as compact).
+
+        Tombstones reconcile by import: other's dead slots stay dead here
+        and `removed_count` advances by their number, so layout syncs see
+        the mask work.  Row counters are NOT incremented (merge the obs
+        registries to carry other's counts, as `QueryEngine.merge` does);
+        `store_merges_total` counts the combines themselves."""
+        if other is self:
+            raise MergeIncompatible(
+                "SketchStore.merge: cannot merge a store with itself")
+        if self.spec is not None or other.spec is not None:
+            check_spec_compatible(other.spec, self.spec,
+                                  what="SketchStore.merge")
+        if other.d != self.d:
+            raise MergeIncompatible(
+                f"SketchStore.merge: sketch dim mismatch "
+                f"(d={self.d} vs d={other.d})")
+        if other._size == 0:
+            # empty input: validated no-op (no version bump — nothing a
+            # layout or cache could observe has changed)
+            self._next_id = max(self._next_id, other._next_id)
+            return self
+        check_id_disjoint(self._ids[: self._size], other._ids[: other._size],
+                          what="SketchStore.merge")
+        with obs.span("store.merge", rows=other._size,
+                      alive=len(other)):
+            self._merge(other)
+        return self
+
+    def _merge(self, other: "SketchStore") -> None:
+        faultinject.crash_point(_CP_MERGE)
+        size_a, size_b = self._size, other._size
+        o_ids = other._ids[:size_b]
+        o_alive = other._alive[:size_b]
+        alive_ids = o_ids[o_alive]
+        if size_a == 0 or o_ids[0] > self._ids[size_a - 1]:
+            # append path: other's slots become this store's tail, through
+            # the same compiled append graph as `add`
+            kpad = pow2_bucket(size_b)
+            if size_a + kpad > self.capacity:
+                self._grow_to(pow2_bucket(size_a + kpad))
+            self._sk_buf, self._wt_buf = _append_rows(
+                self._sk_buf, self._wt_buf, other._sk_buf[:kpad],
+                jnp.int32(size_a))
+            if self._placement is not None:
+                self._sk_buf = self._place(self._sk_buf)
+                self._wt_buf = self._place(self._wt_buf)
+            sl = slice(size_a, size_a + size_b)
+            self._ids[sl] = o_ids
+            self._alive[sl] = o_alive
+            self._weights[sl] = other._weights[:size_b]
+            self._size += size_b
+            merged_slots = np.arange(size_a, size_a + size_b,
+                                     dtype=np.int64)[o_alive]
+        else:
+            # interleave path: merged slot order is the sorted-id merge of
+            # two already-sorted sequences; one gather from the
+            # concatenated buffers rebuilds the tail-to-tail layout
+            ids_cat = np.concatenate([self._ids[:size_a], o_ids])
+            order = np.argsort(ids_cat, kind="stable")
+            take = np.where(order < size_a, order,
+                            order - size_a + self.capacity)
+            n = size_a + size_b
+            cap = pow2_bucket(n)
+            sk = packing.padded_take(
+                jnp.concatenate([self._sk_buf, other._sk_buf], axis=0),
+                take)
+            wt = packing.padded_take(
+                jnp.concatenate([self._wt_buf, other._wt_buf]), take)
+            ids = np.zeros(cap, np.int64)
+            ids[:n] = ids_cat[order]
+            alive_cat = np.concatenate([self._alive[:size_a], o_alive])
+            alive = np.zeros(cap, bool)
+            alive[:n] = alive_cat[order]
+            w_cat = np.concatenate([self._weights[:size_a],
+                                    other._weights[:size_b]])
+            weights = np.zeros(cap, np.int64)
+            weights[:n] = w_cat[order]
+            self._sk_buf = self._place(sk)
+            self._wt_buf = self._place(wt)
+            self._ids, self._alive, self._weights = ids, alive, weights
+            self._size = n
+            self._epoch += 1  # slots renumbered: layouts rebuild, not sync
+            merged_slots = np.flatnonzero(
+                (order >= size_a) & alive_cat[order]).astype(np.int64)
+        self._n_alive += len(alive_ids)
+        # imported tombstones: dead on arrival here, but they advance the
+        # monotone removed counter so layout syncs refresh alive masks
+        self._n_removed_total += size_b - len(alive_ids)
+        self._next_id = max(self._next_id, other._next_id)
+        self._c_merges.inc()
+        self._bump()
+        self._notify("merge", alive_ids.copy(), merged_slots)
 
     # -- query-side views ---------------------------------------------------
 

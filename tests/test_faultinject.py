@@ -63,6 +63,7 @@ def test_registry_covers_every_durability_path():
     }
     assert "store.compact" in pts
     assert "shard.rebalance" in pts
+    assert "merge.combine" in pts
 
 
 def test_arm_fires_once_then_disarms():

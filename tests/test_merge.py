@@ -1,0 +1,371 @@
+"""The Mergeable contract: merge == sequential build, bit for bit.
+
+Everything in repro.index that holds derived state is Mergeable
+(repro.index.mergeable, DESIGN.md section 14): an associative,
+id-disjoint, spec-checked `merge(other)`.  These tests pin the property
+that makes the merge-tree bulk loader exact — however the rows were
+partitioned into shards and however the shard engines were folded
+together, the merged engine is bit-identical to one sequential build of
+the same rows: same store bits, same ids, same topk/radius answers, both
+metrics, and the identity survives post-merge adds / removes / compacts.
+The refusal paths (spec mismatch, id overlap, mid-migration) and the
+merge.combine crash row (kill mid-merge leaves BOTH inputs intact and
+re-runnable) are pinned here too.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from tests._hyp import given, st
+
+from repro.core.cabin import CabinParams
+from repro.data.pipeline import synthetic_documents
+from repro.index import (MergeIncompatible, QueryEngine, SketchStore,
+                         bulk_ingest, ingest_documents)
+from repro.runtime import faultinject
+
+N_DIMS = 500
+D = 256
+P = CabinParams.create(N_DIMS, D, seed=3)
+P_OTHER = CabinParams.create(N_DIMS, D, seed=11)
+
+
+def _rows(n, seed):
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, N_DIMS), np.int32)
+    for i in range(n):
+        density = int(rng.integers(10, 80))
+        idx = rng.choice(N_DIMS, size=density, replace=False)
+        x[i, idx] = rng.integers(1, 8, size=density)
+    return x
+
+
+def _sequential(x, metric="cham", **kw):
+    eng = QueryEngine(P, metric=metric, band_rows=16, **kw)
+    eng.add_dense(x)
+    return eng
+
+def _shard_engines(x, cuts, metric="cham", **kw):
+    """Split rows at `cuts` into per-shard engines whose id counters are
+    pre-offset the way merge_tree._worker_engine offsets them, so the
+    shard id ranges are disjoint and sequential-identical."""
+    parts = np.split(x, cuts)
+    engines = []
+    base = 0
+    for part in parts:
+        e = QueryEngine(P, metric=metric, band_rows=16, **kw)
+        e.spec = engines[0].spec if engines else e.spec
+        e.store.spec = e.spec
+        e.store._next_id = base
+        if len(part):
+            e.add_dense(part)
+        base += len(part)
+        engines.append(e)
+    return engines
+
+
+def _assert_same_answers(got, ref, queries):
+    dg, ig = got.topk(queries, k=5)
+    dr, ir = ref.topk(queries, k=5)
+    np.testing.assert_array_equal(ig, ir)
+    np.testing.assert_array_equal(dg, dr)
+    r = 0.25 if got.metric == "cham" else 60.0
+    for a, b in zip(got.radius(queries, r), ref.radius(queries, r)):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+
+
+def _assert_same_store(got, ref):
+    np.testing.assert_array_equal(got.ids(), ref.ids())
+    n_g, n_r = got.store.size, ref.store.size
+    np.testing.assert_array_equal(np.asarray(got.store.sk_buf[:n_g]),
+                                  np.asarray(ref.store.sk_buf[:n_r]))
+
+
+# ---------------------------------------------------------------------------
+# the property: merge == sequential, any shard split, any merge order
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**16))
+def test_merge_equals_sequential_any_partition(seed):
+    """Random k-way split, random fold order: the merged engine's store
+    and answers are bit-identical to one sequential build."""
+    rng = np.random.default_rng(seed)
+    metric = ("cham", "hamming")[seed % 2]
+    n = int(rng.integers(12, 48))
+    x = _rows(n, seed)
+    k = int(rng.integers(2, 6))
+    cuts = np.sort(rng.choice(np.arange(1, n), size=k - 1, replace=False))
+    engines = _shard_engines(x, cuts, metric=metric)
+    # fold in a random order — merges are associative and id-disjointness
+    # is order-independent, so ANY order must land on the same bits (out-
+    # of-order folds just take the interleave path instead of the append
+    # fast path)
+    order = rng.permutation(len(engines))
+    acc = engines[order[0]]
+    for j in order[1:]:
+        acc = acc.merge(engines[j])
+    ref = _sequential(x, metric=metric)
+    _assert_same_store(acc, ref)
+    _assert_same_answers(acc, ref, x[:4])
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_merge_survives_post_merge_mutations(metric):
+    """add / remove / compact AFTER a merge behave exactly as on a
+    sequentially built engine — the merged store is a first-class store,
+    not a frozen union."""
+    x = _rows(40, seed=5)
+    a, b = _shard_engines(x, [23], metric=metric)
+    a.merge(b)
+    ref = _sequential(x, metric=metric)
+    for eng in (a, ref):
+        eng.remove(np.array([3, 17, 29]))
+        eng.add_dense(_rows(6, seed=9))
+        eng.compact()
+        eng.add_dense(_rows(3, seed=12))
+    _assert_same_store(a, ref)
+    _assert_same_answers(a, ref, x[:4])
+
+
+def test_interleaved_merge_takes_gather_path_exactly():
+    """Folding out of id order (0+2 then +1) hits the interleave path
+    (epoch bump) yet still lands bit-identical; in-order folding rides
+    the append fast path with NO epoch bump."""
+    x = _rows(30, seed=7)
+    e0, e1, e2 = _shard_engines(x, [10, 20])
+    epoch0 = e0.store.epoch
+    e0.merge(e2)                      # gap: ids 20..29 after 0..9
+    assert e0.store.epoch == epoch0   # still append fast path (ascending)
+    e0.merge(e1)                      # 10..19 interleave into the middle
+    assert e0.store.epoch == epoch0 + 1
+    ref = _sequential(x)
+    _assert_same_store(e0, ref)
+    _assert_same_answers(e0, ref, x[:4])
+
+    f0, f1, f2 = _shard_engines(x, [10, 20])
+    f0.merge(f1).merge(f2)            # in order: fast path throughout
+    assert f0.store.epoch == epoch0
+    _assert_same_store(f0, ref)
+
+
+def test_merge_empty_other_is_validated_noop():
+    x = _rows(8, seed=1)
+    a, b = _shard_engines(x, [8])     # b holds zero rows
+    v = a.store.version
+    a.merge(b)
+    assert a.store.version == v       # nothing observable changed
+    assert len(a) == 8
+    assert a.store._next_id == 8      # but the watermark propagated
+
+
+def test_sharded_engine_merge_parity():
+    """A 3-shard engine absorbing a merge answers bit-identically to the
+    unsharded sequential build — merged rows route by id % n_shards like
+    any other add."""
+    x = _rows(36, seed=21)
+    a, b = _shard_engines(x, [20])
+    a.shard(n_shards=3)
+    a.topk(x[:2], k=3)                # force a sharded layout build
+    a.merge(b)
+    ref = _sequential(x)
+    _assert_same_answers(a, ref, x[:4])
+
+
+def test_partitionset_absorbs_append_merge_as_delta():
+    """An in-id-order merge is an append (no epoch bump), so the serving
+    layout absorbs it as a shard-routed DELTA: the base partition object
+    survives, no rebuild."""
+    x = _rows(32, seed=13)
+    a, b = _shard_engines(x, [24], merge_ratio=None)
+    a.topk(x[:2], k=3)                # build the layout
+    base_before = a._tiered._groups[0].base
+    a.merge(b)
+    a.topk(x[:2], k=3)                # sync absorbs the tail
+    assert a._tiered._groups[0].base is base_before
+    assert a._tiered._groups[0].delta.n_rows == 8
+    _assert_same_answers(a, _sequential(x, merge_ratio=None), x[:4])
+
+
+# ---------------------------------------------------------------------------
+# bulk_ingest: the merge tree vs one sequential ingest
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", ["cham", "hamming"])
+def test_bulk_ingest_bit_identical_to_sequential(metric):
+    docs = list(itertools.islice(
+        synthetic_documents(N_DIMS, seed=17, mean_len=64), 40))
+    seq = QueryEngine(P, metric=metric, band_rows=16)
+    ids_seq = ingest_documents(seq, docs, window=16)
+    par = QueryEngine(P, metric=metric, band_rows=16)
+    shards = [docs[:7], docs[7:19], docs[19:26], docs[26:]]
+    ids_par = bulk_ingest(par, shards, workers=4, window=16)
+    np.testing.assert_array_equal(ids_par, ids_seq)
+    _assert_same_store(par, seq)
+    _assert_same_answers(par, seq, _rows(4, seed=2))
+    # the watermark is correct: post-bulk trickle ingest keeps assigning
+    # the exact ids the sequential engine would
+    more = list(itertools.islice(
+        synthetic_documents(N_DIMS, seed=23, mean_len=64), 6))
+    np.testing.assert_array_equal(ingest_documents(par, more, window=16),
+                                  ingest_documents(seq, more, window=16))
+    _assert_same_store(par, seq)
+
+
+def test_bulk_ingest_empty_shards_typed_fast_path():
+    eng = QueryEngine(P)
+    out = bulk_ingest(eng, [[], []], workers=2)
+    assert out.dtype == np.int64 and out.shape == (0,)
+    assert len(eng) == 0
+
+
+def test_ingest_empty_stream_no_device_work(monkeypatch):
+    """An empty document stream returns a well-typed empty id array
+    without touching the device: sketching is monkeypatched to explode,
+    and the fast path must never reach it."""
+    eng = QueryEngine(P)
+    def boom(*a, **k):
+        raise AssertionError("empty ingest must not sketch")
+    monkeypatch.setattr(eng, "_sketch", boom)
+    monkeypatch.setattr(eng, "add_sparse", boom)
+    out = ingest_documents(eng, [], window=16)
+    assert out.dtype == np.int64 and out.shape == (0,)
+    out = ingest_documents(eng, iter([]), dedup_threshold=0.5)
+    assert out.dtype == np.int64 and out.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# refusal paths: wrong spec, overlapping ids, migration in flight
+# ---------------------------------------------------------------------------
+
+
+def test_add_packed_rejects_spec_mismatch():
+    """A packed batch sketched under the wrong spec (different hash
+    seeds) is refused with BOTH specs named — the silent-garbage path
+    (same width, different hashes) is exactly the one that must fail
+    loudly."""
+    a = QueryEngine(P)
+    b = QueryEngine(P_OTHER)
+    a.add_dense(_rows(4, seed=1))
+    b.add_dense(_rows(2, seed=2))
+    sk = np.asarray(b.store.sk_buf[:2])
+    with pytest.raises(MergeIncompatible) as ei:
+        a.store.add_packed(sk, b.spec)
+    msg = str(ei.value)
+    assert f"psi_seed={P.psi_seed}" in msg
+    assert f"psi_seed={P_OTHER.psi_seed}" in msg
+    # the legacy spec-less call still works (caller vouches for the bits)
+    n = len(a)
+    a.store.add_packed(sk, None)
+    assert len(a.store) == n + 2
+
+
+def test_store_add_rejects_wrong_width_naming_spec():
+    store = SketchStore(d=D)
+    store.spec = QueryEngine(P).spec
+    with pytest.raises(ValueError, match=r"d=256"):
+        store.add(np.zeros((2, (D // 2) // 32), np.uint32))
+
+
+def test_merge_rejects_spec_mismatch_naming_both():
+    a = QueryEngine(P)
+    b = QueryEngine(P_OTHER)
+    a.add_dense(_rows(3, seed=1))
+    b.store._next_id = 100
+    b.add_dense(_rows(3, seed=2))
+    with pytest.raises(MergeIncompatible) as ei:
+        a.merge(b)
+    msg = str(ei.value)
+    assert f"psi_seed={P.psi_seed}" in msg
+    assert f"psi_seed={P_OTHER.psi_seed}" in msg
+    assert "migrate" in msg          # the fix is named, not just the fault
+    assert len(a) == 3 and len(b) == 3
+
+
+def test_merge_rejects_overlapping_ids():
+    x = _rows(10, seed=3)
+    a = _sequential(x[:6])
+    b = _sequential(x[4:])           # ids 0..5 both sides: overlap {0..5}
+    with pytest.raises(MergeIncompatible, match="id-disjoint"):
+        a.store.merge(b.store)
+    assert len(a) == 6 and len(b) == 6
+
+
+def test_merge_refuses_mid_migration():
+    x = _rows(12, seed=4)
+    a, b = _shard_engines(x, [8])
+    a.migrate(d=2 * D, drive="manual")
+    with pytest.raises(RuntimeError, match="migration"):
+        a.merge(b)
+    with pytest.raises(RuntimeError, match="migration"):
+        bulk_ingest(a, [[np.arange(5)]])
+    a.migrate_all()
+    # drained — but `a` now lives under the NEW spec, so the cross-spec
+    # merge fails loudly through the same compatibility rail, naming the
+    # migrate fix
+    with pytest.raises(MergeIncompatible, match="migrate"):
+        a.merge(b)
+
+
+def test_merge_self_refuses():
+    a = _sequential(_rows(3, seed=1))
+    with pytest.raises(MergeIncompatible, match="itself"):
+        a.merge(a)
+
+
+# ---------------------------------------------------------------------------
+# ClusterIndex: merged membership refits to the sequential clustering
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_merge_equals_sequential_refit():
+    x = _rows(48, seed=31)
+    a, b = _shard_engines(x, [30])
+    ca = a.cluster(4, seed=2)
+    cb = b.cluster(4, seed=2)
+    ca.merge(cb)
+    ref = _sequential(x).cluster(4, seed=2)
+    np.testing.assert_array_equal(ca.counts, ref.counts)
+    np.testing.assert_array_equal(ca.centers, ref.centers)
+    ids_a, lab_a = ca.labels()
+    ids_r, lab_r = ref.labels()
+    np.testing.assert_array_equal(ids_a, ids_r)
+    np.testing.assert_array_equal(lab_a, lab_r)
+    # weights fold as sums through the merge event
+    np.testing.assert_array_equal(ca.weights, ref.weights)
+
+
+def test_cluster_merge_rejects_config_mismatch():
+    x = _rows(20, seed=31)
+    a, b = _shard_engines(x, [12])
+    with pytest.raises(MergeIncompatible, match="k/seed/n_iter"):
+        a.cluster(4, seed=2).merge(b.cluster(5, seed=2))
+
+
+# ---------------------------------------------------------------------------
+# crash row: kill mid-merge, both inputs intact and re-runnable
+# ---------------------------------------------------------------------------
+
+
+def test_merge_crash_leaves_both_inputs_intact():
+    """The merge.combine crash point fires after validation, before ANY
+    mutation: a kill there leaves both stores exactly as they were, and
+    simply re-running the merge lands on the never-killed bits."""
+    assert "merge.combine" in faultinject.registered_points()
+    x = _rows(24, seed=41)
+    a, b = _shard_engines(x, [15])
+    va, vb = a.store.version, b.store.version
+    ids_a, ids_b = a.ids().copy(), b.ids().copy()
+    with faultinject.armed("merge.combine"):
+        with pytest.raises(faultinject.InjectedCrash):
+            a.merge(b)
+    assert a.store.version == va and b.store.version == vb
+    np.testing.assert_array_equal(a.ids(), ids_a)
+    np.testing.assert_array_equal(b.ids(), ids_b)
+    a.merge(b)                       # re-run: nothing was half-applied
+    ref = _sequential(x)
+    _assert_same_store(a, ref)
+    _assert_same_answers(a, ref, x[:4])
